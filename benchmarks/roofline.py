@@ -1,0 +1,94 @@
+"""Roofline table generator: reads the dry-run JSONL (produced by
+``python -m repro.launch.dryrun --out results/dryrun.jsonl``) and prints the
+per-cell three-term roofline with the dominant bottleneck.
+
+Run the dry-run first; this module only formats/derives. `--markdown` emits
+the EXPERIMENTS.md table.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Tuple
+
+Row = Tuple[str, float, str]
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "dryrun.jsonl")
+
+
+def load(path: str = DEFAULT_PATH) -> List[Dict]:
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    seen = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            key = (r.get("arch"), r.get("shape"), r.get("multi_pod"))
+            seen[key] = r              # keep the latest rerun of a cell
+    return list(seen.values())
+
+
+def roofline_rows(path: str = DEFAULT_PATH) -> List[Row]:
+    rows: List[Row] = []
+    for r in load(path):
+        tag = f"roofline/{r['arch']}/{r['shape']}/" \
+              f"{'pod2' if r.get('multi_pod') else 'pod1'}"
+        if r.get("skipped"):
+            rows.append((tag, 0.0, f"skipped:{r['reason']}"))
+            continue
+        if "error" in r:
+            rows.append((tag, 0.0, f"error:{r['error'][:80]}"))
+            continue
+        t = r["terms"]
+        step_us = max(t.values()) * 1e6
+        rows.append((tag, step_us,
+                     f"compute={t['compute_s']:.3f}s,"
+                     f"memory={t['memory_s']:.3f}s,"
+                     f"collective={t['collective_s']:.3f}s,"
+                     f"bottleneck={r['bottleneck'].replace('_s', '')},"
+                     f"useful={r['useful_flops_ratio']:.2f},"
+                     f"peak_gb={r['mem']['peak_gb']:.1f}"))
+    return rows
+
+
+def markdown_table(path: str = DEFAULT_PATH, multi_pod: bool = False) -> str:
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "bottleneck | useful flops | peak GB/chip | MFU bound |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(load(path), key=lambda x: (x["arch"], x["shape"])):
+        if r.get("multi_pod", False) != multi_pod:
+            continue
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped: {r['reason']} | — | — | — |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"ERROR | — | — | — |")
+            continue
+        t = r["terms"]
+        total = max(sum(t.values()), 1e-12)
+        mfu = (r["model_flops_total"] / r["chips"] / 197e12) / total
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3f} | "
+            f"{t['memory_s']:.3f} | {t['collective_s']:.3f} | "
+            f"{r['bottleneck'].replace('_s', '')} | "
+            f"{r['useful_flops_ratio']:.2f} | "
+            f"{r['mem']['peak_gb']:.1f} | {mfu:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default=DEFAULT_PATH)
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    if args.markdown:
+        print(markdown_table(args.path, args.multi_pod))
+    else:
+        for name, us, derived in roofline_rows(args.path):
+            print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,34 @@
+"""Benchmark harness: one function per paper table/figure + kernel micro +
+roofline. Prints ``name,us_per_call,derived`` CSV.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [figure ...]
+(no args -> everything; roofline rows require results/dryrun.jsonl).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    # imports here so `-m benchmarks.run fig2` doesn't pay for jax
+    from benchmarks.paper_figures import ALL_FIGURES
+    from benchmarks.kernel_micro import kernel_micro
+    from benchmarks.roofline import roofline_rows
+
+    suites = dict(ALL_FIGURES)
+    suites["kernels"] = kernel_micro
+    suites["roofline"] = roofline_rows
+
+    wanted = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    for name in wanted:
+        if name not in suites:
+            print(f"# unknown suite {name!r}; known: {sorted(suites)}",
+                  file=sys.stderr)
+            continue
+        for row_name, us, derived in suites[name]():
+            print(f'{row_name},{us:.2f},"{derived}"', flush=True)
+
+
+if __name__ == "__main__":
+    main()

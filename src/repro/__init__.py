@@ -1,0 +1,2 @@
+"""repro: Asynchronous Memory Access Unit (AMU) as a JAX/TPU framework."""
+__version__ = "0.1.0"

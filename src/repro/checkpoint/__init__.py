@@ -1,0 +1,1 @@
+from repro.checkpoint.store import CheckpointStore

@@ -1,0 +1,8 @@
+"""The paper's contribution: AMI semantics, AMU engine, coroutine framework,
+software memory disambiguation, and the calibrated performance model."""
+from repro.core.coroutines import (Acquire, Aload, AloadNoWait, Astore,
+                                   AstoreNoWait, AwaitRid, Cost, CostModel,
+                                   Release, Scheduler, SpmRead, SpmWrite)
+from repro.core.disambiguation import CuckooAddressSet
+from repro.core.engine import AsyncMemoryEngine
+from repro.core.farmem import FarMemoryConfig, FarMemoryModel, InstantMemory

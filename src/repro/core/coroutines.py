@@ -1,0 +1,305 @@
+"""Coroutine programming framework (§5.2) with a timed runtime.
+
+Python generators stand in for the paper's C++20 coroutines. A task yields
+*commands*; the scheduler implements Figure 4's runtime loop:
+
+  1. a task yields :class:`Aload`/:class:`Astore` -> the engine issues the
+     request (the instruction retires immediately), the task suspends on the
+     returned ID;
+  2. the event loop executes ``getfin`` to fetch a completed ID;
+  3. the task waiting on that ID is resumed;
+  4. the task reads/writes the returned bytes in SPM with synchronous
+     :class:`SpmRead`/:class:`SpmWrite` (short, fixed latency — no misses).
+
+:class:`Acquire`/:class:`Release` wrap the software memory-disambiguation set
+(Listing 1): conflicting tasks suspend and are resumed in FIFO order when the
+owner releases the block.
+
+The scheduler keeps a cycle clock and instruction counter so AMU-mode
+execution times / IPC / MLP come out of *actually running* the workloads
+against the timed engine — this is what `benchmarks/fig8..fig10` drive.
+
+Cost model (instructions per operation; 6-wide issue, 3 GHz — Table 2):
+calibrated constants below; the DMA-mode ablation inflates the per-request
+cost exactly where the paper says external engines pay it (descriptor setup,
+doorbell, no speculative ID batching).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, Deque, Dict, Generator, Iterable, Optional
+
+from repro.core.disambiguation import CuckooAddressSet
+from repro.core.engine import AsyncMemoryEngine
+
+
+# ---------------------------------------------------------------------- cost
+@dataclass(frozen=True)
+class CostModel:
+    """Per-operation costs, calibrated against Table 4 (AMU ~= baseline at
+    0.1 us <=> ~250 core cycles per awaited memory op: coroutine frame
+    save/restore + scheduler bookkeeping + getfin loop + SPM (L2) latency)."""
+    issue_width: int = 6
+    ami_issue_insts: int = 8       # aload/astore + address generation + ID mv
+    getfin_insts: int = 8          # poll + dispatch branch
+    switch_insts: int = 40         # coroutine suspend+resume instructions
+    switch_stall_cycles: float = 100.0  # dependent-chain stalls per switch
+    spm_access_cycles: float = 15.0  # L2-latency SPM touch (Table 2)
+    spm_byte_cycles: float = 0.25  # per-byte SPM streaming cost (reads the
+                                   # DMA'd block out of L2 with dependent ops)
+    refill_cycles: float = 20.0    # ALSU<->ASMC list round trip (batched)
+    # software disambiguation (Listing 1): cuckoo probe + insert / remove +
+    # waiter wakeup. Cache-resident hash tables -> tens of cycles.
+    acquire_insts: int = 25
+    acquire_stall_cycles: float = 5.0
+    release_insts: int = 20
+    release_stall_cycles: float = 3.0
+    # DMA-mode extras (external-engine ablation: descriptor setup + MMIO
+    # doorbell over the NoC, non-speculative issue)
+    dma_descriptor_insts: int = 60
+    dma_serialize_cycles: float = 180.0
+
+    def insts_to_cycles(self, insts: float) -> float:
+        return insts / self.issue_width
+
+
+# ------------------------------------------------------------------ commands
+@dataclass(frozen=True)
+class Aload:
+    spm: int
+    mem: int
+    size: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class Astore:
+    spm: int
+    mem: int
+    size: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class AloadNoWait:
+    """Issue an aload and continue executing (returns the request ID to the
+    task immediately); pair with AwaitRid to suspend on completion later."""
+    spm: int
+    mem: int
+    size: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class AstoreNoWait:
+    spm: int
+    mem: int
+    size: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class AwaitRid:
+    rid: int
+
+
+@dataclass(frozen=True)
+class Acquire:     # software disambiguation: start_access
+    addr: int
+
+
+@dataclass(frozen=True)
+class Release:     # software disambiguation: end_access
+    addr: int
+
+
+@dataclass(frozen=True)
+class SpmWrite:
+    spm: int
+    data: bytes
+
+
+@dataclass(frozen=True)
+class SpmRead:
+    spm: int
+    size: int
+
+
+@dataclass(frozen=True)
+class Cost:        # plain compute between memory ops
+    insts: float = 0.0
+    cycles: float = 0.0
+
+
+Task = Generator  # yields commands, receives command results
+
+
+class DeadlockError(RuntimeError):
+    pass
+
+
+class Scheduler:
+    def __init__(self, engine: AsyncMemoryEngine,
+                 cost: CostModel = CostModel(),
+                 disambiguator: Optional[CuckooAddressSet] = None,
+                 dma_mode: bool = False):
+        self.engine = engine
+        self.cost = cost
+        self.disamb = disambiguator
+        self.dma_mode = dma_mode
+        self.t = 0.0                       # core clock, cycles
+        self.insts = 0.0                   # retired instructions
+        self.disamb_cycles = 0.0           # time inside start/end_access
+        self._ready: Deque[Task] = deque()
+        self._alloc_parked: Deque[tuple] = deque()  # (task, command)
+        self._results: Dict[int, object] = {}       # id(task) -> pending send
+        # request IDs recycle after getfin, so the scheduler tracks each issue
+        # with a unique token: rid -> token while in flight, and tasks wait
+        # on tokens.
+        self._tok = 0
+        self._rid_tok: Dict[int, int] = {}
+        self._waiting_tok: Dict[int, Task] = {}
+        self._unclaimed: set = set()                # completed tokens, no waiter
+        self._live = 0
+
+    # --------------------------------------------------------------- helpers
+    def _tick_insts(self, insts: float) -> None:
+        self.insts += insts
+        self.t += self.cost.insts_to_cycles(insts)
+
+    def _issue(self, task: Task, cmd) -> None:
+        """Execute an Aload/Astore[-NoWait] command for `task`."""
+        c = self.cost
+        self._tick_insts(c.ami_issue_insts)
+        if self.dma_mode:
+            self._tick_insts(c.dma_descriptor_insts)
+            self.t += c.dma_serialize_cycles
+        self.engine.advance(self.t)
+        refills = self.engine.stats["free_refills"]
+        if isinstance(cmd, (Aload, AloadNoWait)):
+            rid = self.engine.aload(cmd.spm, cmd.mem, cmd.size)
+        else:
+            rid = self.engine.astore(cmd.spm, cmd.mem, cmd.size)
+        if self.engine.stats["free_refills"] != refills:
+            self.t += c.refill_cycles      # batched ID fetch round trip
+        if rid == 0:
+            self._alloc_parked.append((task, cmd))  # queue full: retry later
+            return
+        self._tok += 1
+        self._rid_tok[rid] = self._tok
+        if isinstance(cmd, (AloadNoWait, AstoreNoWait)):
+            self._results[id(task)] = self._tok  # token back, keep running
+            self._ready.append(task)
+        else:
+            self._waiting_tok[self._tok] = task
+
+    def _run_task(self, task: Task, send_value=None) -> None:
+        """Resume `task`, process the command it yields (if not finished)."""
+        c = self.cost
+        try:
+            cmd = task.send(send_value)
+        except StopIteration:
+            self._live -= 1
+            return
+        if isinstance(cmd, (Aload, Astore, AloadNoWait, AstoreNoWait)):
+            self._issue(task, cmd)
+        elif isinstance(cmd, AwaitRid):
+            if cmd.rid in self._unclaimed:       # cmd.rid is the issue token
+                self._unclaimed.discard(cmd.rid)
+                self._ready.append(task)
+            else:
+                self._waiting_tok[cmd.rid] = task
+        elif isinstance(cmd, Cost):
+            self._tick_insts(cmd.insts)
+            self.t += cmd.cycles
+            self._ready.append(task)
+        elif isinstance(cmd, SpmWrite):
+            self.t += c.spm_access_cycles + c.spm_byte_cycles * len(cmd.data)
+            self._tick_insts(1 + len(cmd.data) // 8)
+            self.engine.spm_write(cmd.spm, cmd.data)
+            self._ready.append(task)
+        elif isinstance(cmd, SpmRead):
+            self.t += c.spm_access_cycles + c.spm_byte_cycles * cmd.size
+            self._tick_insts(1 + cmd.size // 8)
+            self._results[id(task)] = self.engine.spm_read(cmd.spm, cmd.size)
+            self._ready.append(task)
+        elif isinstance(cmd, Acquire):
+            assert self.disamb is not None, "no disambiguator configured"
+            t0 = self.t
+            self._tick_insts(c.acquire_insts)  # hash + probe (Listing 1 l.7)
+            self.t += c.acquire_stall_cycles
+            ok = self.disamb.start_access(cmd.addr, waiter=task)
+            self.disamb_cycles += self.t - t0
+            if ok:
+                self._ready.append(task)
+            # else: suspended; Release will requeue it
+        elif isinstance(cmd, Release):
+            assert self.disamb is not None
+            t0 = self.t
+            self._tick_insts(c.release_insts)
+            self.t += c.release_stall_cycles
+            waiter = self.disamb.end_access(cmd.addr)
+            self.disamb_cycles += self.t - t0
+            if waiter is not None:
+                self._ready.append(waiter)
+            self._ready.append(task)
+        else:
+            raise TypeError(f"unknown command {cmd!r}")
+
+    # ------------------------------------------------------------------ API
+    def spawn(self, task: Task) -> None:
+        self._live += 1
+        self._ready.append(task)
+
+    def run(self, tasks: Optional[Iterable[Task]] = None) -> dict:
+        """Drive all tasks to completion; returns timing/throughput stats."""
+        c = self.cost
+        for task in tasks or ():
+            self.spawn(task)
+        while self._live > 0:
+            # event loop: poll completions first (Fig 4 step 3)
+            if (self._waiting_tok or self._alloc_parked
+                    or self.engine.outstanding or self.engine.finished_pending):
+                self.engine.advance(self.t)
+                self._tick_insts(c.getfin_insts)
+                rid = self.engine.getfin()
+                if rid:
+                    tok = self._rid_tok.pop(rid)
+                    task = self._waiting_tok.pop(tok, None)
+                    if task is not None:
+                        self._tick_insts(c.switch_insts)  # resume the awaiter
+                        self.t += c.switch_stall_cycles
+                        self._ready.append(task)
+                    else:
+                        self._unclaimed.add(tok)
+                    # freed an ID: a parked task can retry its issue
+                    if self._alloc_parked:
+                        ptask, pcmd = self._alloc_parked.popleft()
+                        self._issue(ptask, pcmd)
+            if self._ready:
+                task = self._ready.popleft()
+                self._run_task(task, self._results.pop(id(task), None))
+            elif self._live > 0:
+                if not (self._waiting_tok or self._alloc_parked):
+                    raise DeadlockError("live tasks but none ready/waiting")
+                # nothing runnable: idle until the next completion
+                next_done = self.engine.next_completion_time
+                if next_done is None:
+                    if self.engine.finished_pending:
+                        continue               # drain via getfin next round
+                    raise DeadlockError(
+                        f"{len(self._waiting_tok)} waiting, "
+                        f"{len(self._alloc_parked)} parked, none outstanding")
+                self.t = max(self.t, next_done)
+                self.engine.advance(self.t)
+        return self.summary()
+
+    def summary(self) -> dict:
+        far = self.engine.far
+        return {
+            "cycles": self.t,
+            "insts": self.insts,
+            "ipc": self.insts / max(self.t, 1e-9),
+            "mlp": far.avg_mlp(self.t),
+            "requests": far.requests,
+            "bytes": far.bytes_moved,
+            "disamb_cycles": self.disamb_cycles,
+            "disamb_frac": self.disamb_cycles / max(self.t, 1e-9),
+        }

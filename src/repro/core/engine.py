@@ -1,0 +1,236 @@
+"""AsyncMemoryEngine — architectural semantics of AMI (Table 1) + AMU state.
+
+This is the host-side reference model of the paper's contribution:
+
+* ``aload(spm_addr, mem_addr)``  -> request ID (0 == allocation failure)
+* ``astore(spm_addr, mem_addr)`` -> request ID (0 == allocation failure)
+* ``getfin()``                   -> completed request ID (0 == none finished)
+* config registers: ``granularity``, ``queue_base``, ``queue_length``
+
+State mirrors the ASMC's three SPM-resident structures (§4.1): a **free list**,
+a **finished list**, and the **AMART** (request table indexed by ID). Data
+moves only between the SPM (a byte array standing in for the repurposed L2
+slice / TPU VMEM slot ring) and far memory; register<->SPM traffic uses
+:meth:`spm_read`/:meth:`spm_write` (the synchronous load/store half of the
+paper's split).
+
+The engine is *timed*: every request is scheduled on a
+:class:`~repro.core.farmem.FarMemoryModel` and completes when the driver
+advances the clock past its completion time. With :class:`InstantMemory` it
+degenerates to a functional oracle used by the kernel tests.
+
+ID batching (§4.2 metadata batching) is modeled: the ALSU-side list-vector
+register caches up to ``batch_ids`` free/finished IDs, so steady-state
+aload/getfin touch the (slower) ASMC lists only every ``batch_ids`` calls.
+``batch_ids=1`` reproduces the paper's **AMU (DMA-mode)** ablation.
+"""
+from __future__ import annotations
+
+import heapq
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import EngineConfig
+from repro.core.farmem import FarMemoryModel, InstantMemory
+
+AMART_ENTRY_BYTES = 16   # §3.2: SPM addr, mem addr, status, impl. bits
+LOAD, STORE = 0, 1
+
+
+@dataclass
+class Request:
+    rid: int
+    kind: int                 # LOAD | STORE
+    spm_addr: int
+    mem_addr: int
+    size: int
+    issue_time: float
+    done_time: float = 0.0
+    data: Optional[bytes] = None  # astore payload captured at issue
+
+
+class SpmOverflow(ValueError):
+    pass
+
+
+class AsyncMemoryEngine:
+    def __init__(self, config: EngineConfig,
+                 far_memory: Optional[FarMemoryModel] = None,
+                 backing: Optional[np.ndarray] = None):
+        self.config = config
+        self.far = far_memory or InstantMemory()
+        # far-memory backing store (uint8); tests pass real arrays here
+        self.mem = backing if backing is not None else np.zeros(1 << 20, np.uint8)
+        meta_bytes = config.queue_length * AMART_ENTRY_BYTES
+        if meta_bytes >= config.spm_bytes:
+            raise SpmOverflow(
+                f"queue_length={config.queue_length} needs {meta_bytes}B of "
+                f"metadata but SPM is {config.spm_bytes}B")
+        # data area = SPM minus the AMART/queue metadata area (queue_base..)
+        self.spm_data_bytes = config.spm_bytes - meta_bytes
+        self.spm = np.zeros(self.spm_data_bytes, np.uint8)
+        # ASMC-side lists (IDs are 1-based; 0 is the failure code)
+        self._free: Deque[int] = deque(range(1, config.queue_length + 1))
+        self._finished: Deque[int] = deque()
+        self.amart: Dict[int, Request] = {}
+        self._pending: List[Tuple[float, int]] = []  # (done_time, rid)
+        # ALSU list-vector registers (metadata batching caches)
+        self._free_cache: Deque[int] = deque()
+        self._fin_cache: Deque[int] = deque()
+        self.now = 0.0
+        # stats
+        self.stats = {"aload": 0, "astore": 0, "getfin": 0, "getfin_empty": 0,
+                      "alloc_fail": 0, "free_refills": 0, "fin_refills": 0}
+
+    # ------------------------------------------------------------------ time
+    def advance(self, now: float) -> None:
+        """Move the clock; retire far-memory completions into the finished list."""
+        self.now = max(self.now, now)
+        while self._pending and self._pending[0][0] <= self.now:
+            _, rid = heapq.heappop(self._pending)
+            req = self.amart[rid]
+            if req.kind == LOAD:
+                src = self.mem[req.mem_addr:req.mem_addr + req.size]
+                self.spm[req.spm_addr:req.spm_addr + req.size] = src
+            else:
+                self.mem[req.mem_addr:req.mem_addr + req.size] = np.frombuffer(
+                    req.data, np.uint8)
+            self._finished.append(rid)
+
+    def drain(self) -> None:
+        """Advance past every outstanding completion (functional mode helper)."""
+        while self._pending:
+            self.advance(self._pending[0][0])
+
+    @property
+    def outstanding(self) -> int:
+        return len(self._pending)
+
+    @property
+    def next_completion_time(self) -> Optional[float]:
+        return self._pending[0][0] if self._pending else None
+
+    @property
+    def finished_pending(self) -> int:
+        return len(self._finished) + len(self._fin_cache)
+
+    # ----------------------------------------------------------------- AMI
+    def _alloc_id(self) -> int:
+        if not self._free_cache:
+            if not self._free:
+                self.stats["alloc_fail"] += 1
+                return 0
+            # batch refill from the ASMC free list (one L2-latency round trip)
+            n = min(self.config.batch_ids, len(self._free))
+            self._free_cache.extend(self._free.popleft() for _ in range(n))
+            self.stats["free_refills"] += 1
+        return self._free_cache.popleft()
+
+    def _issue(self, kind: int, spm_addr: int, mem_addr: int,
+               size: Optional[int]) -> int:
+        size = size or self.config.granularity
+        if spm_addr + size > self.spm_data_bytes:
+            raise SpmOverflow(f"SPM access [{spm_addr}, {spm_addr+size}) "
+                              f"outside data area of {self.spm_data_bytes}B")
+        rid = self._alloc_id()
+        if rid == 0:
+            return 0
+        req = Request(rid, kind, spm_addr, mem_addr, size, self.now)
+        if kind == STORE:
+            req.data = self.spm[spm_addr:spm_addr + size].tobytes()
+        req.done_time = self.far.issue(self.now, size)
+        self.amart[rid] = req
+        heapq.heappush(self._pending, (req.done_time, rid))
+        self.stats["aload" if kind == LOAD else "astore"] += 1
+        return rid
+
+    def aload(self, spm_addr: int, mem_addr: int, size: Optional[int] = None) -> int:
+        """Far memory -> SPM. Returns request ID, 0 if ID allocation failed."""
+        return self._issue(LOAD, spm_addr, mem_addr, size)
+
+    def astore(self, spm_addr: int, mem_addr: int, size: Optional[int] = None) -> int:
+        """SPM -> far memory. Returns request ID, 0 if ID allocation failed."""
+        return self._issue(STORE, spm_addr, mem_addr, size)
+
+    def getfin(self) -> int:
+        """Return a completed request ID (0 if none). Frees the ID."""
+        self.advance(self.now)
+        self.stats["getfin"] += 1
+        if not self._fin_cache:
+            if not self._finished:
+                self.stats["getfin_empty"] += 1
+                return 0
+            n = min(self.config.batch_ids, len(self._finished))
+            self._fin_cache.extend(self._finished.popleft() for _ in range(n))
+            self.stats["fin_refills"] += 1
+        rid = self._fin_cache.popleft()
+        del self.amart[rid]
+        self._free.append(rid)  # ID returns to the ASMC free list
+        return rid
+
+    # -------------------------------------------- config registers (Table 1)
+    CFG_REGISTERS = ("granularity", "queue_base", "queue_length")
+
+    def cfgrr(self, reg: str) -> int:
+        """Read a configuration register into a 'GPR' (Table 1)."""
+        if reg == "granularity":
+            return self.config.granularity
+        if reg == "queue_base":
+            return self.spm_data_bytes        # metadata area starts past data
+        if reg == "queue_length":
+            return self.config.queue_length
+        raise KeyError(reg)
+
+    def cfgrw(self, reg: str, value: int) -> None:
+        """Write a configuration register. `queue_length` re-initializes the
+        metadata area (only legal with no requests outstanding — the paper's
+        software contract for reconfiguration)."""
+        import dataclasses
+        if reg == "granularity":
+            self.config = dataclasses.replace(self.config, granularity=value)
+            return
+        if reg == "queue_length":
+            if self.outstanding or self.finished_pending or self.amart:
+                raise RuntimeError("cannot resize queue with requests in flight")
+            meta = value * AMART_ENTRY_BYTES
+            if meta >= self.config.spm_bytes:
+                raise SpmOverflow("queue_length metadata exceeds SPM")
+            self.config = dataclasses.replace(self.config, queue_length=value)
+            self.spm_data_bytes = self.config.spm_bytes - meta
+            self.spm = self.spm[:self.spm_data_bytes].copy() if \
+                self.spm.size > self.spm_data_bytes else np.concatenate(
+                    [self.spm, np.zeros(self.spm_data_bytes - self.spm.size,
+                                        np.uint8)])
+            self._free = deque(range(1, value + 1))
+            self._free_cache.clear()
+            self._fin_cache.clear()
+            self._finished.clear()
+            return
+        raise KeyError(reg)
+
+    # ------------------------------------------------- synchronous SPM access
+    def spm_write(self, spm_addr: int, data: bytes) -> None:
+        arr = np.frombuffer(data, np.uint8)
+        if spm_addr + arr.size > self.spm_data_bytes:
+            raise SpmOverflow("spm_write outside data area")
+        self.spm[spm_addr:spm_addr + arr.size] = arr
+
+    def spm_read(self, spm_addr: int, size: int) -> bytes:
+        if spm_addr + size > self.spm_data_bytes:
+            raise SpmOverflow("spm_read outside data area")
+        return self.spm[spm_addr:spm_addr + size].tobytes()
+
+    # ----------------------------------------------------------- invariants
+    def check_invariants(self) -> None:
+        """ID conservation: every ID is in exactly one place."""
+        ids = (list(self._free) + list(self._free_cache) + list(self._fin_cache)
+               + list(self._finished) + [r for _, r in self._pending])
+        in_flight_fin = set(self._finished) | set(self._fin_cache)
+        pend = {r for _, r in self._pending}
+        assert len(ids) == self.config.queue_length, (
+            f"ID leak: {len(ids)} != {self.config.queue_length}")
+        assert len(set(ids)) == len(ids), "duplicate ID"
+        assert set(self.amart) == (pend | in_flight_fin), "AMART out of sync"

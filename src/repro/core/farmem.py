@@ -1,0 +1,118 @@
+"""Far-memory device model: latency + bandwidth + queueing.
+
+Models the paper's Figure 1/7 memory path: requests leave the core through a
+link with finite bandwidth and a base latency that ranges from 0.1 µs (fast
+CXL) to 5 µs (cross-switch disaggregated memory). Completion time for a
+request issued at `t` is::
+
+    t_done = max(t, link_free) + base_latency + size / bandwidth (+ jitter)
+
+where `link_free` enforces serialization of request injection on the link
+(packets inject back-to-back at `size / bandwidth` spacing), giving Little's
+law behaviour: sustained MLP on the device cannot exceed
+`bandwidth * latency / granularity`.
+
+The same model backs the functional engine (zero-latency mode), the
+cycle-approximate simulator, and the runtime's host-offload tier.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+GHZ = 1e9  # cycles are expressed at the simulated core clock (paper: 3 GHz)
+
+
+@dataclass
+class FarMemoryConfig:
+    base_latency_cycles: float = 3000.0   # 1 us at 3 GHz
+    bandwidth_bytes_per_cycle: float = 21.3  # ~64 GB/s CXL-ish at 3 GHz
+    jitter_frac: float = 0.0              # uniform +- fraction of base latency
+    max_inflight: int = 0                 # 0 -> unlimited (link BW still caps)
+    seed: int = 0
+
+    @classmethod
+    def from_latency_us(cls, lat_us: float, freq_ghz: float = 3.0,
+                        bandwidth_gbs: float = 64.0, **kw) -> "FarMemoryConfig":
+        return cls(base_latency_cycles=lat_us * 1e3 * freq_ghz,
+                   bandwidth_bytes_per_cycle=bandwidth_gbs / freq_ghz, **kw)
+
+
+class FarMemoryModel:
+    """Timed far-memory device. All times in core cycles (float)."""
+
+    def __init__(self, config: FarMemoryConfig):
+        self.config = config
+        self._link_free = 0.0
+        self._rng = np.random.default_rng(config.seed)
+        self._inflight: List[Tuple[float, int]] = []  # (done_time, token) heap
+        self._token = 0
+        # stats
+        self.requests = 0
+        self.bytes_moved = 0
+        self.mlp_area = 0.0      # integral of in-flight count over time
+        self._last_t = 0.0
+
+    # -- accounting ---------------------------------------------------------
+    def _integrate(self, now: float) -> None:
+        if now > self._last_t:
+            self.mlp_area += len(self._inflight) * (now - self._last_t)
+            self._last_t = now
+
+    def inflight_at(self, now: float) -> int:
+        while self._inflight and self._inflight[0][0] <= now:
+            self._integrate(self._inflight[0][0])
+            heapq.heappop(self._inflight)
+        return len(self._inflight)
+
+    def avg_mlp(self, total_time: float) -> float:
+        self.inflight_at(total_time)
+        self._integrate(total_time)
+        return self.mlp_area / max(total_time, 1e-9)
+
+    # -- request path -------------------------------------------------------
+    def issue(self, now: float, size_bytes: int) -> float:
+        """Issue a request at `now`; returns absolute completion time."""
+        cfg = self.config
+        self.inflight_at(now)
+        self._integrate(now)
+        inject_at = max(now, self._link_free)
+        if cfg.max_inflight and len(self._inflight) >= cfg.max_inflight:
+            # device-side queue full: wait for the oldest completion
+            oldest = self._inflight[0][0]
+            inject_at = max(inject_at, oldest)
+            self.inflight_at(inject_at)
+            self._integrate(inject_at)
+        serial = size_bytes / cfg.bandwidth_bytes_per_cycle
+        self._link_free = inject_at + serial
+        lat = cfg.base_latency_cycles
+        if cfg.jitter_frac:
+            lat *= 1.0 + cfg.jitter_frac * float(self._rng.uniform(-1.0, 1.0))
+        done = inject_at + serial + lat
+        self._token += 1
+        heapq.heappush(self._inflight, (done, self._token))
+        self.requests += 1
+        self.bytes_moved += size_bytes
+        return done
+
+    def reset_stats(self) -> None:
+        self.requests = 0
+        self.bytes_moved = 0
+        self.mlp_area = 0.0
+        self._last_t = 0.0
+
+
+class InstantMemory(FarMemoryModel):
+    """Zero-latency functional mode (used when the engine is an oracle)."""
+
+    def __init__(self) -> None:
+        super().__init__(FarMemoryConfig(base_latency_cycles=0.0,
+                                         bandwidth_bytes_per_cycle=float("inf")))
+
+    def issue(self, now: float, size_bytes: int) -> float:
+        self.requests += 1
+        self.bytes_moved += size_bytes
+        return now

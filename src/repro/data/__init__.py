@@ -1,0 +1,1 @@
+from repro.data.pipeline import PrefetchingLoader, input_specs, synthetic_batch

@@ -1,0 +1,139 @@
+"""Data substrate: deterministic synthetic token pipeline with asynchronous
+host-side prefetch — the runtime-level instance of the paper's pattern
+(issue the next batch's "aload" while the step computes).
+
+`input_specs` is the dry-run contract: jax.ShapeDtypeStruct stand-ins for
+every model input of an (arch x shape) cell, shardable and allocation-free.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (KIND_DECODE, KIND_PREFILL, KIND_TRAIN,
+                                ModelConfig, ShapeConfig)
+
+
+# ------------------------------------------------------------- dry-run specs
+def input_specs(model: ModelConfig, shape: ShapeConfig,
+                sharding_fn=None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct for every model input (no allocation).
+
+    sharding_fn(logical_name) -> Sharding | None attaches shardings for the
+    dry-run lowering.
+    """
+    B, S = shape.global_batch, shape.seq_len
+
+    def sds(shp, dtype, name):
+        sh = sharding_fn(name) if sharding_fn else None
+        return jax.ShapeDtypeStruct(shp, dtype, sharding=sh)
+
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == KIND_TRAIN:
+        if model.frontend is not None and model.frontend.kind == "audio":
+            specs["features"] = sds((B, S, model.frontend.feature_dim),
+                                    jnp.bfloat16, "activations")
+        else:
+            specs["tokens"] = sds((B, S), jnp.int32, "tokens")
+        specs["labels"] = sds((B, S), jnp.int32, "tokens")
+        if model.frontend is not None and model.frontend.kind == "vision":
+            specs["vision_embeds"] = sds(
+                (B, model.frontend.prefix_len, model.frontend.feature_dim),
+                jnp.bfloat16, "activations")
+    elif shape.kind == KIND_PREFILL:
+        if model.frontend is not None and model.frontend.kind == "audio":
+            specs["features"] = sds((B, S, model.frontend.feature_dim),
+                                    jnp.bfloat16, "activations")
+        else:
+            specs["tokens"] = sds((B, S), jnp.int32, "tokens")
+        if model.frontend is not None and model.frontend.kind == "vision":
+            specs["vision_embeds"] = sds(
+                (B, model.frontend.prefix_len, model.frontend.feature_dim),
+                jnp.bfloat16, "activations")
+    else:  # decode: one new token per sequence; the KV/state cache rides
+        specs["tokens"] = sds((B, 1), jnp.int32, "tokens")
+    return specs
+
+
+# ------------------------------------------------------- synthetic batches
+def synthetic_batch(model: ModelConfig, shape: ShapeConfig, step: int,
+                    seed: int = 0,
+                    batch_override: Optional[int] = None) -> Dict[str, Any]:
+    """Deterministic batch for (step, seed) — restart-safe: a resumed run
+    sees exactly the data it would have seen."""
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
+    batch: Dict[str, Any] = {}
+    if shape.kind == KIND_DECODE:
+        batch["tokens"] = rng.integers(0, model.vocab_size, (B, 1),
+                                       dtype=np.int32)
+        return batch
+    if model.frontend is not None and model.frontend.kind == "audio":
+        batch["features"] = rng.standard_normal(
+            (B, S, model.frontend.feature_dim)).astype(np.float32)
+    else:
+        batch["tokens"] = rng.integers(0, model.vocab_size, (B, S),
+                                       dtype=np.int32)
+    if shape.kind == KIND_TRAIN:
+        batch["labels"] = rng.integers(0, model.vocab_size, (B, S),
+                                       dtype=np.int32)
+    if model.frontend is not None and model.frontend.kind == "vision":
+        batch["vision_embeds"] = rng.standard_normal(
+            (B, model.frontend.prefix_len,
+             model.frontend.feature_dim)).astype(np.float32)
+    return batch
+
+
+class PrefetchingLoader:
+    """Asynchronous host prefetch: a producer thread keeps `depth` batches
+    ready (device_put'ed when a sharding is given) while the train step runs.
+    This is `aload` at the pipeline level: issue ahead, consume on demand."""
+
+    def __init__(self, model: ModelConfig, shape: ShapeConfig, seed: int = 0,
+                 depth: int = 2, start_step: int = 0, sharding=None,
+                 batch_override: Optional[int] = None):
+        self.model, self.shape, self.seed = model, shape, seed
+        self.sharding = sharding
+        self.batch_override = batch_override
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._produce, daemon=True)
+        self._thread.start()
+
+    def _produce(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = synthetic_batch(self.model, self.shape, step, self.seed,
+                                    self.batch_override)
+            if self.sharding is not None:
+                batch = {k: jax.device_put(v, self.sharding.get(k))
+                         for k, v in batch.items()}
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the AMU mechanism's compute hot-spots.
+
+Each kernel module pairs with a pure-jnp oracle in ref.py; ops.py holds the
+jit'd public wrappers. Validated with interpret=True on CPU; TPU is the
+target (pl.pallas_call + BlockSpec VMEM tiling + explicit async DMA).
+"""
+from repro.kernels import ops, ref

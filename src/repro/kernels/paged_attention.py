@@ -1,0 +1,102 @@
+"""paged_attention — single-token decode attention with KV pages streamed
+from HBM ("far memory") through the VMEM pipeline.
+
+This is the serving-side AMU: at decode, the KV cache (32k-512k tokens) is
+far memory touched once per token — no reuse, pure latency/bandwidth. The
+kernel walks the cache page by page (page = `aload` granularity); the Pallas
+grid pipeline keeps multiple page DMAs in flight while the MXU consumes the
+previous page (issue/complete decoupling). Pages past the sequence length
+are skipped via the scalar-prefetched `lengths`.
+
+Layout: q is grouped by KV head (GQA): [B, Hkv, G, D] so one grid step
+computes a whole query group against its single KV head page.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, page: int, scale: float):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+    np_ = pl.num_programs(2)
+    seq_len = len_ref[b]
+
+    @pl.when(pi == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    start = pi * page
+
+    @pl.when(start < seq_len)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32)            # [G, D]
+        k = k_ref[0, :, 0].astype(jnp.float32)         # [page, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        logits = (q @ k.T) * scale                     # [G, page]
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        logits = jnp.where(pos < seq_len, logits, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, -1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(pi == np_ - 1)
+    def _():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("page", "interpret"))
+def paged_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                    v_cache: jnp.ndarray, lengths: jnp.ndarray,
+                    page: int = 512, interpret: bool = False) -> jnp.ndarray:
+    """q: [B, Hq, D]; k_cache/v_cache: [B, T, Hkv, D]; lengths: [B] ->
+    out [B, Hq, D]."""
+    B, Hq, D = q.shape
+    T, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    page = min(page, T)
+    assert T % page == 0, (T, page)
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Hkv, G, D)
+    grid = (B, Hkv, T // page)
+    kernel = functools.partial(_paged_kernel, page=page, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D), lambda b, h, pi, L: (b, h, 0, 0)),
+                pl.BlockSpec((1, page, 1, D),
+                             lambda b, h, pi, L: (b, pi, h, 0)),
+                pl.BlockSpec((1, page, 1, D),
+                             lambda b, h, pi, L: (b, pi, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, D),
+                                   lambda b, h, pi, L: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(lengths, qg, k_cache, v_cache)
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,4 @@
+# NOTE: dryrun is intentionally not imported here — it sets XLA_FLAGS at
+# import time and must be launched as its own process (python -m
+# repro.launch.dryrun).
+from repro.launch.mesh import make_debug_mesh, make_production_mesh

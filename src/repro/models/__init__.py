@@ -1,0 +1,1 @@
+from repro.models import blocks, frontends, lm, moe, rglru, rwkv6

@@ -1,0 +1,54 @@
+"""Modality frontend STUBS (per assignment: `[audio]`/`[vlm]` entries specify
+the transformer backbone only; the frontend provides precomputed frame/patch
+embeddings). Only the projection into d_model is a real parameter."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.blocks import _dense_init
+
+Params = Dict[str, Any]
+
+
+def init_frontend(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    assert cfg.frontend is not None
+    return {"proj": _dense_init(key, cfg.frontend.feature_dim, cfg.d_model,
+                                dtype)}
+
+
+def apply_vision_prefix(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                        vision_embeds: jnp.ndarray) -> jnp.ndarray:
+    """Overwrite the first `prefix_len` positions of the token-embedding
+    stream with projected patch embeddings. x: [B, S, d];
+    vision_embeds: [B, prefix_len, feature_dim]."""
+    vis = vision_embeds.astype(x.dtype) @ p["proj"]
+    n = cfg.frontend.prefix_len
+    return jnp.concatenate([vis[:, :n], x[:, n:]], axis=1)
+
+
+def apply_audio_features(cfg: ModelConfig, p: Params,
+                         features: jnp.ndarray) -> jnp.ndarray:
+    """Project precomputed frames into the model stream.
+    features: [B, S, feature_dim] -> [B, S, d]."""
+    return features @ p["proj"]
+
+
+def mrope_positions(cfg: ModelConfig, batch: int, seq: int,
+                    offset=0) -> jnp.ndarray:
+    """M-RoPE position ids [3, B, S] (Qwen2-VL). The image prefix uses a
+    2D (h, w) grid at temporal position 0; text continues all three streams
+    from the prefix. For pure text the three streams coincide.
+    `offset` is an int or a per-sequence [B] array (decode)."""
+    n = cfg.frontend.prefix_len if cfg.frontend else 0
+    side = max(1, int(n ** 0.5))
+    if isinstance(offset, int):
+        offset = jnp.full((batch,), offset, jnp.int32)
+    pos = jnp.arange(seq)[None, :] + offset[:, None]        # [B, S]
+    t_pos = jnp.where(pos < n, 0, pos - n + 1)
+    h_pos = jnp.where(pos < n, pos // side, pos - n + 1)
+    w_pos = jnp.where(pos < n, pos % side, pos - n + 1)
+    return jnp.stack([t_pos, h_pos, w_pos])                 # [3, B, S]

@@ -1,0 +1,237 @@
+"""Mixture-of-Experts FFN (kimi-k2: 384e top-8 + 1 shared; granite: 32e top-8).
+
+Two execution paths:
+
+* **dense-routing einsum** (default; used for dry-run lowering): every token
+  multiplies a [E, d, ff] stacked weight through a dispatch one-hot — the
+  compiled HLO keeps the expert dimension intact so expert-parallel sharding
+  (experts over the "model" axis, all-to-all dispatch) is visible to SPMD.
+* **gathered path** (`capacity` mode): tokens are sorted by expert and run
+  through per-expert matmuls at a capacity bound — this is what the AMU-style
+  async expert streaming optimizes (experts are "far"; only the active top-k
+  groups are fetched).
+
+The router adds the standard auxiliary load-balancing loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.blocks import _dense_init
+
+Params = Dict[str, Any]
+
+# Execution knobs (perf iterations mutate these)
+MOE_CONFIG = {"sharded": 0}   # 1 -> shard_map local-capacity dispatch
+
+
+def init_moe(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    m = cfg.moe
+    assert m is not None
+    d, ff, E = cfg.d_model, m.d_ff_expert, m.num_experts
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": _dense_init(ks[0], d, E, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, d, ff), jnp.float32)
+                   * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d, ff), jnp.float32)
+                 * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, ff, d), jnp.float32)
+                   / math.sqrt(ff)).astype(dtype),
+    }
+    if m.num_shared_experts:
+        ffs = ff * m.num_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {"w_gate": _dense_init(k1, d, ffs, dtype),
+                       "w_up": _dense_init(k2, d, ffs, dtype),
+                       "w_down": _dense_init(k3, ffs, d, dtype)}
+    return p
+
+
+def route(cfg: ModelConfig, p: Params,
+          x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Top-k routing. x: [T, d] -> (weights [T, k], experts [T, k], aux loss)."""
+    m = cfg.moe
+    logits = (x.astype(jnp.float32) @ p["router"])            # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, experts = jax.lax.top_k(probs, m.top_k)          # [T, k]
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    # aux loss: E * sum_e (fraction of tokens to e) * (mean router prob to e)
+    T = x.shape[0]
+    one_hot = jax.nn.one_hot(experts, m.num_experts, dtype=jnp.float32)
+    frac = jnp.sum(one_hot, axis=(0, 1)) / (T * m.top_k)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = m.num_experts * jnp.sum(frac * mean_prob)
+    return weights.astype(x.dtype), experts, aux
+
+
+def apply_moe_dense(cfg: ModelConfig, p: Params,
+                    x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dense-dispatch path. x: [B, S, d] -> ([B, S, d], aux_loss).
+
+    Dispatch/combine are einsums against a [T, k, E] one-hot; XLA SPMD turns
+    the expert dimension contraction into all-to-alls when experts are
+    sharded over the "model" axis.
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    xt = x.reshape(B * S, d)
+    weights, experts, aux = route(cfg, p, xt)
+    one_hot = jax.nn.one_hot(experts, m.num_experts, dtype=x.dtype)  # [T,k,E]
+    combine = jnp.einsum("tk,tke->te", weights, one_hot)             # [T,E]
+    # dispatch every token to its experts: [E, T, d] would be huge; instead
+    # contract tokens against experts blockwise: out = sum_e combine[t,e] *
+    # f_e(x_t). With capacity-less dense routing we compute f_e lazily via
+    # einsum over the stacked weights.
+    gate = jnp.einsum("td,edf->tef", xt, p["w_gate"])
+    up = jnp.einsum("td,edf->tef", xt, p["w_up"])
+    act = jax.nn.silu(gate) * up                                     # [T,E,ff]
+    act = act * combine[..., None]
+    out = jnp.einsum("tef,efd->td", act, p["w_down"])
+    if m.num_shared_experts:
+        sp = p["shared"]
+        out = out + (jax.nn.silu(xt @ sp["w_gate"])
+                     * (xt @ sp["w_up"])) @ sp["w_down"]
+    return out.reshape(B, S, d), aux
+
+
+def apply_moe_capacity(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Capacity-bounded gathered path: tokens sorted by expert, per-expert
+    matmuls at capacity C = ceil(T * k / E * capacity_factor). Overflowing
+    tokens are dropped (standard Switch-style), making FLOPs proportional to
+    *active* params — this is the path the async expert-streaming runtime
+    feeds one expert group at a time."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    weights, experts, aux = route(cfg, p, xt)
+    E, k = m.num_experts, m.top_k
+    C = max(1, int(math.ceil(T * k / E * m.capacity_factor)))
+    flat_e = experts.reshape(-1)                                  # [T*k]
+    flat_w = weights.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(T), k)
+    # position of each (token, expert) pair within its expert's queue
+    one_hot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)          # [T*k, E]
+    pos_in_e = jnp.cumsum(one_hot, axis=0) - 1
+    mypos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = mypos < C
+    slot = jnp.where(keep, flat_e * C + mypos, E * C)             # drop -> pad
+    # scatter tokens into [E*C+1, d] buffer
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[slot].set(xt[flat_tok])
+    grouped = buf[:E * C].reshape(E, C, d)
+    gate = jnp.einsum("ecd,edf->ecf", grouped, p["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", grouped, p["w_up"])
+    act = jax.nn.silu(gate) * up
+    eout = jnp.einsum("ecf,efd->ecd", act, p["w_down"]).reshape(E * C, d)
+    eout = jnp.concatenate([eout, jnp.zeros((1, d), x.dtype)], axis=0)
+    tok_out = eout[slot] * (flat_w * keep)[:, None]               # [T*k, d]
+    out = jnp.zeros((T, d), x.dtype).at[flat_tok].add(tok_out)
+    if m.num_shared_experts:
+        sp = p["shared"]
+        out = out + (jax.nn.silu(xt @ sp["w_gate"])
+                     * (xt @ sp["w_up"])) @ sp["w_down"]
+    return out.reshape(B, S, d), aux
+
+
+def apply_moe(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+              mode: str = "dense") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if mode == "capacity":
+        if MOE_CONFIG.get("sharded"):
+            return apply_moe_sharded(cfg, p, x)
+        return apply_moe_capacity(cfg, p, x)
+    return apply_moe_dense(cfg, p, x)
+
+
+def apply_moe_sharded(cfg: ModelConfig, p: Params, x: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Expert-parallel dispatch with LOCAL capacity via shard_map.
+
+    Tokens are batch-sharded over the data axes and replicated over "model";
+    experts are sharded over "model". Each device routes its local tokens,
+    dispatches only to its local expert group at a local capacity bound
+    (buffers scale with tokens/device, not global tokens), runs the expert
+    FFNs, and psums the partial combine over "model" — one all-reduce per
+    layer instead of global-capacity gather/scatter traffic.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.runtime import hints
+
+    mesh = hints.get_mesh()
+    m = cfg.moe
+    E = m.num_experts
+    msize = hints.axis_size("model")
+    if mesh is None or msize <= 1 or E % msize != 0:
+        return apply_moe_capacity(cfg, p, x)
+    dp = hints.batch_spec_axes()
+    E_local = E // msize
+
+    def local_fn(xl, router, wg, wu, wd, shared):
+        Bl, Sl, d = xl.shape
+        Tl = Bl * Sl
+        xt = xl.reshape(Tl, d)
+        logits = (xt.astype(jnp.float32) @ router)
+        probs = jax.nn.softmax(logits, axis=-1)
+        weights, experts = jax.lax.top_k(probs, m.top_k)
+        weights = (weights / jnp.sum(weights, -1, keepdims=True)
+                   ).astype(xl.dtype)
+        one_hot_all = jax.nn.one_hot(experts, E, dtype=jnp.float32)
+        frac = jnp.sum(one_hot_all, axis=(0, 1)) / (Tl * m.top_k)
+        aux = E * jnp.sum(frac * jnp.mean(probs, axis=0))
+        # local expert group
+        e0 = jax.lax.axis_index("model") * E_local
+        eloc = experts - e0                                    # [Tl, k]
+        mine = (eloc >= 0) & (eloc < E_local)
+        C = max(1, int(math.ceil(Tl * m.top_k / E * m.capacity_factor)))
+        flat_e = jnp.where(mine, eloc, E_local).reshape(-1)    # [Tl*k]
+        flat_w = (weights * mine).reshape(-1)
+        flat_tok = jnp.repeat(jnp.arange(Tl), m.top_k)
+        oh = jax.nn.one_hot(flat_e, E_local, dtype=jnp.int32)
+        mypos = jnp.take_along_axis(
+            jnp.cumsum(oh, axis=0) - 1,
+            jnp.minimum(flat_e, E_local - 1)[:, None], axis=1)[:, 0]
+        keep = (mypos < C) & (flat_e < E_local)
+        slot = jnp.where(keep, flat_e * C + mypos, E_local * C)
+        buf = jnp.zeros((E_local * C + 1, d), xl.dtype).at[slot].set(
+            xt[flat_tok])
+        grouped = buf[:E_local * C].reshape(E_local, C, d)
+        gate = jnp.einsum("ecd,edf->ecf", grouped, wg)
+        up = jnp.einsum("ecd,edf->ecf", grouped, wu)
+        act = jax.nn.silu(gate) * up
+        eout = jnp.einsum("ecf,efd->ecd", act, wd).reshape(E_local * C, d)
+        eout = jnp.concatenate([eout, jnp.zeros((1, d), xl.dtype)], axis=0)
+        tok_out = eout[slot] * (flat_w * keep)[:, None]
+        out = jnp.zeros((Tl, d), xl.dtype).at[flat_tok].add(tok_out)
+        if m.num_shared_experts:
+            # shared-expert hidden dim is sharded over "model", so its
+            # partial joins the expert partials in ONE psum
+            out = out + (jax.nn.silu(xt @ shared["w_gate"])
+                         * (xt @ shared["w_up"])) @ shared["w_down"]
+        out = jax.lax.psum(out, "model")
+        return out.reshape(Bl, Sl, d), aux
+
+    shared = p.get("shared", {"w_gate": jnp.zeros((cfg.d_model, msize),
+                                                  x.dtype)})
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    has_shared = m.num_shared_experts > 0
+    shared_specs = {"w_gate": P(None, "model"), "w_up": P(None, "model"),
+                    "w_down": P("model", None)} if has_shared else P(None,
+                                                                     None)
+    out, aux = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(dp_spec, None, None), P(None, None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None), shared_specs),
+        out_specs=(P(dp_spec, None, None), P()),
+        check_vma=False,
+    )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"],
+      p.get("shared", shared))
+    return out, aux

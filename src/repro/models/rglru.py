@@ -1,0 +1,134 @@
+"""RG-LRU recurrence (RecurrentGemma / Griffin) — real-gated linear recurrent
+unit with a preceding 1D conv, as in arXiv:2402.19427.
+
+    r_t = sigmoid(x_t W_r)                      (recurrence gate)
+    i_t = sigmoid(x_t W_i)                      (input gate)
+    a_t = a^(c * r_t)          a = sigmoid(Lambda), c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Implemented as an associative scan over the sequence (O(S log S) work,
+sub-quadratic memory) for train/prefill, and a single-step update for decode.
+The scan is linear in a diagonal state -> parallelizable with
+`jax.lax.associative_scan`, which is also how the chunked sequence-parallel
+path exchanges boundary states across shards.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.blocks import _dense_init
+from repro.runtime import hints
+
+Params = Dict[str, Any]
+
+_C = 8.0          # paper's fixed temperature on the recurrence gate
+_CONV_K = 4       # temporal conv width (Griffin block)
+
+
+def init_rglru(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a = sigmoid(Lambda) in [0.9, 0.999] (paper init)
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u / (1 - u))
+    return {
+        "w_x": _dense_init(ks[1], d, w, dtype),       # input projection
+        "w_y": _dense_init(ks[2], d, w, dtype),       # gate branch (GeGLU-ish)
+        "conv": (jax.random.normal(ks[3], (_CONV_K, w), jnp.float32)
+                 / math.sqrt(_CONV_K)).astype(dtype),
+        "w_r": _dense_init(ks[4], w, w, dtype),
+        "w_i": _dense_init(ks[5], w, w, dtype),
+        "lambda": lam.astype(jnp.float32),
+        "w_out": _dense_init(jax.random.fold_in(key, 7), w, d, dtype),
+    }
+
+
+def _gates(p: Params, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """a_t (log-space) and gated input. x: [..., w]."""
+    r = jax.nn.sigmoid((x @ p["w_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ p["w_i"]).astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(-p["lambda"])   # log sigmoid(Lambda)*c*r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-6)) \
+        * i * x.astype(jnp.float32)
+    return a, gated
+
+
+def _causal_conv(p: Params, x: jnp.ndarray,
+                 conv_state: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv over time. x: [B, S, w]."""
+    w = p["conv"]                                     # [K, w]
+    if conv_state is None:
+        conv_state = jnp.zeros(x.shape[:1] + (_CONV_K - 1, x.shape[-1]),
+                               x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)     # [B, S+K-1, w]
+    out = sum(xp[:, k:k + x.shape[1]] * w[k] for k in range(_CONV_K))
+    new_state = xp[:, -(_CONV_K - 1):]
+    return out, new_state
+
+
+def rglru_scan(p: Params, x: jnp.ndarray,
+               h0: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence recurrence via associative scan. x: [B, S, w] (post-conv).
+    Returns (h [B, S, w] float32, h_last [B, w])."""
+    a, gated = _gates(p, x)                          # [B, S, w] f32
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    if h0 is not None:
+        gated = gated.at[:, 0].add(a[:, 0] * h0)
+    a_s, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_step(p: Params, x_t: jnp.ndarray,
+               h_prev: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single decode step. x_t: [B, w] (post-conv), h_prev: [B, w] f32."""
+    a, gated = _gates(p, x_t)
+    h = a * h_prev + gated
+    return h, h
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int) -> Dict[str, jnp.ndarray]:
+    w = cfg.rnn_width or cfg.d_model
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, _CONV_K - 1, w), jnp.float32)}
+
+
+def apply_rglru(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                state: Optional[Dict[str, jnp.ndarray]] = None
+                ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Griffin recurrent block. x: [B, S, d] -> [B, S, d].
+
+    state None -> full-sequence scan (train/prefill, no state out unless
+    provided); state given -> stateful (prefill chunk or S==1 decode).
+    """
+    B, S, d = x.shape
+    u = x @ p["w_x"]                                  # [B, S, w]
+    gate = jax.nn.gelu(x @ p["w_y"])
+    dp = hints.batch_spec_axes()
+    u = hints.constrain(u, dp, None, "model")       # recurrence width-sharded
+    gate = hints.constrain(gate, dp, None, "model")
+    if state is None:
+        conv_in, _ = _causal_conv(p, u, None)
+        h, _ = rglru_scan(p, conv_in)
+        out = (h.astype(x.dtype) * gate) @ p["w_out"]
+        return out, None
+    conv_in, new_conv = _causal_conv(p, u, state["conv"].astype(u.dtype))
+    if S == 1:
+        h_t, h_new = rglru_step(p, conv_in[:, 0], state["h"])
+        h = h_t[:, None]
+    else:
+        h, h_new = rglru_scan(p, conv_in, h0=state["h"])
+    out = (h.astype(x.dtype) * gate) @ p["w_out"]
+    return out, {"h": h_new, "conv": new_conv.astype(jnp.float32)}

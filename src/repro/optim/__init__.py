@@ -1,0 +1,2 @@
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig

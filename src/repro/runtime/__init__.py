@@ -1,0 +1,3 @@
+# NOTE: submodules are imported directly (repro.runtime.steps etc.);
+# importing them here would create a models <-> runtime import cycle via
+# the sharding-hints module used inside model code.

@@ -1,0 +1,96 @@
+"""Tests for the roofline HLO analyzer and the sharding rules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.launch import hlo_analysis as ha
+from repro.models import lm
+from repro.runtime import sharding as shd
+
+
+def test_while_trip_weighting():
+    """A scan of 7 matmuls must count ~7x the flops of its body."""
+    w = jnp.ones((64, 64), jnp.float32)
+
+    def one(x):
+        return x @ w
+
+    def scanned(x):
+        def body(c, _):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+
+    x = jnp.ones((8, 64))
+    h1 = jax.jit(one).lower(x).compile().as_text()
+    h7 = jax.jit(scanned).lower(x).compile().as_text()
+    f1 = ha.analyze(h1).flops
+    f7 = ha.analyze(h7).flops
+    assert f1 > 0
+    assert 6.0 < f7 / f1 < 8.5, (f1, f7)
+
+
+def test_dot_flops_exact():
+    a = jnp.ones((32, 128), jnp.float32)
+    b = jnp.ones((128, 16), jnp.float32)
+    hlo = jax.jit(lambda a, b: a @ b).lower(a, b).compile().as_text()
+    counts = ha.analyze(hlo)
+    assert counts.flops == pytest.approx(2 * 32 * 128 * 16, rel=0.01)
+
+
+def test_shape_bytes_parsing():
+    assert ha._shape_bytes("bf16[4,128]{1,0}") == 4 * 128 * 2
+    assert ha._shape_bytes("(f32[8], s32[2,2])") == 8 * 4 + 4 * 4
+    assert ha._shape_bytes("pred[]") == 1
+
+
+# ---------------------------------------------------------- sharding rules
+@pytest.fixture(scope="module")
+def mesh8():
+    import os
+    if jax.device_count() < 8:
+        pytest.skip("needs --xla_force_host_platform_device_count>=8 "
+                    "(run via tests/test_system.py subprocess instead)")
+    return jax.make_mesh((4, 2), ("data", "model"))
+
+
+def test_param_specs_divisibility_safe():
+    """Every generated spec must divide the leaf shape on a (16,16) mesh —
+    checked structurally without building the mesh."""
+    import numpy as np
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    mesh = FakeMesh()
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get_config(arch)
+        shape = configs.TRAIN_4K
+        par = configs.default_parallel(cfg, shape)
+        params = jax.eval_shape(
+            lambda c=cfg: lm.init_model(c, jax.random.PRNGKey(0)))
+        flat, _ = jax.tree_util.tree_flatten_with_path(params)
+        for path, leaf in flat:
+            spec = shd.param_spec(cfg, par, mesh,
+                                  jax.tree_util.keystr(path), leaf)
+            for dim, entry in zip(leaf.shape, spec):
+                if entry is None:
+                    continue
+                names = (entry,) if isinstance(entry, str) else entry
+                size = int(np.prod([mesh.shape[n] for n in names]))
+                assert dim % size == 0, (arch, path, leaf.shape, spec)
+
+
+def test_moe_expert_spec():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    cfg = configs.get_config("kimi-k2-1t-a32b")
+    par = configs.default_parallel(cfg, configs.TRAIN_4K)
+    leaf = jax.ShapeDtypeStruct((61, 384, 7168, 2048), jnp.float32)
+    spec = shd.param_spec(cfg, par, FakeMesh(),
+                          "['scan'][0]['ffn']['w_gate']", leaf)
+    assert spec[1] == "model"          # experts over TP axis

@@ -1,0 +1,241 @@
+"""Engine/disambiguation invariants: unit + hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import EngineConfig
+from repro.core.coroutines import (Aload, AloadNoWait, Astore, AwaitRid, Cost,
+                                   Scheduler, SpmRead, SpmWrite)
+from repro.core.disambiguation import CuckooAddressSet
+from repro.core.engine import AsyncMemoryEngine, SpmOverflow
+from repro.core.farmem import FarMemoryConfig, FarMemoryModel
+
+
+def make_engine(queue_length=16, granularity=8, latency_us=1.0):
+    far = FarMemoryModel(FarMemoryConfig.from_latency_us(latency_us))
+    return AsyncMemoryEngine(
+        EngineConfig(queue_length=queue_length, granularity=granularity), far)
+
+
+# ----------------------------------------------------------------- ID pool
+def test_alloc_failure_returns_zero():
+    eng = make_engine(queue_length=4)
+    rids = [eng.aload(0, 0) for _ in range(5)]
+    assert all(r > 0 for r in rids[:4])
+    assert rids[4] == 0                       # Table 1: Rd=0 on alloc failure
+    eng.check_invariants()
+
+
+def test_getfin_zero_when_nothing_finished():
+    eng = make_engine()
+    assert eng.getfin() == 0                  # failure code
+    eng.aload(0, 0)
+    assert eng.getfin() == 0                  # not completed yet (t=0)
+    eng.drain()
+    assert eng.getfin() > 0
+
+
+def test_data_movement_roundtrip():
+    eng = make_engine()
+    eng.mem[100:108] = np.arange(8, dtype=np.uint8)
+    rid = eng.aload(0, 100, 8)
+    eng.drain()
+    assert eng.getfin() == rid
+    assert eng.spm_read(0, 8) == bytes(range(8))
+    eng.spm_write(8, bytes([9] * 8))
+    eng.astore(8, 200, 8)
+    eng.drain()
+    eng.getfin()
+    assert bytes(eng.mem[200:208]) == bytes([9] * 8)
+    eng.check_invariants()
+
+
+def test_spm_bounds_enforced():
+    eng = make_engine()
+    with pytest.raises(SpmOverflow):
+        eng.aload(eng.spm_data_bytes - 4, 0, 8)
+    with pytest.raises(SpmOverflow):
+        EngineConfig(queue_length=8192, spm_bytes=64 * 1024)          # meta > spm
+        AsyncMemoryEngine(EngineConfig(queue_length=8192,
+                                       spm_bytes=64 * 1024))
+
+
+@given(ops=st.lists(st.sampled_from(["aload", "astore", "getfin", "advance"]),
+                    min_size=1, max_size=200),
+       qlen=st.integers(2, 64))
+@settings(max_examples=50, deadline=None)
+def test_id_conservation_property(ops, qlen):
+    """Property: no sequence of AMI ops leaks or duplicates request IDs."""
+    eng = make_engine(queue_length=qlen)
+    t = 0.0
+    for op in ops:
+        if op == "aload":
+            eng.aload(0, 0)
+        elif op == "astore":
+            eng.astore(0, 8)
+        elif op == "getfin":
+            eng.getfin()
+        else:
+            t += 1500.0
+            eng.advance(t)
+        eng.check_invariants()
+    eng.drain()
+    while eng.getfin():
+        pass
+    eng.check_invariants()
+    assert len(eng._free) + len(eng._free_cache) == qlen
+
+
+# ------------------------------------------------------------ disambiguation
+def test_cuckoo_conflict_serialization():
+    d = CuckooAddressSet(slots_per_table=64)
+    assert d.start_access(0x1000, "a")
+    assert not d.start_access(0x1000, "b")        # same block conflicts
+    assert not d.start_access(0x1008, "c")        # same 64B line
+    assert d.start_access(0x2000, "d")            # different block fine
+    assert d.end_access(0x1000) == "b"            # FIFO handoff
+    assert d.end_access(0x1000) == "c"
+    assert d.end_access(0x1008) is None           # last holder clears
+    assert d.end_access(0x2000) is None
+    assert d.active_count() == 0
+
+
+@given(addrs=st.lists(st.integers(0, 1 << 20), min_size=1, max_size=300))
+@settings(max_examples=50, deadline=None)
+def test_cuckoo_acquire_release_property(addrs):
+    """Acquire/release in LIFO batches never loses waiters or entries."""
+    d = CuckooAddressSet(slots_per_table=16, num_tables=2)
+    acquired = []
+    waiting = 0
+    for i, a in enumerate(addrs):
+        if d.start_access(a, waiter=i):
+            acquired.append(a)
+        else:
+            waiting += 1
+    released_waiters = 0
+    # release everything; ownership transfers drain the waiter queues
+    while acquired:
+        a = acquired.pop()
+        w = d.end_access(a)
+        if w is not None:
+            released_waiters += 1
+            acquired.append(a)        # waiter now owns the block
+    assert released_waiters == waiting
+    assert d.active_count() == 0
+
+
+def test_cuckoo_overflow_spill():
+    d = CuckooAddressSet(slots_per_table=2, num_tables=2, block_bytes=64)
+    for i in range(64):
+        assert d.start_access(i * 64)
+    assert d.active_count() == 64          # spill keeps correctness
+    for i in range(64):
+        d.end_access(i * 64)
+    assert d.active_count() == 0
+
+
+# -------------------------------------------------------- scheduler behavior
+def test_scheduler_nowait_and_await():
+    eng = make_engine(queue_length=8)
+    eng.mem[:16] = np.arange(16, dtype=np.uint8)
+    got = {}
+
+    def task():
+        r1 = yield AloadNoWait(0, 0, 8)
+        r2 = yield AloadNoWait(8, 8, 8)
+        yield Cost(insts=10)
+        yield AwaitRid(r1)
+        yield AwaitRid(r2)
+        a = yield SpmRead(0, 8)
+        b = yield SpmRead(8, 8)
+        got["a"], got["b"] = a, b
+
+    Scheduler(eng).run([task()])
+    assert got["a"] == bytes(range(8))
+    assert got["b"] == bytes(range(8, 16))
+
+
+def test_scheduler_id_exhaustion_parks_and_recovers():
+    eng = make_engine(queue_length=2)
+
+    def task(c):
+        for i in range(4):
+            yield Aload(c * 8, 8 * i, 8)
+    s = Scheduler(eng)
+    s.run([task(c) for c in range(4)])     # 4 tasks x 4 loads, 2 IDs
+    eng.drain()
+    eng.check_invariants()
+    assert eng.stats["aload"] == 16
+    assert eng.stats["alloc_fail"] > 0     # exhaustion happened and recovered
+
+
+def test_mlp_scales_with_latency():
+    """Fig 9's core claim: AMU MLP rises with latency (more overlap)."""
+    def run(lat):
+        far = FarMemoryModel(FarMemoryConfig.from_latency_us(lat))
+        eng = AsyncMemoryEngine(EngineConfig(queue_length=256,
+                                             granularity=8), far)
+        def t(c):
+            for i in range(8):
+                yield Aload(c * 8, (c * 8 + i) % 1024 * 8, 8)
+        s = Scheduler(eng)
+        stats = s.run([t(c) for c in range(64)])
+        return stats["mlp"]
+    assert run(5.0) > run(0.5) > run(0.1) * 0.999
+
+
+def test_cfg_registers_table1():
+    """Table 1's cfgrr/cfgrw: granularity + queue_length reconfiguration."""
+    eng = make_engine(queue_length=8, granularity=64)
+    assert eng.cfgrr("granularity") == 64
+    eng.cfgrw("granularity", 8)
+    assert eng.cfgrr("granularity") == 8
+    eng.cfgrw("queue_length", 128)
+    assert eng.cfgrr("queue_length") == 128
+    rids = [eng.aload(0, 0) for _ in range(128)]
+    assert all(r > 0 for r in rids)
+    assert eng.aload(0, 0) == 0          # 129th fails
+    with pytest.raises(RuntimeError):
+        eng.cfgrw("queue_length", 4)     # resize with requests in flight
+    eng.drain()
+    while eng.getfin():
+        pass
+    eng.cfgrw("queue_length", 4)
+    eng.check_invariants()
+
+
+@given(seed=st.integers(0, 10_000), ncoro=st.integers(1, 24),
+       qlen=st.integers(4, 64))
+@settings(max_examples=25, deadline=None)
+def test_scheduler_random_gather_property(seed, ncoro, qlen):
+    """Property: any mix of awaited / no-wait loads across many coroutines
+    delivers exactly the right bytes to every SPM slot (IDs recycle, tokens
+    don't cross wires)."""
+    rng = np.random.default_rng(seed)
+    eng = make_engine(queue_length=qlen, latency_us=float(rng.uniform(0.1, 5)))
+    words = np.arange(256, dtype=np.uint64)
+    eng.mem[:2048] = words.view(np.uint8)
+    results = {}
+
+    def task(c, n_ops):
+        spm = c * 8
+        got = []
+        for i in range(n_ops):
+            src = int(rng.integers(0, 256))
+            if rng.random() < 0.5:
+                yield Aload(spm, src * 8, 8)
+            else:
+                tok = yield AloadNoWait(spm, src * 8, 8)
+                yield Cost(insts=int(rng.integers(1, 30)))
+                yield AwaitRid(tok)
+            data = yield SpmRead(spm, 8)
+            got.append((src, np.frombuffer(data, np.uint64)[0]))
+        results[c] = got
+
+    s = Scheduler(eng)
+    s.run([task(c, int(rng.integers(1, 12))) for c in range(ncoro)])
+    eng.drain()
+    eng.check_invariants()
+    for c, got in results.items():
+        for src, val in got:
+            assert val == src, (c, src, val)

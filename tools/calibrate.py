@@ -1,0 +1,33 @@
+"""Calibration harness: our model vs the paper's Table 4 / headline targets."""
+import sys
+import numpy as np
+sys.path.insert(0, "src")
+from repro.core import simulator as sim
+
+LATS = [0.1, 0.2, 0.5, 1.0, 2.0, 5.0]
+T4 = {
+    "GUPS":   {"base": [1.00, 1.38, 2.54, 4.40, 8.21, 19.83],
+               "amu":  [0.96, 0.96, 0.97, 0.98, 1.00, 1.03]},
+    "HJ":     {"base": [1.00, 1.41, 2.61, 4.59, 8.61, 20.70],
+               "amu":  [2.69, 2.67, 2.68, 2.71, 2.79, 3.08]},
+    "STREAM": {"base": [1.00, 1.28, 2.28, 4.00, 7.63, 18.66],
+               "amu":  [1.64, 1.67, 1.74, 1.87, 2.18, 3.33]},
+}
+
+def norm_curves(wl):
+    base = [sim.run(wl, "baseline", L)["us"] for L in LATS]
+    amu = [sim.run(wl, "amu", L, verify=False)["us"] for L in LATS]
+    b0 = base[0]
+    return [b/b0 for b in base], [a/b0 for a in amu]
+
+def main(workloads):
+    for wl in workloads:
+        b, a = norm_curves(wl)
+        print(f"== {wl}")
+        print("  base ours :", " ".join(f"{x:7.2f}" for x in b))
+        if wl in T4: print("  base paper:", " ".join(f"{x:7.2f}" for x in T4[wl]["base"]))
+        print("  amu  ours :", " ".join(f"{x:7.2f}" for x in a))
+        if wl in T4: print("  amu  paper:", " ".join(f"{x:7.2f}" for x in T4[wl]["amu"]))
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or ["GUPS", "HJ", "STREAM"])
