@@ -1,21 +1,79 @@
 """Kernel micro-benchmarks (interpret mode on CPU: correctness-shaped timing
 only; real numbers come from the TPU target). Reports us/call plus the
-derived achieved-bytes/flops so the TPU roofline expectation is visible."""
+derived achieved-bytes/flops so the TPU roofline expectation is visible.
+
+Also hosts the timed-engine *driver throughput* micro (`engine_driver`):
+host-side requests retired per second through the scalar oracle vs the
+vectorized batched engine, which is what bounds how large a latency x
+queue-depth paper sweep is tractable on CPU."""
 from __future__ import annotations
 
 import time
 from typing import List, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-
-from repro.kernels import ops
 
 Row = Tuple[str, float, str]
 
 
+# =========================================================================
+# Timed-engine driver throughput: scalar oracle vs batched engine
+# =========================================================================
+def _drive_engine(kind: str, n_requests: int, qlen: int,
+                  latency_us: float = 1.0) -> float:
+    """Keep the request queue full for `n_requests` loads against the timed
+    far-memory model, stepping time in latency-sized epochs; returns
+    requests retired per wall-clock second."""
+    from repro.configs.base import EngineConfig
+    from repro.core.engine import make_engine
+    from repro.core.farmem import FarMemoryConfig, FarMemoryModel
+
+    far = FarMemoryModel(FarMemoryConfig.from_latency_us(latency_us))
+    eng = make_engine(kind, EngineConfig(queue_length=qlen, granularity=8),
+                      far)
+    epoch = far.config.base_latency_cycles
+    rng = np.random.default_rng(0)
+    addrs = rng.integers(0, 4096, size=n_requests) * 8
+    zeros = np.zeros(qlen, np.int64)
+    sizes = np.full(qlen, 8, np.int64)
+    t0 = time.perf_counter()
+    issued = retired = 0
+    now = 0.0
+    while retired < n_requests:
+        k = min(qlen - eng.active_requests, n_requests - issued)
+        if k:
+            if kind == "batched":
+                eng.aload_batch(zeros[:k], addrs[issued:issued + k],
+                                sizes[:k])
+            else:
+                for i in range(k):
+                    eng.aload(0, int(addrs[issued + i]), 8)
+            issued += k
+        now += epoch
+        eng.advance(now)
+        if kind == "batched":
+            retired += len(eng.getfin_all())
+        else:
+            while eng.getfin():
+                retired += 1
+    return n_requests / (time.perf_counter() - t0)
+
+
+def engine_driver(n_requests: int = 100_000) -> List[Row]:
+    rows: List[Row] = []
+    for qlen in (256, 1024):
+        scalar = _drive_engine("scalar", n_requests, qlen)
+        batched = _drive_engine("batched", n_requests, qlen)
+        rows.append((f"engine/scalar_driver_q{qlen}", 1e6 / scalar,
+                     f"req_per_s={scalar:.0f}"))
+        rows.append((f"engine/batched_driver_q{qlen}", 1e6 / batched,
+                     f"req_per_s={batched:.0f},"
+                     f"speedup_vs_scalar={batched / scalar:.2f}x"))
+    return rows
+
+
 def _time(fn, *args, reps=3) -> float:
+    import jax
     fn(*args)  # warm
     t0 = time.perf_counter()
     for _ in range(reps):
@@ -25,6 +83,11 @@ def _time(fn, *args, reps=3) -> float:
 
 
 def kernel_micro() -> List[Row]:
+    # jax only needed for the Pallas kernel rows, not the engine driver
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
     rng = np.random.default_rng(0)
     rows: List[Row] = []
     # GUPS-gather (the paper's flagship random-access pattern)

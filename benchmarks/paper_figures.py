@@ -14,12 +14,27 @@ LATS = [0.1, 0.2, 0.5, 1.0, 2.0, 5.0]
 WORKLOADS = list(sim.WORKLOADS)
 Row = Tuple[str, float, str]
 
+# Which timed-engine implementation drives the AMU configs. "batched" (the
+# vectorized engine + batch-stepped scheduler) makes the full 4-config x
+# 8-workload x 5-latency sweep tractable on CPU; "scalar" is the per-event
+# oracle. The engines themselves are trace-identical under a fixed scheduler
+# (tests/test_batched_engine.py); the batch-stepped scheduler's different
+# interleaving shifts timing stats ~1%, so archived sweeps should record
+# which engine produced them. benchmarks.run --engine=... overrides this.
+ENGINE = "batched"
+
+
+def _run(wl: str, config: str, latency_us: float, **kw) -> Dict[str, float]:
+    if config.startswith("amu"):
+        kw.setdefault("engine", ENGINE)
+    return sim.run(wl, config, latency_us, **kw)
+
 
 def fig2_slowdown() -> List[Row]:
     """Fig 2: baseline slowdown vs far-memory latency (normalized to 0.1us)."""
     rows = []
     for wl in WORKLOADS:
-        base = [sim.run(wl, "baseline", L)["us"] for L in LATS]
+        base = [_run(wl, "baseline", L)["us"] for L in LATS]
         for L, t in zip(LATS, base):
             rows.append((f"fig2/{wl}/lat{L}", t,
                          f"slowdown={t / base[0]:.2f}x"))
@@ -30,11 +45,11 @@ def fig8_exec_time() -> List[Row]:
     """Fig 8: normalized execution time, 4 configs x workloads x latencies."""
     rows = []
     for wl in WORKLOADS:
-        b0 = sim.run(wl, "baseline", 0.1)["us"]
+        b0 = _run(wl, "baseline", 0.1)["us"]
         for config in ("baseline", "cxl-ideal", "amu", "amu-dma"):
             for L in (0.1, 0.5, 1.0, 5.0):
-                out = sim.run(wl, config, L, verify=False) \
-                    if config.startswith("amu") else sim.run(wl, config, L)
+                out = _run(wl, config, L, verify=False) \
+                    if config.startswith("amu") else _run(wl, config, L)
                 rows.append((f"fig8/{wl}/{config}/lat{L}", out["us"],
                              f"norm={out['us'] / b0:.3f}"))
     return rows
@@ -46,8 +61,8 @@ def fig9_mlp() -> List[Row]:
     for wl in WORKLOADS:
         for config in ("baseline", "amu"):
             for L in (0.5, 1.0, 5.0):
-                out = sim.run(wl, config, L, verify=False) \
-                    if config == "amu" else sim.run(wl, config, L)
+                out = _run(wl, config, L, verify=False) \
+                    if config == "amu" else _run(wl, config, L)
                 rows.append((f"fig9/{wl}/{config}/lat{L}", out["us"],
                              f"mlp={out['mlp']:.1f}"))
     return rows
@@ -59,8 +74,8 @@ def fig10_ipc() -> List[Row]:
     for wl in WORKLOADS:
         for config in ("baseline", "amu"):
             for L in (0.5, 1.0, 5.0):
-                out = sim.run(wl, config, L, verify=False) \
-                    if config == "amu" else sim.run(wl, config, L)
+                out = _run(wl, config, L, verify=False) \
+                    if config == "amu" else _run(wl, config, L)
                 rows.append((f"fig10/{wl}/{config}/lat{L}", out["us"],
                              f"ipc={out['ipc']:.2f}"))
     return rows
@@ -71,10 +86,10 @@ def fig11_power() -> List[Row]:
     pm = PowerModel()
     rows = []
     for wl in WORKLOADS:
-        b0 = sim.run(wl, "baseline", 0.1)
+        b0 = _run(wl, "baseline", 0.1)
         p0 = pm.power(b0)
         for L in (0.5, 1.0, 5.0):
-            a = sim.run(wl, "amu", L, verify=False)
+            a = _run(wl, "amu", L, verify=False)
             spm_touches = a["requests"] * 2.0       # AMART + list upkeep
             rows.append((f"fig11/{wl}/amu/lat{L}", a["us"],
                          f"power_norm={pm.power(a, spm_touches) / p0:.2f}"))
@@ -89,9 +104,9 @@ def table4_prefetch() -> List[Row]:
     for wl in ("GUPS", "HJ", "STREAM"):
         spec = sim.WORKLOADS[wl]
         units = spec.build(0).units
-        b0 = sim.run(wl, "baseline", 0.1)["us"]
+        b0 = _run(wl, "baseline", 0.1)["us"]
         for L in LATS:
-            base = sim.run(wl, "baseline", L)["us"]
+            base = _run(wl, "baseline", L)["us"]
             rows.append((f"table4/{wl}/baseline/lat{L}", base,
                          f"norm={base / b0:.2f}"))
             pf = {g: sim.simulate_group_prefetch(
@@ -99,10 +114,10 @@ def table4_prefetch() -> List[Row]:
             g_best = min(pf, key=pf.get)
             rows.append((f"table4/{wl}/pf_best/lat{L}", pf[g_best],
                          f"norm={pf[g_best] / b0:.2f},group={g_best}"))
-            amu = sim.run(wl, "amu", L, verify=False)["us"]
+            amu = _run(wl, "amu", L, verify=False)["us"]
             rows.append((f"table4/{wl}/amu/lat{L}", amu,
                          f"norm={amu / b0:.2f}"))
-            llvm = sim.run(wl, "amu-llvm", L, verify=False)["us"]
+            llvm = _run(wl, "amu-llvm", L, verify=False)["us"]
             rows.append((f"table4/{wl}/amu_llvm/lat{L}", llvm,
                          f"norm={llvm / b0:.2f}"))
     return rows
@@ -132,7 +147,7 @@ def table5_disambiguation() -> List[Row]:
     rows = []
     for wl in ("HJ", "HT"):
         for L in LATS:
-            out = sim.run(wl, "amu", L, verify=False)
+            out = _run(wl, "amu", L, verify=False)
             rows.append((f"table5/{wl}/lat{L}", out["us"],
                          f"disamb_frac={out['disamb_frac']:.4f}"))
     return rows
@@ -143,14 +158,14 @@ def headline_claims() -> List[Row]:
     rows = []
     sp = []
     for wl in WORKLOADS:
-        b = sim.run(wl, "baseline", 1.0)["us"]
-        a = sim.run(wl, "amu", 1.0, verify=False)["us"]
+        b = _run(wl, "baseline", 1.0)["us"]
+        a = _run(wl, "amu", 1.0, verify=False)["us"]
         sp.append(b / a)
     geo = float(np.exp(np.mean(np.log(sp))))
     rows.append(("headline/geomean_speedup_1us", geo,
                  f"paper=2.42,ours={geo:.2f}"))
-    b5 = sim.run("GUPS", "baseline", 5.0)["us"]
-    l5 = sim.run("GUPS", "amu-llvm", 5.0, verify=False)
+    b5 = _run("GUPS", "baseline", 5.0)["us"]
+    l5 = _run("GUPS", "amu-llvm", 5.0, verify=False)
     rows.append(("headline/gups_llvm_speedup_5us", b5 / l5["us"],
                  f"paper=26.86,ours={b5 / l5['us']:.2f}"))
     rows.append(("headline/gups_llvm_mlp_5us", l5["mlp"],

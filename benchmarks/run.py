@@ -1,8 +1,11 @@
 """Benchmark harness: one function per paper table/figure + kernel micro +
-roofline. Prints ``name,us_per_call,derived`` CSV.
+engine-driver throughput + roofline. Prints ``name,us_per_call,derived`` CSV.
 
-Usage: PYTHONPATH=src python -m benchmarks.run [figure ...]
+Usage: PYTHONPATH=src python -m benchmarks.run [--engine scalar|batched]
+                                               [figure ...]
 (no args -> everything; roofline rows require results/dryrun.jsonl).
+`--engine` picks the timed-engine implementation behind the AMU configs:
+"batched" (default; vectorized, fast sweeps) or "scalar" (per-event oracle).
 """
 from __future__ import annotations
 
@@ -11,15 +14,26 @@ import sys
 
 def main() -> None:
     # imports here so `-m benchmarks.run fig2` doesn't pay for jax
-    from benchmarks.paper_figures import ALL_FIGURES
-    from benchmarks.kernel_micro import kernel_micro
+    import benchmarks.paper_figures as pf
+    from benchmarks.kernel_micro import engine_driver, kernel_micro
     from benchmarks.roofline import roofline_rows
 
-    suites = dict(ALL_FIGURES)
+    args = sys.argv[1:]
+    if "--engine" in args:
+        i = args.index("--engine")
+        if i + 1 >= len(args) or args[i + 1] not in ("scalar", "batched"):
+            print("error: --engine requires a value: scalar | batched",
+                  file=sys.stderr)
+            raise SystemExit(2)
+        pf.ENGINE = args[i + 1]
+        del args[i:i + 2]
+
+    suites = dict(pf.ALL_FIGURES)
     suites["kernels"] = kernel_micro
+    suites["engine"] = engine_driver
     suites["roofline"] = roofline_rows
 
-    wanted = sys.argv[1:] or list(suites)
+    wanted = args or list(suites)
     print("name,us_per_call,derived")
     for name in wanted:
         if name not in suites:

@@ -1,8 +1,10 @@
 """The paper's contribution: AMI semantics, AMU engine, coroutine framework,
 software memory disambiguation, and the calibrated performance model."""
 from repro.core.coroutines import (Acquire, Aload, AloadNoWait, Astore,
-                                   AstoreNoWait, AwaitRid, Cost, CostModel,
-                                   Release, Scheduler, SpmRead, SpmWrite)
+                                   AstoreNoWait, AwaitRid, BatchScheduler,
+                                   Cost, CostModel, Release, Scheduler,
+                                   SpmRead, SpmWrite)
 from repro.core.disambiguation import CuckooAddressSet
-from repro.core.engine import AsyncMemoryEngine
+from repro.core.engine import (AsyncMemoryEngine, BatchedAsyncMemoryEngine,
+                               make_engine)
 from repro.core.farmem import FarMemoryConfig, FarMemoryModel, InstantMemory

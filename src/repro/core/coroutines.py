@@ -31,7 +31,7 @@ from dataclasses import dataclass
 from typing import Callable, Deque, Dict, Generator, Iterable, Optional
 
 from repro.core.disambiguation import CuckooAddressSet
-from repro.core.engine import AsyncMemoryEngine
+from repro.core.engine import AsyncEngineBase
 
 
 # ---------------------------------------------------------------------- cost
@@ -136,7 +136,7 @@ class DeadlockError(RuntimeError):
 
 
 class Scheduler:
-    def __init__(self, engine: AsyncMemoryEngine,
+    def __init__(self, engine: AsyncEngineBase,
                  cost: CostModel = CostModel(),
                  disambiguator: Optional[CuckooAddressSet] = None,
                  dma_mode: bool = False):
@@ -243,6 +243,32 @@ class Scheduler:
         else:
             raise TypeError(f"unknown command {cmd!r}")
 
+    def _dispatch_fin(self, rid: int) -> None:
+        """Route a completed request ID to its awaiting task (if any)."""
+        tok = self._rid_tok.pop(rid)
+        task = self._waiting_tok.pop(tok, None)
+        if task is not None:
+            self._tick_insts(self.cost.switch_insts)  # resume the awaiter
+            self.t += self.cost.switch_stall_cycles
+            self._ready.append(task)
+        else:
+            self._unclaimed.add(tok)
+
+    def _idle_until_completion(self) -> None:
+        """Nothing runnable: validate liveness and advance to the next
+        completion (shared deadlock detection for both runtime loops)."""
+        if not (self._waiting_tok or self._alloc_parked):
+            raise DeadlockError("live tasks but none ready/waiting")
+        next_done = self.engine.next_completion_time
+        if next_done is None:
+            if self.engine.finished_pending:
+                return                     # drain via getfin next round
+            raise DeadlockError(
+                f"{len(self._waiting_tok)} waiting, "
+                f"{len(self._alloc_parked)} parked, none outstanding")
+        self.t = max(self.t, next_done)
+        self.engine.advance(self.t)
+
     # ------------------------------------------------------------------ API
     def spawn(self, task: Task) -> None:
         self._live += 1
@@ -261,14 +287,7 @@ class Scheduler:
                 self._tick_insts(c.getfin_insts)
                 rid = self.engine.getfin()
                 if rid:
-                    tok = self._rid_tok.pop(rid)
-                    task = self._waiting_tok.pop(tok, None)
-                    if task is not None:
-                        self._tick_insts(c.switch_insts)  # resume the awaiter
-                        self.t += c.switch_stall_cycles
-                        self._ready.append(task)
-                    else:
-                        self._unclaimed.add(tok)
+                    self._dispatch_fin(rid)
                     # freed an ID: a parked task can retry its issue
                     if self._alloc_parked:
                         ptask, pcmd = self._alloc_parked.popleft()
@@ -277,18 +296,7 @@ class Scheduler:
                 task = self._ready.popleft()
                 self._run_task(task, self._results.pop(id(task), None))
             elif self._live > 0:
-                if not (self._waiting_tok or self._alloc_parked):
-                    raise DeadlockError("live tasks but none ready/waiting")
-                # nothing runnable: idle until the next completion
-                next_done = self.engine.next_completion_time
-                if next_done is None:
-                    if self.engine.finished_pending:
-                        continue               # drain via getfin next round
-                    raise DeadlockError(
-                        f"{len(self._waiting_tok)} waiting, "
-                        f"{len(self._alloc_parked)} parked, none outstanding")
-                self.t = max(self.t, next_done)
-                self.engine.advance(self.t)
+                self._idle_until_completion()
         return self.summary()
 
     def summary(self) -> dict:
@@ -303,3 +311,48 @@ class Scheduler:
             "disamb_cycles": self.disamb_cycles,
             "disamb_frac": self.disamb_cycles / max(self.t, 1e-9),
         }
+
+
+class BatchScheduler(Scheduler):
+    """Batch-stepped runtime loop (§4.2 metadata batching applied to the host
+    model): each *epoch* drains ALL currently-finished IDs in one
+    ``getfin_all`` sweep, resumes every awaiter, then steps every ready task
+    once — instead of one getfin + one task step per loop turn.
+
+    Semantics (what data lands where, FIFO disambiguation hand-off, parked
+    retry on ID exhaustion, deadlock detection) match :class:`Scheduler`;
+    only the interleaving — and therefore the Python-level driver overhead —
+    differs. Works with either engine; `BatchedAsyncMemoryEngine.getfin_all`
+    makes the drain itself a vectorized operation.
+    """
+
+    def run(self, tasks: Optional[Iterable[Task]] = None) -> dict:
+        c = self.cost
+        for task in tasks or ():
+            self.spawn(task)
+        while self._live > 0:
+            if (self._waiting_tok or self._alloc_parked
+                    or self.engine.outstanding or self.engine.finished_pending):
+                self.engine.advance(self.t)
+                rids = self.engine.getfin_all()
+                # one poll per retrieved ID + the terminating empty poll
+                self._tick_insts(c.getfin_insts * (len(rids) + 1))
+                for rid in rids:
+                    self._dispatch_fin(rid)
+                # freed IDs: parked tasks can retry their issues
+                retries = min(len(rids), len(self._alloc_parked))
+                for _ in range(retries):
+                    ptask, pcmd = self._alloc_parked.popleft()
+                    self._issue(ptask, pcmd)
+            if self._ready:
+                # step every currently-ready task once (snapshot: tasks that
+                # re-queue themselves run again next epoch, after the poll)
+                for _ in range(len(self._ready)):
+                    task = self._ready.popleft()
+                    self._run_task(task, self._results.pop(id(task), None))
+            elif self._live > 0:
+                self._idle_until_completion()
+        return self.summary()
+
+
+SCHEDULER_KINDS = {"scalar": Scheduler, "batched": BatchScheduler}

@@ -23,12 +23,27 @@ ID batching (§4.2 metadata batching) is modeled: the ALSU-side list-vector
 register caches up to ``batch_ids`` free/finished IDs, so steady-state
 aload/getfin touch the (slower) ASMC lists only every ``batch_ids`` calls.
 ``batch_ids=1`` reproduces the paper's **AMU (DMA-mode)** ablation.
+
+Two implementations share the AMI contract:
+
+* :class:`AsyncMemoryEngine` — the scalar reference ("oracle"): per-event
+  heapq, dataclass AMART entries. Kept deliberately simple; every batched
+  behaviour is differentially tested against it.
+* :class:`BatchedAsyncMemoryEngine` — structure-of-arrays AMART, ring-buffer
+  free/finished lists, and vectorized completion retirement. Call-for-call
+  **trace-identical** to the scalar engine (same IDs, same done-times, same
+  SPM/far-memory bytes, same stats), but adds batch entry points
+  (:meth:`aload_batch`, :meth:`astore_batch`, :meth:`getfin_all`) that move
+  whole vectors of requests per Python-level call — the §4.2 metadata-batching
+  idea applied to the host model itself.
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
+import math
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -56,10 +71,13 @@ class SpmOverflow(ValueError):
     pass
 
 
-class AsyncMemoryEngine:
+class AsyncEngineBase:
+    """Shared SPM/config plumbing for the scalar and batched engines."""
+
     def __init__(self, config: EngineConfig,
                  far_memory: Optional[FarMemoryModel] = None,
-                 backing: Optional[np.ndarray] = None):
+                 backing: Optional[np.ndarray] = None,
+                 record_trace: bool = False):
         self.config = config
         self.far = far_memory or InstantMemory()
         # far-memory backing store (uint8); tests pass real arrays here
@@ -72,81 +90,14 @@ class AsyncMemoryEngine:
         # data area = SPM minus the AMART/queue metadata area (queue_base..)
         self.spm_data_bytes = config.spm_bytes - meta_bytes
         self.spm = np.zeros(self.spm_data_bytes, np.uint8)
-        # ASMC-side lists (IDs are 1-based; 0 is the failure code)
-        self._free: Deque[int] = deque(range(1, config.queue_length + 1))
-        self._finished: Deque[int] = deque()
-        self.amart: Dict[int, Request] = {}
-        self._pending: List[Tuple[float, int]] = []  # (done_time, rid)
-        # ALSU list-vector registers (metadata batching caches)
-        self._free_cache: Deque[int] = deque()
-        self._fin_cache: Deque[int] = deque()
         self.now = 0.0
-        # stats
+        # differential-test hook: ("issue", kind, rid, spm, mem, size, done)
+        # and ("fin", rid) tuples, in call order
+        self.trace: Optional[list] = [] if record_trace else None
         self.stats = {"aload": 0, "astore": 0, "getfin": 0, "getfin_empty": 0,
                       "alloc_fail": 0, "free_refills": 0, "fin_refills": 0}
 
-    # ------------------------------------------------------------------ time
-    def advance(self, now: float) -> None:
-        """Move the clock; retire far-memory completions into the finished list."""
-        self.now = max(self.now, now)
-        while self._pending and self._pending[0][0] <= self.now:
-            _, rid = heapq.heappop(self._pending)
-            req = self.amart[rid]
-            if req.kind == LOAD:
-                src = self.mem[req.mem_addr:req.mem_addr + req.size]
-                self.spm[req.spm_addr:req.spm_addr + req.size] = src
-            else:
-                self.mem[req.mem_addr:req.mem_addr + req.size] = np.frombuffer(
-                    req.data, np.uint8)
-            self._finished.append(rid)
-
-    def drain(self) -> None:
-        """Advance past every outstanding completion (functional mode helper)."""
-        while self._pending:
-            self.advance(self._pending[0][0])
-
-    @property
-    def outstanding(self) -> int:
-        return len(self._pending)
-
-    @property
-    def next_completion_time(self) -> Optional[float]:
-        return self._pending[0][0] if self._pending else None
-
-    @property
-    def finished_pending(self) -> int:
-        return len(self._finished) + len(self._fin_cache)
-
     # ----------------------------------------------------------------- AMI
-    def _alloc_id(self) -> int:
-        if not self._free_cache:
-            if not self._free:
-                self.stats["alloc_fail"] += 1
-                return 0
-            # batch refill from the ASMC free list (one L2-latency round trip)
-            n = min(self.config.batch_ids, len(self._free))
-            self._free_cache.extend(self._free.popleft() for _ in range(n))
-            self.stats["free_refills"] += 1
-        return self._free_cache.popleft()
-
-    def _issue(self, kind: int, spm_addr: int, mem_addr: int,
-               size: Optional[int]) -> int:
-        size = size or self.config.granularity
-        if spm_addr + size > self.spm_data_bytes:
-            raise SpmOverflow(f"SPM access [{spm_addr}, {spm_addr+size}) "
-                              f"outside data area of {self.spm_data_bytes}B")
-        rid = self._alloc_id()
-        if rid == 0:
-            return 0
-        req = Request(rid, kind, spm_addr, mem_addr, size, self.now)
-        if kind == STORE:
-            req.data = self.spm[spm_addr:spm_addr + size].tobytes()
-        req.done_time = self.far.issue(self.now, size)
-        self.amart[rid] = req
-        heapq.heappush(self._pending, (req.done_time, rid))
-        self.stats["aload" if kind == LOAD else "astore"] += 1
-        return rid
-
     def aload(self, spm_addr: int, mem_addr: int, size: Optional[int] = None) -> int:
         """Far memory -> SPM. Returns request ID, 0 if ID allocation failed."""
         return self._issue(LOAD, spm_addr, mem_addr, size)
@@ -155,21 +106,14 @@ class AsyncMemoryEngine:
         """SPM -> far memory. Returns request ID, 0 if ID allocation failed."""
         return self._issue(STORE, spm_addr, mem_addr, size)
 
-    def getfin(self) -> int:
-        """Return a completed request ID (0 if none). Frees the ID."""
-        self.advance(self.now)
-        self.stats["getfin"] += 1
-        if not self._fin_cache:
-            if not self._finished:
-                self.stats["getfin_empty"] += 1
-                return 0
-            n = min(self.config.batch_ids, len(self._finished))
-            self._fin_cache.extend(self._finished.popleft() for _ in range(n))
-            self.stats["fin_refills"] += 1
-        rid = self._fin_cache.popleft()
-        del self.amart[rid]
-        self._free.append(rid)  # ID returns to the ASMC free list
-        return rid
+    def getfin_all(self) -> List[int]:
+        """Drain every currently-completed ID (in finished-list order)."""
+        out: List[int] = []
+        while True:
+            rid = self.getfin()
+            if rid == 0:
+                return out
+            out.append(rid)
 
     # -------------------------------------------- config registers (Table 1)
     CFG_REGISTERS = ("granularity", "queue_base", "queue_length")
@@ -188,12 +132,11 @@ class AsyncMemoryEngine:
         """Write a configuration register. `queue_length` re-initializes the
         metadata area (only legal with no requests outstanding — the paper's
         software contract for reconfiguration)."""
-        import dataclasses
         if reg == "granularity":
             self.config = dataclasses.replace(self.config, granularity=value)
             return
         if reg == "queue_length":
-            if self.outstanding or self.finished_pending or self.amart:
+            if self.outstanding or self.finished_pending or self.active_requests:
                 raise RuntimeError("cannot resize queue with requests in flight")
             meta = value * AMART_ENTRY_BYTES
             if meta >= self.config.spm_bytes:
@@ -204,10 +147,7 @@ class AsyncMemoryEngine:
                 self.spm.size > self.spm_data_bytes else np.concatenate(
                     [self.spm, np.zeros(self.spm_data_bytes - self.spm.size,
                                         np.uint8)])
-            self._free = deque(range(1, value + 1))
-            self._free_cache.clear()
-            self._fin_cache.clear()
-            self._finished.clear()
+            self._reset_id_pool(value)
             return
         raise KeyError(reg)
 
@@ -223,6 +163,147 @@ class AsyncMemoryEngine:
             raise SpmOverflow("spm_read outside data area")
         return self.spm[spm_addr:spm_addr + size].tobytes()
 
+    def _check_bounds(self, spm_addr: int, size: int) -> None:
+        if spm_addr + size > self.spm_data_bytes:
+            raise SpmOverflow(f"SPM access [{spm_addr}, {spm_addr+size}) "
+                              f"outside data area of {self.spm_data_bytes}B")
+
+    def drain(self) -> None:
+        """Advance past every outstanding completion (functional mode helper)."""
+        while self.outstanding:
+            self.advance(self.next_completion_time)
+
+    # subclass responsibilities --------------------------------------------
+    def advance(self, now: float) -> None:
+        raise NotImplementedError
+
+    def getfin(self) -> int:
+        raise NotImplementedError
+
+    def _issue(self, kind: int, spm_addr: int, mem_addr: int,
+               size: Optional[int]) -> int:
+        raise NotImplementedError
+
+    def _reset_id_pool(self, queue_length: int) -> None:
+        raise NotImplementedError
+
+    def done_time(self, rid: int) -> float:
+        raise NotImplementedError
+
+    @property
+    def active_requests(self) -> int:
+        """Number of allocated IDs (AMART entries in use)."""
+        raise NotImplementedError
+
+
+class AsyncMemoryEngine(AsyncEngineBase):
+    """Scalar reference engine — the differential-testing oracle."""
+
+    def __init__(self, config: EngineConfig,
+                 far_memory: Optional[FarMemoryModel] = None,
+                 backing: Optional[np.ndarray] = None,
+                 record_trace: bool = False):
+        super().__init__(config, far_memory, backing, record_trace)
+        # ASMC-side lists (IDs are 1-based; 0 is the failure code)
+        self._free: Deque[int] = deque(range(1, config.queue_length + 1))
+        self._finished: Deque[int] = deque()
+        self.amart: Dict[int, Request] = {}
+        self._pending: List[Tuple[float, int]] = []  # (done_time, rid)
+        # ALSU list-vector registers (metadata batching caches)
+        self._free_cache: Deque[int] = deque()
+        self._fin_cache: Deque[int] = deque()
+
+    # ------------------------------------------------------------------ time
+    def advance(self, now: float) -> None:
+        """Move the clock; retire far-memory completions into the finished list."""
+        self.now = max(self.now, now)
+        while self._pending and self._pending[0][0] <= self.now:
+            _, rid = heapq.heappop(self._pending)
+            req = self.amart[rid]
+            if req.kind == LOAD:
+                src = self.mem[req.mem_addr:req.mem_addr + req.size]
+                self.spm[req.spm_addr:req.spm_addr + req.size] = src
+            else:
+                self.mem[req.mem_addr:req.mem_addr + req.size] = np.frombuffer(
+                    req.data, np.uint8)
+            self._finished.append(rid)
+
+    @property
+    def outstanding(self) -> int:
+        return len(self._pending)
+
+    @property
+    def next_completion_time(self) -> Optional[float]:
+        return self._pending[0][0] if self._pending else None
+
+    @property
+    def finished_pending(self) -> int:
+        return len(self._finished) + len(self._fin_cache)
+
+    @property
+    def active_requests(self) -> int:
+        return len(self.amart)
+
+    def done_time(self, rid: int) -> float:
+        return self.amart[rid].done_time
+
+    # ----------------------------------------------------------------- AMI
+    def _alloc_id(self) -> int:
+        if not self._free_cache:
+            if not self._free:
+                self.stats["alloc_fail"] += 1
+                return 0
+            # batch refill from the ASMC free list (one L2-latency round trip)
+            n = min(self.config.batch_ids, len(self._free))
+            self._free_cache.extend(self._free.popleft() for _ in range(n))
+            self.stats["free_refills"] += 1
+        return self._free_cache.popleft()
+
+    def _issue(self, kind: int, spm_addr: int, mem_addr: int,
+               size: Optional[int]) -> int:
+        size = size or self.config.granularity
+        self._check_bounds(spm_addr, size)
+        rid = self._alloc_id()
+        if rid == 0:
+            return 0
+        req = Request(rid, kind, spm_addr, mem_addr, size, self.now)
+        if kind == STORE:
+            req.data = self.spm[spm_addr:spm_addr + size].tobytes()
+        req.done_time = self.far.issue(self.now, size)
+        self.amart[rid] = req
+        heapq.heappush(self._pending, (req.done_time, rid))
+        self.stats["aload" if kind == LOAD else "astore"] += 1
+        if self.trace is not None:
+            self.trace.append(("issue", kind, rid, spm_addr, mem_addr, size,
+                               req.done_time))
+        return rid
+
+    def getfin(self) -> int:
+        """Return a completed request ID (0 if none). Frees the ID."""
+        self.advance(self.now)
+        self.stats["getfin"] += 1
+        if not self._fin_cache:
+            if not self._finished:
+                self.stats["getfin_empty"] += 1
+                if self.trace is not None:
+                    self.trace.append(("fin", 0))
+                return 0
+            n = min(self.config.batch_ids, len(self._finished))
+            self._fin_cache.extend(self._finished.popleft() for _ in range(n))
+            self.stats["fin_refills"] += 1
+        rid = self._fin_cache.popleft()
+        del self.amart[rid]
+        self._free.append(rid)  # ID returns to the ASMC free list
+        if self.trace is not None:
+            self.trace.append(("fin", rid))
+        return rid
+
+    def _reset_id_pool(self, queue_length: int) -> None:
+        self._free = deque(range(1, queue_length + 1))
+        self._free_cache.clear()
+        self._fin_cache.clear()
+        self._finished.clear()
+
     # ----------------------------------------------------------- invariants
     def check_invariants(self) -> None:
         """ID conservation: every ID is in exactly one place."""
@@ -234,3 +315,369 @@ class AsyncMemoryEngine:
             f"ID leak: {len(ids)} != {self.config.queue_length}")
         assert len(set(ids)) == len(ids), "duplicate ID"
         assert set(self.amart) == (pend | in_flight_fin), "AMART out of sync"
+
+
+class _IdRing:
+    """Fixed-capacity int64 FIFO ring buffer (the ASMC's SPM-resident lists)."""
+
+    __slots__ = ("buf", "cap", "head", "n")
+
+    def __init__(self, cap: int, fill: Optional[np.ndarray] = None):
+        self.cap = cap
+        self.buf = np.zeros(cap, np.int64)
+        self.head = 0
+        self.n = 0
+        if fill is not None:
+            self.buf[:fill.size] = fill
+            self.n = int(fill.size)
+
+    def __len__(self) -> int:
+        return self.n
+
+    def pop(self) -> int:
+        rid = int(self.buf[self.head])
+        self.head = (self.head + 1) % self.cap
+        self.n -= 1
+        return rid
+
+    def pop_many(self, k: int) -> np.ndarray:
+        if self.head + k <= self.cap:                 # contiguous fast path
+            out = self.buf[self.head:self.head + k].copy()
+        else:
+            out = self.buf[(self.head + np.arange(k)) % self.cap].copy()
+        self.head = (self.head + k) % self.cap
+        self.n -= k
+        return out
+
+    def push(self, rid: int) -> None:
+        self.buf[(self.head + self.n) % self.cap] = rid
+        self.n += 1
+
+    def push_many(self, rids: np.ndarray) -> None:
+        k = len(rids)
+        p = (self.head + self.n) % self.cap
+        if p + k <= self.cap:                          # contiguous fast path
+            self.buf[p:p + k] = rids
+        else:
+            self.buf[(p + np.arange(k)) % self.cap] = rids
+        self.n += k
+
+    def tolist(self) -> List[int]:
+        return self.buf[(self.head + np.arange(self.n)) % self.cap].tolist()
+
+
+class BatchedAsyncMemoryEngine(AsyncEngineBase):
+    """Structure-of-arrays engine with vectorized completion retirement.
+
+    Scalar AMI calls (`aload`/`astore`/`getfin`) are call-for-call
+    trace-identical to :class:`AsyncMemoryEngine`; the batch entry points
+    (`aload_batch`/`astore_batch`/`getfin_all`) retire whole vectors per
+    Python call, which is what makes latency x queue-depth sweeps tractable.
+    """
+
+    def __init__(self, config: EngineConfig,
+                 far_memory: Optional[FarMemoryModel] = None,
+                 backing: Optional[np.ndarray] = None,
+                 record_trace: bool = False):
+        super().__init__(config, far_memory, backing, record_trace)
+        cap = config.queue_length
+        self._free = _IdRing(cap, fill=np.arange(1, cap + 1))
+        self._finished = _IdRing(cap)
+        self._free_cache: Deque[int] = deque()
+        self._fin_cache: Deque[int] = deque()
+        # SoA AMART, indexed by rid (slot 0 unused — 0 is the failure code)
+        self._kind = np.zeros(cap + 1, np.int8)
+        self._spm_a = np.zeros(cap + 1, np.int64)
+        self._mem_a = np.zeros(cap + 1, np.int64)
+        self._size = np.zeros(cap + 1, np.int64)
+        self._issue_t = np.zeros(cap + 1, np.float64)
+        self._done_t = np.zeros(cap + 1, np.float64)
+        self._active = np.zeros(cap + 1, bool)
+        self._store_data: List[Optional[np.ndarray]] = [None] * (cap + 1)
+        # unsorted in-flight rid vector (replaces the per-event heapq)
+        self._pend = np.zeros(cap, np.int64)
+        self._pend_n = 0
+        self._pend_min = math.inf
+
+    # ------------------------------------------------------------------ time
+    def advance(self, now: float) -> None:
+        """Move the clock; retire ALL due completions in one vectorized step,
+        ordered by (done_time, rid) exactly like the scalar heapq."""
+        self.now = max(self.now, now)
+        if self._pend_n == 0 or self._pend_min > self.now:
+            return
+        rids = self._pend[:self._pend_n]
+        done = self._done_t[rids]
+        due = done <= self.now
+        fin = rids[due]
+        fin = fin[np.lexsort((fin, done[due]))]
+        self._move_data(fin)
+        self._finished.push_many(fin)
+        keep = rids[~due]
+        self._pend[:keep.size] = keep
+        self._pend_n = keep.size
+        self._pend_min = float(self._done_t[keep].min()) if keep.size \
+            else math.inf
+
+    def _move_data(self, fin: np.ndarray) -> None:
+        """Perform the DMA for retired requests, preserving retirement order.
+
+        Consecutive same-kind runs are vectorized; run boundaries keep
+        load-after-store ordering on overlapping far-memory regions, and
+        in-order fancy assignment keeps last-writer-wins within a run.
+        """
+        kinds = self._kind[fin]
+        i = 0
+        while i < fin.size:
+            j = i + 1
+            while j < fin.size and kinds[j] == kinds[i]:
+                j += 1
+            run = fin[i:j]
+            sizes = self._size[run]
+            if kinds[i] == LOAD:
+                if sizes.size > 1 and (sizes == sizes[0]).all():
+                    cols = np.arange(int(sizes[0]))
+                    self.spm[self._spm_a[run][:, None] + cols] = \
+                        self.mem[self._mem_a[run][:, None] + cols]
+                else:
+                    for rid in run:
+                        a, m, s = (int(self._spm_a[rid]),
+                                   int(self._mem_a[rid]), int(self._size[rid]))
+                        self.spm[a:a + s] = self.mem[m:m + s]
+            else:
+                for rid in run:
+                    m, s = int(self._mem_a[rid]), int(self._size[rid])
+                    self.mem[m:m + s] = self._store_data[rid]
+            i = j
+
+    @property
+    def outstanding(self) -> int:
+        return int(self._pend_n)
+
+    @property
+    def next_completion_time(self) -> Optional[float]:
+        return self._pend_min if self._pend_n else None
+
+    @property
+    def finished_pending(self) -> int:
+        return len(self._finished) + len(self._fin_cache)
+
+    @property
+    def active_requests(self) -> int:
+        return int(self._active.sum())
+
+    def done_time(self, rid: int) -> float:
+        return float(self._done_t[rid])
+
+    # ----------------------------------------------------------------- AMI
+    def _alloc_id(self) -> int:
+        if not self._free_cache:
+            if len(self._free) == 0:
+                self.stats["alloc_fail"] += 1
+                return 0
+            n = min(self.config.batch_ids, len(self._free))
+            self._free_cache.extend(self._free.pop_many(n).tolist())
+            self.stats["free_refills"] += 1
+        return self._free_cache.popleft()
+
+    def _alloc_ids(self, n: int) -> List[int]:
+        """Allocate up to n IDs — state/stat-equivalent to n scalar allocs."""
+        out: List[int] = []
+        take = min(n, len(self._free_cache))
+        for _ in range(take):
+            out.append(self._free_cache.popleft())
+        need = n - take
+        while need > 0 and len(self._free):
+            chunk = min(self.config.batch_ids, len(self._free))
+            got = self._free.pop_many(chunk).tolist()
+            self.stats["free_refills"] += 1
+            use = min(need, chunk)
+            out.extend(got[:use])
+            self._free_cache.extend(got[use:])
+            need -= use
+        self.stats["alloc_fail"] += need
+        return out
+
+    def _set_request(self, rid: int, kind: int, spm_addr: int, mem_addr: int,
+                     size: int, done: float) -> None:
+        self._kind[rid] = kind
+        self._spm_a[rid] = spm_addr
+        self._mem_a[rid] = mem_addr
+        self._size[rid] = size
+        self._issue_t[rid] = self.now
+        self._done_t[rid] = done
+        self._active[rid] = True
+        self._pend[self._pend_n] = rid
+        self._pend_n += 1
+        if done < self._pend_min:
+            self._pend_min = float(done)
+
+    def _issue(self, kind: int, spm_addr: int, mem_addr: int,
+               size: Optional[int]) -> int:
+        size = size or self.config.granularity
+        self._check_bounds(spm_addr, size)
+        rid = self._alloc_id()
+        if rid == 0:
+            return 0
+        if kind == STORE:
+            self._store_data[rid] = self.spm[spm_addr:spm_addr + size].copy()
+        done = self.far.issue(self.now, size)
+        self._set_request(rid, kind, spm_addr, mem_addr, size, done)
+        self.stats["aload" if kind == LOAD else "astore"] += 1
+        if self.trace is not None:
+            self.trace.append(("issue", kind, rid, spm_addr, mem_addr, size,
+                               done))
+        return rid
+
+    def getfin(self) -> int:
+        """Return a completed request ID (0 if none). Frees the ID."""
+        self.advance(self.now)
+        self.stats["getfin"] += 1
+        if not self._fin_cache:
+            if len(self._finished) == 0:
+                self.stats["getfin_empty"] += 1
+                if self.trace is not None:
+                    self.trace.append(("fin", 0))
+                return 0
+            n = min(self.config.batch_ids, len(self._finished))
+            self._fin_cache.extend(self._finished.pop_many(n).tolist())
+            self.stats["fin_refills"] += 1
+        rid = self._fin_cache.popleft()
+        self._active[rid] = False
+        self._store_data[rid] = None
+        self._free.push(rid)
+        if self.trace is not None:
+            self.trace.append(("fin", rid))
+        return rid
+
+    # ------------------------------------------------------- batch AMI path
+    def _issue_batch(self, kind: int, spm_addrs, mem_addrs,
+                     sizes=None) -> np.ndarray:
+        spm_addrs = np.asarray(spm_addrs, np.int64)
+        mem_addrs = np.asarray(mem_addrs, np.int64)
+        n = spm_addrs.size
+        if sizes is None:
+            sizes = np.full(n, self.config.granularity, np.int64)
+        else:
+            # match the scalar path's `size or granularity` coercion
+            sizes = np.asarray(sizes, np.int64)
+            sizes = np.where(sizes == 0, self.config.granularity, sizes)
+        if n and int((spm_addrs + sizes).max()) > self.spm_data_bytes:
+            bad = int(np.argmax(spm_addrs + sizes > self.spm_data_bytes))
+            raise SpmOverflow(
+                f"SPM access [{spm_addrs[bad]}, {spm_addrs[bad]+sizes[bad]}) "
+                f"outside data area of {self.spm_data_bytes}B")
+        got = self._alloc_ids(n)
+        k = len(got)
+        rids = np.zeros(n, np.int64)
+        if k == 0:
+            return rids
+        ok = np.asarray(got, np.int64)
+        rids[:k] = ok
+        if kind == STORE:
+            for i in range(k):
+                a, s = int(spm_addrs[i]), int(sizes[i])
+                self._store_data[int(ok[i])] = self.spm[a:a + s].copy()
+        done = self.far.issue_batch(self.now, sizes[:k])
+        self._kind[ok] = kind
+        self._spm_a[ok] = spm_addrs[:k]
+        self._mem_a[ok] = mem_addrs[:k]
+        self._size[ok] = sizes[:k]
+        self._issue_t[ok] = self.now
+        self._done_t[ok] = done
+        self._active[ok] = True
+        self._pend[self._pend_n:self._pend_n + k] = ok
+        self._pend_n += k
+        if k:
+            self._pend_min = min(self._pend_min, float(done.min()))
+        self.stats["aload" if kind == LOAD else "astore"] += k
+        if self.trace is not None:
+            for i in range(k):
+                self.trace.append(("issue", kind, int(ok[i]),
+                                   int(spm_addrs[i]), int(mem_addrs[i]),
+                                   int(sizes[i]), float(done[i])))
+        return rids
+
+    def aload_batch(self, spm_addrs, mem_addrs, sizes=None) -> np.ndarray:
+        """Vectorized aload: returns rids (0 where ID allocation failed)."""
+        return self._issue_batch(LOAD, spm_addrs, mem_addrs, sizes)
+
+    def astore_batch(self, spm_addrs, mem_addrs, sizes=None) -> np.ndarray:
+        """Vectorized astore: returns rids (0 where ID allocation failed)."""
+        return self._issue_batch(STORE, spm_addrs, mem_addrs, sizes)
+
+    def getfin_all(self) -> List[int]:
+        """Drain every completed ID in one call — stat/state-equivalent to
+        calling ``getfin()`` until it returns 0 (incl. the final empty poll)."""
+        self.advance(self.now)
+        c, f = len(self._fin_cache), len(self._finished)
+        total = c + f
+        self.stats["getfin"] += total + 1
+        self.stats["getfin_empty"] += 1
+        if total == 0:
+            if self.trace is not None:
+                self.trace.append(("fin", 0))
+            return []
+        # after the cache drains, the scalar loop refills batch_ids at a time
+        self.stats["fin_refills"] += -(-f // self.config.batch_ids) if f else 0
+        rids = list(self._fin_cache)
+        self._fin_cache.clear()
+        if f:
+            rids.extend(self._finished.pop_many(f).tolist())
+        arr = np.asarray(rids, np.int64)
+        self._active[arr] = False
+        for rid in rids:
+            self._store_data[rid] = None
+        self._free.push_many(arr)
+        if self.trace is not None:
+            self.trace.extend(("fin", rid) for rid in rids)
+            self.trace.append(("fin", 0))
+        return rids
+
+    def _reset_id_pool(self, queue_length: int) -> None:
+        cap = queue_length
+        self._free = _IdRing(cap, fill=np.arange(1, cap + 1))
+        self._finished = _IdRing(cap)
+        self._free_cache.clear()
+        self._fin_cache.clear()
+        self._kind = np.zeros(cap + 1, np.int8)
+        self._spm_a = np.zeros(cap + 1, np.int64)
+        self._mem_a = np.zeros(cap + 1, np.int64)
+        self._size = np.zeros(cap + 1, np.int64)
+        self._issue_t = np.zeros(cap + 1, np.float64)
+        self._done_t = np.zeros(cap + 1, np.float64)
+        self._active = np.zeros(cap + 1, bool)
+        self._store_data = [None] * (cap + 1)
+        self._pend = np.zeros(cap, np.int64)
+        self._pend_n = 0
+        self._pend_min = math.inf
+
+    # ----------------------------------------------------------- invariants
+    def check_invariants(self) -> None:
+        """ID conservation: every ID is in exactly one place."""
+        pend = self._pend[:self._pend_n].tolist()
+        ids = (self._free.tolist() + list(self._free_cache)
+               + list(self._fin_cache) + self._finished.tolist() + pend)
+        assert len(ids) == self.config.queue_length, (
+            f"ID leak: {len(ids)} != {self.config.queue_length}")
+        assert len(set(ids)) == len(ids), "duplicate ID"
+        in_flight = (set(pend) | set(self._finished.tolist())
+                     | set(self._fin_cache))
+        assert set(np.nonzero(self._active)[0].tolist()) == in_flight, \
+            "AMART out of sync"
+
+
+ENGINE_KINDS = {"scalar": AsyncMemoryEngine, "batched": BatchedAsyncMemoryEngine}
+
+
+def make_engine(kind: str, config: EngineConfig,
+                far_memory: Optional[FarMemoryModel] = None,
+                backing: Optional[np.ndarray] = None,
+                record_trace: bool = False) -> AsyncEngineBase:
+    """Factory for the `engine=` knob: "scalar" (oracle) or "batched"."""
+    try:
+        cls = ENGINE_KINDS[kind]
+    except KeyError:
+        raise KeyError(f"unknown engine kind {kind!r}; "
+                       f"known: {sorted(ENGINE_KINDS)}") from None
+    return cls(config, far_memory, backing, record_trace=record_trace)

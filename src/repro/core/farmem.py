@@ -12,14 +12,21 @@ where `link_free` enforces serialization of request injection on the link
 law behaviour: sustained MLP on the device cannot exceed
 `bandwidth * latency / granularity`.
 
+MLP accounting is closed-form rather than event-driven: since a request is
+in flight on [issue, done), the integral of the in-flight count over [0, T]
+is exactly ``sum_i(min(done_i, T) - issue_i)``, so the model keeps a flat
+ledger of completion times instead of an event heap. A heap exists only in
+``max_inflight`` mode, where injection is coupled to completions
+(device-side queue backpressure).
+
 The same model backs the functional engine (zero-latency mode), the
 cycle-approximate simulator, and the runtime's host-offload tier.
 """
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from dataclasses import dataclass
+from typing import List, Tuple
 
 import numpy as np
 
@@ -48,61 +55,116 @@ class FarMemoryModel:
         self.config = config
         self._link_free = 0.0
         self._rng = np.random.default_rng(config.seed)
-        self._inflight: List[Tuple[float, int]] = []  # (done_time, token) heap
         self._token = 0
+        # completion-time ledger for closed-form MLP accounting
+        self._dones = np.empty(1024, np.float64)
+        self._n_done = 0
+        self._sum_issue = 0.0
+        # event heap, used only in max_inflight (backpressure) mode
+        self._inflight: List[Tuple[float, int]] = []
         # stats
         self.requests = 0
         self.bytes_moved = 0
-        self.mlp_area = 0.0      # integral of in-flight count over time
-        self._last_t = 0.0
 
     # -- accounting ---------------------------------------------------------
-    def _integrate(self, now: float) -> None:
-        if now > self._last_t:
-            self.mlp_area += len(self._inflight) * (now - self._last_t)
-            self._last_t = now
+    def _record(self, issue_t: float, done: float) -> None:
+        if self._n_done == self._dones.size:
+            self._dones = np.concatenate(
+                [self._dones, np.empty(self._dones.size, np.float64)])
+        self._dones[self._n_done] = done
+        self._n_done += 1
+        self._sum_issue += issue_t
+
+    def _record_batch(self, issue_t: float, done: np.ndarray) -> None:
+        need = self._n_done + done.size
+        if need > self._dones.size:
+            grow = max(self._dones.size * 2, need)
+            self._dones = np.concatenate(
+                [self._dones[:self._n_done],
+                 np.empty(grow - self._n_done, np.float64)])
+        self._dones[self._n_done:need] = done
+        self._n_done = need
+        self._sum_issue += issue_t * done.size
 
     def inflight_at(self, now: float) -> int:
-        while self._inflight and self._inflight[0][0] <= now:
-            self._integrate(self._inflight[0][0])
-            heapq.heappop(self._inflight)
-        return len(self._inflight)
+        """Requests issued at or before `now` that have not completed."""
+        if self.config.max_inflight:
+            while self._inflight and self._inflight[0][0] <= now:
+                heapq.heappop(self._inflight)
+            return len(self._inflight)
+        return int((self._dones[:self._n_done] > now).sum())
 
     def avg_mlp(self, total_time: float) -> float:
-        self.inflight_at(total_time)
-        self._integrate(total_time)
-        return self.mlp_area / max(total_time, 1e-9)
+        area = (float(np.minimum(self._dones[:self._n_done],
+                                 total_time).sum()) - self._sum_issue)
+        return max(area, 0.0) / max(total_time, 1e-9)
 
     # -- request path -------------------------------------------------------
     def issue(self, now: float, size_bytes: int) -> float:
         """Issue a request at `now`; returns absolute completion time."""
         cfg = self.config
-        self.inflight_at(now)
-        self._integrate(now)
         inject_at = max(now, self._link_free)
-        if cfg.max_inflight and len(self._inflight) >= cfg.max_inflight:
-            # device-side queue full: wait for the oldest completion
+        start = now          # when the request starts counting as in flight
+        if cfg.max_inflight and self.inflight_at(now) >= cfg.max_inflight:
+            # device-side queue full: wait for the oldest completion; the
+            # request only occupies an MSHR (counts toward MLP) from then
             oldest = self._inflight[0][0]
             inject_at = max(inject_at, oldest)
             self.inflight_at(inject_at)
-            self._integrate(inject_at)
+            start = inject_at
         serial = size_bytes / cfg.bandwidth_bytes_per_cycle
         self._link_free = inject_at + serial
         lat = cfg.base_latency_cycles
         if cfg.jitter_frac:
             lat *= 1.0 + cfg.jitter_frac * float(self._rng.uniform(-1.0, 1.0))
         done = inject_at + serial + lat
-        self._token += 1
-        heapq.heappush(self._inflight, (done, self._token))
+        if cfg.max_inflight:
+            self._token += 1
+            heapq.heappush(self._inflight, (done, self._token))
+        self._record(start, done)
         self.requests += 1
         self.bytes_moved += size_bytes
         return done
 
+    def issue_batch(self, now: float, sizes: "np.ndarray") -> "np.ndarray":
+        """Vectorized :meth:`issue`: n requests injected back-to-back at `now`.
+
+        Trace-identical to n sequential ``issue(now, size)`` calls — link
+        serialization is a prefix sum over the per-request injection spacing,
+        and jitter draws one length-n uniform vector, which consumes the RNG
+        bitstream exactly like n scalar draws.
+        """
+        sizes = np.asarray(sizes, dtype=np.float64)
+        n = sizes.size
+        if n == 0:
+            return np.empty(0, np.float64)
+        cfg = self.config
+        if cfg.max_inflight:
+            # device-side queue coupling makes injection depend on completions;
+            # keep the scalar path (rare in the sweeps we vectorize)
+            return np.array([self.issue(now, int(s)) for s in sizes],
+                            np.float64)
+        serial = sizes / cfg.bandwidth_bytes_per_cycle
+        inject0 = max(now, self._link_free)
+        injects = inject0 + np.concatenate([[0.0], np.cumsum(serial[:-1])])
+        lat = np.full(n, cfg.base_latency_cycles)
+        if cfg.jitter_frac:
+            lat *= 1.0 + cfg.jitter_frac * self._rng.uniform(-1.0, 1.0, size=n)
+        done = injects + serial + lat
+        self._link_free = inject0 + float(serial.sum())
+        self._token += n
+        self._record_batch(now, done)
+        self.requests += n
+        self.bytes_moved += int(sizes.sum())
+        return done
+
     def reset_stats(self) -> None:
+        """Zero the request/byte/MLP counters. Requests in flight at the
+        reset point stop contributing to MLP (the ledger is cleared)."""
         self.requests = 0
         self.bytes_moved = 0
-        self.mlp_area = 0.0
-        self._last_t = 0.0
+        self._n_done = 0
+        self._sum_issue = 0.0
 
 
 class InstantMemory(FarMemoryModel):
@@ -116,3 +178,9 @@ class InstantMemory(FarMemoryModel):
         self.requests += 1
         self.bytes_moved += size_bytes
         return now
+
+    def issue_batch(self, now: float, sizes: "np.ndarray") -> "np.ndarray":
+        sizes = np.asarray(sizes)
+        self.requests += sizes.size
+        self.bytes_moved += int(sizes.sum()) if sizes.size else 0
+        return np.full(sizes.size, now, np.float64)

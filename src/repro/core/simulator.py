@@ -14,11 +14,15 @@ The paper evaluates on Gem5 (Table 2: 3 GHz 6-wide OoO, 512 ROB, 192 LSQ,
   that covers a fraction of loads for `sequential=True` workloads.
 
 * **AMU / AMU (DMA-mode)** — not a model at all: the *actual* coroutine
-  ports of the benchmarks execute against the timed
-  :class:`~repro.core.engine.AsyncMemoryEngine` (`run_amu`). Execution time,
-  IPC, and MLP fall out of the run. DMA-mode sets `batch_ids=1` and the
-  per-request descriptor/doorbell cost, reproducing the external-engine
-  ablation.
+  ports of the benchmarks execute against the timed engine (`run_amu`).
+  Execution time, IPC, and MLP fall out of the run. DMA-mode sets
+  `batch_ids=1` and the per-request descriptor/doorbell cost, reproducing
+  the external-engine ablation. The `engine=` knob picks the scalar
+  per-event oracle (:class:`~repro.core.engine.AsyncMemoryEngine`) or the
+  vectorized batched path
+  (:class:`~repro.core.engine.BatchedAsyncMemoryEngine` +
+  :class:`~repro.core.coroutines.BatchScheduler`), which are proven
+  trace-equivalent by tests/test_batched_engine.py.
 
 Calibration: the free constants (instruction counts per iteration, coroutine
 switch cost, store-buffer depth) were tuned once against the paper's headline
@@ -34,9 +38,9 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.configs.base import EngineConfig
-from repro.core.coroutines import CostModel, Scheduler
+from repro.core.coroutines import SCHEDULER_KINDS, CostModel, Scheduler
 from repro.core.disambiguation import CuckooAddressSet
-from repro.core.engine import AsyncMemoryEngine
+from repro.core.engine import AsyncMemoryEngine, make_engine
 from repro.core.farmem import FarMemoryConfig, FarMemoryModel
 from repro.core.workloads import (WORKLOADS, IterationProfile,
                                   WorkloadInstance, WorkloadSpec)
@@ -200,7 +204,21 @@ def simulate_window(profile: IterationProfile, iters: int, latency_us: float,
 def run_amu(spec: WorkloadSpec, latency_us: float, dma_mode: bool = False,
             seed: int = 0, llvm_mode: bool = False,
             engine_config: Optional[EngineConfig] = None,
-            verify: bool = True) -> Dict[str, float]:
+            verify: bool = True, engine: str = "scalar") -> Dict[str, float]:
+    """Run the real coroutine port of `spec` against the timed engine.
+
+    `engine=` selects the execution path: ``"scalar"`` is the per-event
+    heapq oracle (`AsyncMemoryEngine` + `Scheduler`), ``"batched"`` the
+    vectorized SoA engine with the batch-stepped runtime loop
+    (`BatchedAsyncMemoryEngine` + `BatchScheduler`), fast enough for the
+    full latency x queue-depth paper sweeps on CPU. The engines are
+    trace-identical under a fixed scheduler (tests/test_batched_engine.py);
+    the batch-stepped scheduler's coarser interleaving shifts timing stats
+    by ~1%, so results are equivalent, not bit-identical, across the knob.
+    """
+    if engine not in SCHEDULER_KINDS:
+        raise KeyError(f"unknown engine {engine!r}; "
+                       f"known: {sorted(SCHEDULER_KINDS)}")
     inst = spec.build(seed)
     ecfg = engine_config or inst.engine_config
     if dma_mode:
@@ -215,7 +233,7 @@ def run_amu(spec: WorkloadSpec, latency_us: float, dma_mode: bool = False,
             ecfg = replace(ecfg, batch_ids=1)
     far = FarMemoryModel(far_config(latency_us,
                                     granularity=ecfg.granularity))
-    engine = AsyncMemoryEngine(ecfg, far, inst.mem)
+    eng = make_engine(engine, ecfg, far, inst.mem)
     cost = CostModel()
     if llvm_mode:
         # compiler-lowered loop: no coroutine frame save/restore, fewer
@@ -223,8 +241,8 @@ def run_amu(spec: WorkloadSpec, latency_us: float, dma_mode: bool = False,
         cost = replace(cost, switch_insts=20, switch_stall_cycles=55.0,
                        ami_issue_insts=6, getfin_insts=6)
     disamb = CuckooAddressSet() if inst.disambiguation else None
-    sched = Scheduler(engine, cost=cost, disambiguator=disamb,
-                      dma_mode=dma_mode)
+    sched = SCHEDULER_KINDS[engine](eng, cost=cost, disambiguator=disamb,
+                                    dma_mode=dma_mode)
 
     if hasattr(inst, "make_round_tasks"):            # BFS: level-synchronous
         frontier = [inst.root]                       # type: ignore[attr-defined]
@@ -234,10 +252,10 @@ def run_amu(spec: WorkloadSpec, latency_us: float, dma_mode: bool = False,
             frontier = sorted(inst.next_frontier)    # type: ignore
     else:
         sched.run(inst.tasks)
-    engine.drain()
-    engine.check_invariants()
+    eng.drain()
+    eng.check_invariants()
     stats = sched.summary()
-    stats["verified"] = bool(inst.verify(engine.mem)) if verify else None
+    stats["verified"] = bool(inst.verify(eng.mem)) if verify else None
     stats["units"] = inst.units
     return stats
 

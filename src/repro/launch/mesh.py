@@ -5,17 +5,25 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    """`axis_types=` (and `jax.sharding.AxisType`) only exist on newer jax;
+    older releases default every axis to Auto, which is what we want."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 16x16 = 256 chips ("data", "model").
     Multi-pod: 2x16x16 = 512 chips ("pod", "data", "model")."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_debug_mesh(devices: int = 8):
     """Small mesh for CPU tests: (devices//2, 2) ("data", "model")."""
     assert devices % 2 == 0
-    return jax.make_mesh((devices // 2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((devices // 2, 2), ("data", "model"))

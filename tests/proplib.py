@@ -1,0 +1,69 @@
+"""Property-testing front-end: real `hypothesis` when installed, otherwise a
+seeded-random fallback with the same surface (`given`, `settings`, `st`).
+
+The fallback draws a fixed number of examples from a deterministic RNG per
+test, so property tests still run (with less shrinking power) on machines
+without the dev dependencies — `pip install -r requirements-dev.txt` gets
+the real engine back.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 25
+    _FALLBACK_SEED = 0x5EED
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _St:
+        """Seeded stand-ins for the `strategies` functions the tests use."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[rng.integers(0, len(seq))])
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elem.draw(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+    st = _St()
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kw):
+                rng = np.random.default_rng(_FALLBACK_SEED)
+                for _ in range(_FALLBACK_EXAMPLES):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kw)
+            # strategy-drawn params must not look like pytest fixtures
+            sig = inspect.signature(fn)
+            params = [p for name, p in sig.parameters.items()
+                      if name not in strategies]
+            del wrapper.__wrapped__
+            wrapper.__signature__ = sig.replace(parameters=params)
+            return wrapper
+        return deco
+
+    def settings(**_kw):
+        return lambda fn: fn

@@ -1,0 +1,282 @@
+"""Differential harness: `BatchedAsyncMemoryEngine` vs the scalar oracle.
+
+The scalar `AsyncMemoryEngine` is the reference implementation; the batched
+engine must be **trace-identical** to it — same request IDs, same done-times,
+same SPM/far-memory bytes, same stats — both call-for-call (the same scalar
+AMI sequence applied to both) and for the batch entry points
+(`aload_batch`/`astore_batch`/`getfin_all`, which must be state-equivalent
+to the scalar op sequence they replace). On top of that, the batch-stepped
+`BatchScheduler` must run every workload port to a verified result and keep
+the FIFO disambiguation hand-off.
+
+`hypothesis` optional — tests/proplib.py falls back to seeded-random
+example generation.
+"""
+import numpy as np
+import pytest
+from proplib import given, settings, st
+
+from repro.configs.base import EngineConfig
+from repro.core import simulator as sim
+from repro.core.coroutines import (Acquire, Aload, BatchScheduler, Cost,
+                                   Release, Scheduler)
+from repro.core.disambiguation import CuckooAddressSet
+from repro.core.engine import (AsyncMemoryEngine, BatchedAsyncMemoryEngine,
+                               SpmOverflow, make_engine)
+from repro.core.farmem import FarMemoryConfig, FarMemoryModel, InstantMemory
+from repro.core.workloads import WORKLOADS
+
+
+def _far(kind: str, latency_us: float = 1.0):
+    if kind == "instant":
+        return InstantMemory()
+    return FarMemoryModel(FarMemoryConfig.from_latency_us(latency_us))
+
+
+def _pair(qlen=16, granularity=8, mem_kind="timed", latency_us=1.0,
+          spm_bytes=64 * 1024, batch_ids=31):
+    """A (scalar, batched) engine pair with identical config + far memory."""
+    cfg = EngineConfig(queue_length=qlen, granularity=granularity,
+                       spm_bytes=spm_bytes, batch_ids=batch_ids)
+    engines = []
+    for cls in (AsyncMemoryEngine, BatchedAsyncMemoryEngine):
+        engines.append(cls(cfg, _far(mem_kind, latency_us),
+                           record_trace=True))
+    return engines
+
+
+def _assert_identical(a: AsyncMemoryEngine, b: BatchedAsyncMemoryEngine):
+    assert a.trace == b.trace
+    assert a.stats == b.stats
+    assert np.array_equal(a.spm, b.spm)
+    assert np.array_equal(a.mem, b.mem)
+    assert a.outstanding == b.outstanding
+    assert a.finished_pending == b.finished_pending
+    assert a.active_requests == b.active_requests
+
+
+# =========================================================================
+# Call-for-call equivalence: same scalar AMI sequence on both engines
+# =========================================================================
+@given(ops=st.lists(st.sampled_from(["aload", "astore", "getfin", "advance",
+                                     "drainfin"]),
+                    min_size=1, max_size=150),
+       qlen=st.integers(2, 48), seed=st.integers(0, 1 << 20))
+@settings(max_examples=40, deadline=None)
+def test_scalar_ami_trace_identical(ops, qlen, seed):
+    a, b = _pair(qlen=qlen)
+    rng = np.random.default_rng(seed)
+    for e in (a, b):
+        e.mem[:4096] = np.arange(4096, dtype=np.uint8) ^ np.uint8(seed & 0xFF)
+    t = 0.0
+    for op in ops:
+        spm = int(rng.integers(0, 64)) * 8
+        addr = int(rng.integers(0, 500)) * 8
+        for e in (a, b):
+            if op == "aload":
+                e.aload(spm, addr, 8)
+            elif op == "astore":
+                e.astore(spm, addr, 8)
+            elif op == "getfin":
+                e.getfin()
+            elif op == "drainfin":
+                e.getfin_all()
+            else:
+                e.advance(t + 900.0)
+        if op == "advance":
+            t += 900.0
+        a.check_invariants()
+        b.check_invariants()
+    for e in (a, b):
+        e.drain()
+        e.getfin_all()
+    _assert_identical(a, b)
+
+
+@pytest.mark.parametrize("mem_kind", ["instant", "timed"])
+def test_interleaved_load_store_roundtrip(mem_kind):
+    a, b = _pair(qlen=8, mem_kind=mem_kind)
+    pattern = np.arange(256, dtype=np.uint8)
+    for e in (a, b):
+        e.mem[:256] = pattern
+        for i in range(8):
+            e.aload(i * 8, i * 8, 8)
+        e.drain()
+        e.getfin_all()
+        e.spm_write(64, bytes(range(100, 116)))
+        e.astore(64, 1024, 16)
+        e.drain()
+        e.getfin_all()
+    _assert_identical(a, b)
+    assert bytes(a.mem[1024:1040]) == bytes(range(100, 116))
+
+
+# =========================================================================
+# Batch entry points == the scalar op sequence they replace
+# =========================================================================
+@given(rounds=st.integers(1, 12), qlen=st.integers(2, 40),
+       seed=st.integers(0, 1 << 20))
+@settings(max_examples=40, deadline=None)
+def test_batch_ops_equal_scalar_sequence(rounds, qlen, seed):
+    """aload_batch/astore_batch/getfin_all on the batched engine must be
+    state- and stat-equivalent to the scalar loop on the oracle."""
+    a, b = _pair(qlen=qlen)
+    rng = np.random.default_rng(seed)
+    fill = rng.integers(0, 256, 8192).astype(np.uint8)
+    for e in (a, b):
+        e.mem[:8192] = fill
+    t = 0.0
+    for _ in range(rounds):
+        n = int(rng.integers(1, qlen + 4))        # may overshoot the ID pool
+        spm = rng.integers(0, 64, n) * 8
+        addr = rng.integers(0, 1000, n) * 8
+        sizes = np.full(n, 8, np.int64)
+        kind = rng.random() < 0.5
+        if kind:
+            rids_b = b.aload_batch(spm, addr, sizes)
+            rids_a = np.array([a.aload(int(s), int(m), 8)
+                               for s, m in zip(spm, addr)])
+        else:
+            rids_b = b.astore_batch(spm, addr, sizes)
+            rids_a = np.array([a.astore(int(s), int(m), 8)
+                               for s, m in zip(spm, addr)])
+        assert np.array_equal(rids_a, rids_b)
+        t += float(rng.uniform(0, 4000))
+        a.advance(t)
+        b.advance(t)
+        fins_a = a.getfin_all()                   # scalar loop under the hood
+        fins_b = b.getfin_all()                   # vectorized drain
+        assert fins_a == fins_b
+        a.check_invariants()
+        b.check_invariants()
+    for e in (a, b):
+        e.drain()
+        e.getfin_all()
+    _assert_identical(a, b)
+
+
+def test_batch_alloc_failure_zero_padded():
+    """IDs exhaust mid-batch: the tail comes back 0, exactly like the
+    scalar loop, and the stats count each failed allocation."""
+    a, b = _pair(qlen=4)
+    rids_b = b.aload_batch(np.zeros(7, np.int64), np.arange(7) * 8,
+                           np.full(7, 8))
+    rids_a = np.array([a.aload(0, i * 8, 8) for i in range(7)])
+    assert np.array_equal(rids_a, rids_b)
+    assert (rids_b[:4] > 0).all() and (rids_b[4:] == 0).all()
+    assert a.stats == b.stats
+    assert b.stats["alloc_fail"] == 3
+
+
+def test_batch_spm_overflow_raises():
+    _, b = _pair(qlen=8)
+    with pytest.raises(SpmOverflow):
+        b.aload_batch(np.array([0, b.spm_data_bytes - 4]),
+                      np.array([0, 0]), np.array([8, 8]))
+    # failed batch must not leak IDs
+    b.check_invariants()
+
+
+@given(qlen=st.integers(2, 32), extra=st.integers(0, 8))
+@settings(max_examples=25, deadline=None)
+def test_id_conservation_under_batch_ops(qlen, extra):
+    _, b = _pair(qlen=qlen)
+    n = qlen + extra
+    b.aload_batch(np.zeros(n, np.int64), np.arange(n) * 8, np.full(n, 8))
+    b.check_invariants()
+    b.drain()
+    b.getfin_all()
+    b.check_invariants()
+    assert b.active_requests == 0
+
+
+# =========================================================================
+# Workload-level equivalence: every port, both memory models
+# =========================================================================
+@pytest.mark.parametrize("wl", list(WORKLOADS))
+@pytest.mark.parametrize("mem_kind", ["instant", "timed"])
+def test_workload_trace_identical(wl, mem_kind):
+    """Running the same scheduler + workload against the scalar vs batched
+    engine yields identical request traces, SPM and far-memory contents."""
+    results = []
+    for kind in ("scalar", "batched"):
+        inst = WORKLOADS[wl].build(0)
+        far = _far(mem_kind)
+        eng = make_engine(kind, inst.engine_config, far, inst.mem,
+                          record_trace=True)
+        disamb = CuckooAddressSet() if inst.disambiguation else None
+        sched = Scheduler(eng, disambiguator=disamb)
+        if hasattr(inst, "make_round_tasks"):          # BFS
+            frontier = [inst.root]
+            while frontier:
+                sched.run(inst.make_round_tasks(frontier))
+                frontier = sorted(inst.next_frontier)
+        else:
+            sched.run(inst.tasks)
+        eng.drain()
+        eng.check_invariants()
+        results.append((eng, inst, sched.t))
+    (a, inst_a, t_a), (b, inst_b, t_b) = results
+    assert a.trace == b.trace
+    assert a.stats == b.stats
+    assert np.array_equal(a.spm, b.spm)
+    assert np.array_equal(a.mem, b.mem)
+    assert t_a == t_b
+    assert inst_a.verify(a.mem)
+    assert inst_b.verify(b.mem)
+
+
+def test_batch_scheduler_verified_end_to_end():
+    """Spot-check the batch-stepped runtime loop end-to-end through
+    `sim.run` (full coverage: tests/test_simulator.py runs every workload
+    with engine="batched")."""
+    out = sim.run("GUPS", "amu", 1.0, engine="batched")
+    assert out["verified"]
+    assert out["mlp"] > 5
+
+
+# =========================================================================
+# FIFO Acquire/Release ordering under the batch scheduler
+# =========================================================================
+@pytest.mark.parametrize("sched_cls", [Scheduler, BatchScheduler])
+def test_acquire_release_fifo_order(sched_cls):
+    far = FarMemoryModel(FarMemoryConfig.from_latency_us(1.0))
+    eng = BatchedAsyncMemoryEngine(
+        EngineConfig(queue_length=32, granularity=8), far)
+    grant_order = []
+
+    def task(i):
+        yield Cost(insts=i)                       # stagger arrival slightly
+        yield Acquire(0x1000)
+        grant_order.append(i)
+        yield Aload(0, 8 * i, 8)                  # hold across a far access
+        yield Release(0x1000)
+
+    sched = sched_cls(eng, disambiguator=CuckooAddressSet())
+    sched.run([task(i) for i in range(12)])
+    assert grant_order == sorted(grant_order), grant_order
+    assert len(grant_order) == 12
+
+
+@given(ncontend=st.integers(2, 16), seed=st.integers(0, 1 << 16))
+@settings(max_examples=15, deadline=None)
+def test_acquire_release_no_lost_waiters_batch(ncontend, seed):
+    """Contending tasks on a shared block all complete under the batch
+    scheduler; nobody is lost in the waiter hand-off."""
+    rng = np.random.default_rng(seed)
+    far = FarMemoryModel(FarMemoryConfig.from_latency_us(
+        float(rng.uniform(0.1, 3.0))))
+    eng = BatchedAsyncMemoryEngine(
+        EngineConfig(queue_length=16, granularity=8), far)
+    done = []
+
+    def task(i, addr):
+        yield Acquire(addr)
+        yield Aload(0, 8 * (i % 64), 8)
+        yield Release(addr)
+        done.append(i)
+
+    addrs = rng.integers(0, 3, ncontend) * 0x2000   # heavy contention
+    sched = BatchScheduler(eng, disambiguator=CuckooAddressSet())
+    sched.run([task(i, int(addrs[i])) for i in range(ncontend)])
+    assert sorted(done) == list(range(ncontend))

@@ -1,7 +1,11 @@
-"""Engine/disambiguation invariants: unit + hypothesis property tests."""
+"""Engine/disambiguation invariants: unit + hypothesis property tests.
+
+`hypothesis` is optional: tests/proplib.py falls back to seeded-random
+example generation when it is not installed (see requirements-dev.txt).
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from proplib import given, settings, st
 
 from repro.configs.base import EngineConfig
 from repro.core.coroutines import (Aload, AloadNoWait, Astore, AwaitRid, Cost,

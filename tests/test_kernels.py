@@ -65,6 +65,7 @@ def test_async_scatter_xor_gups():
     assert bool(jnp.all(out == expect))
 
 
+@pytest.mark.slow
 def test_async_scatter_fuzz():
     rng = np.random.default_rng(7)
     for _ in range(10):

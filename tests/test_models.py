@@ -27,6 +27,7 @@ def make_inputs(cfg, B=2, S=32, seed=0):
     return inputs
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_train_step_smoke(arch):
     cfg = configs.get_smoke_config(arch)
@@ -46,6 +47,7 @@ def test_train_step_smoke(arch):
     assert float(gsq) > 0.0, f"{arch}: zero gradients"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", [a for a in ARCHS
                                   if configs.get_config(a).is_decoder])
 def test_prefill_decode_consistency(arch):

@@ -1,17 +1,28 @@
 """Paper-claims reproduction tests: the calibrated model must reproduce the
 headline numbers within stated tolerances, and every AMU workload port must
-produce bitwise-correct results against its numpy oracle."""
+produce bitwise-correct results against its numpy oracle.
+
+AMU configs run on the batched engine + batch-stepped scheduler (the
+production path for sweeps); tests/test_batched_engine.py pins it to the
+scalar oracle, so the claims hold for both."""
 import numpy as np
 import pytest
 
 from repro.core import simulator as sim
 
 WORKLOADS = list(sim.WORKLOADS)
+ENGINE = "batched"
+
+
+def run(wl, config, latency_us, **kw):
+    if config.startswith("amu"):
+        kw.setdefault("engine", ENGINE)
+    return sim.run(wl, config, latency_us, **kw)
 
 
 @pytest.mark.parametrize("wl", WORKLOADS)
 def test_amu_workloads_verify(wl):
-    out = sim.run(wl, "amu", 1.0)
+    out = run(wl, "amu", 1.0)
     assert out["verified"], f"{wl} produced wrong far-memory contents"
 
 
@@ -19,16 +30,16 @@ def test_table4_gups_baseline_curve():
     """Table 4 CXL row for GUPS: [1.00 1.38 2.54 4.40 8.21 19.83]."""
     paper = {0.1: 1.00, 0.2: 1.38, 0.5: 2.54, 1.0: 4.40, 2.0: 8.21,
              5.0: 19.83}
-    b0 = sim.run("GUPS", "baseline", 0.1)["us"]
+    b0 = run("GUPS", "baseline", 0.1)["us"]
     for lat, want in paper.items():
-        got = sim.run("GUPS", "baseline", lat)["us"] / b0
+        got = run("GUPS", "baseline", lat)["us"] / b0
         assert abs(got - want) / want < 0.10, (lat, got, want)
 
 
 def test_table4_gups_amu_flat():
     """AMU row stays ~flat (0.96..1.03 relative) across 50x latency."""
-    b0 = sim.run("GUPS", "baseline", 0.1)["us"]
-    rel = [sim.run("GUPS", "amu", lat, verify=False)["us"] / b0
+    b0 = run("GUPS", "baseline", 0.1)["us"]
+    rel = [run("GUPS", "amu", lat, verify=False)["us"] / b0
            for lat in (0.1, 0.5, 1.0, 2.0, 5.0)]
     assert 0.85 < min(rel) and max(rel) < 1.35, rel
 
@@ -37,8 +48,8 @@ def test_headline_geomean_speedup():
     """Abstract: 2.42x average speedup @1us (ours within ~1.5x band)."""
     sp = []
     for wl in WORKLOADS:
-        b = sim.run(wl, "baseline", 1.0)["us"]
-        a = sim.run(wl, "amu", 1.0, verify=False)["us"]
+        b = run(wl, "baseline", 1.0)["us"]
+        a = run(wl, "amu", 1.0, verify=False)["us"]
         sp.append(b / a)
     geo = float(np.exp(np.mean(np.log(sp))))
     assert 1.8 < geo < 4.5, geo
@@ -46,8 +57,8 @@ def test_headline_geomean_speedup():
 
 def test_headline_gups_5us():
     """Abstract: 26.86x GUPS speedup @5us with >130 in flight (LLVM port)."""
-    b5 = sim.run("GUPS", "baseline", 5.0)["us"]
-    l5 = sim.run("GUPS", "amu-llvm", 5.0, verify=False)
+    b5 = run("GUPS", "baseline", 5.0)["us"]
+    l5 = run("GUPS", "amu-llvm", 5.0, verify=False)
     speedup = b5 / l5["us"]
     assert 18 < speedup < 35, speedup
     assert l5["mlp"] > 120, l5["mlp"]
@@ -57,10 +68,10 @@ def test_amu_latency_insensitive_vs_baseline():
     """Fig 8's core claim: AMU execution time is ~flat in latency while the
     baseline degrades linearly, for every random-access workload."""
     for wl in ("GUPS", "BS", "HT", "Redis"):
-        a01 = sim.run(wl, "amu", 0.1, verify=False)["us"]
-        a5 = sim.run(wl, "amu", 5.0, verify=False)["us"]
-        b01 = sim.run(wl, "baseline", 0.1)["us"]
-        b5 = sim.run(wl, "baseline", 5.0)["us"]
+        a01 = run(wl, "amu", 0.1, verify=False)["us"]
+        a5 = run(wl, "amu", 5.0, verify=False)["us"]
+        b01 = run(wl, "baseline", 0.1)["us"]
+        b5 = run(wl, "baseline", 5.0)["us"]
         assert a5 / a01 < 6.0, (wl, a5 / a01)        # AMU: mild growth
         assert b5 / b01 > 10.0, (wl, b5 / b01)       # baseline: ~linear
 
@@ -68,41 +79,41 @@ def test_amu_latency_insensitive_vs_baseline():
 def test_mlp_grows_with_latency():
     """Fig 9: AMU MLP scales up as latency grows."""
     for wl in ("GUPS", "BS"):
-        m1 = sim.run(wl, "amu", 0.5, verify=False)["mlp"]
-        m5 = sim.run(wl, "amu", 5.0, verify=False)["mlp"]
+        m1 = run(wl, "amu", 0.5, verify=False)["mlp"]
+        m5 = run(wl, "amu", 5.0, verify=False)["mlp"]
         assert m5 > 1.5 * m1, (wl, m1, m5)
 
 
 def test_amu_beats_dma_mode():
     """Fig 8: in-core AMU beats the external-engine (DMA-mode) ablation."""
     for wl in ("GUPS", "HJ", "Redis"):
-        a = sim.run(wl, "amu", 1.0, verify=False)["us"]
-        d = sim.run(wl, "amu-dma", 1.0, verify=False)["us"]
+        a = run(wl, "amu", 1.0, verify=False)["us"]
+        d = run(wl, "amu-dma", 1.0, verify=False)["us"]
         assert d > 1.2 * a, (wl, a, d)
 
 
 def test_ipc_improves():
     """Fig 10: AMU IPC >> baseline IPC at far-memory latencies."""
     for wl in ("GUPS", "HT"):
-        a = sim.run(wl, "amu", 1.0, verify=False)["ipc"]
-        b = sim.run(wl, "baseline", 1.0)["ipc"]
+        a = run(wl, "amu", 1.0, verify=False)["ipc"]
+        b = run(wl, "baseline", 1.0)["ipc"]
         assert a > 3 * b, (wl, a, b)
 
 
 def test_disambiguation_overhead_bounded_and_declining():
     """Table 5: HJ ~5% flat-ish; HT declines as latency grows."""
-    hj = [sim.run("HJ", "amu", L, verify=False)["disamb_frac"]
+    hj = [run("HJ", "amu", L, verify=False)["disamb_frac"]
           for L in (0.1, 1.0, 5.0)]
     assert all(0.01 < f < 0.12 for f in hj), hj
-    ht01 = sim.run("HT", "amu", 0.1, verify=False)["disamb_frac"]
-    ht5 = sim.run("HT", "amu", 5.0, verify=False)["disamb_frac"]
+    ht01 = run("HT", "amu", 0.1, verify=False)["disamb_frac"]
+    ht5 = run("HT", "amu", 5.0, verify=False)["disamb_frac"]
     assert ht5 < 0.5 * ht01, (ht01, ht5)
 
 
 def test_cxl_ideal_between_baseline_and_amu_random():
     """CXL-Ideal (max MSHRs + BOP) helps but can't reach AMU on random
     access at high latency (the paper's motivating gap)."""
-    b = sim.run("GUPS", "baseline", 5.0)["us"]
-    c = sim.run("GUPS", "cxl-ideal", 5.0)["us"]
-    a = sim.run("GUPS", "amu", 5.0, verify=False)["us"]
+    b = run("GUPS", "baseline", 5.0)["us"]
+    c = run("GUPS", "cxl-ideal", 5.0)["us"]
+    a = run("GUPS", "amu", 5.0, verify=False)["us"]
     assert c <= b and a < c, (b, c, a)

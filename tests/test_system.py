@@ -11,6 +11,10 @@ import sys
 
 import pytest
 
+# Each test spawns a subprocess that jit-compiles on 8 fake CPU devices —
+# minutes of wall clock; opt-in via `pytest -m slow` (nightly CI job).
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ENV = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src"),
        "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
