@@ -59,9 +59,40 @@ def _drive_engine(kind: str, n_requests: int, qlen: int,
     return n_requests / (time.perf_counter() - t0)
 
 
-def engine_driver(n_requests: int = 100_000) -> List[Row]:
+def _drive_workload_port(wl: str, vector: bool, updates: int,
+                         latency_us: float = 1.0) -> float:
+    """Run a workload port through the full BatchScheduler + batched-engine
+    stack; returns far-memory requests retired per wall-clock second. This is
+    the host-side throughput that bounds paper sweeps — `vector=True` runs
+    the AloadVec/AstoreVec port, `vector=False` PR 1's scalar-yield port."""
+    from repro.core.coroutines import BatchScheduler
+    from repro.core.engine import make_engine
+    from repro.core.farmem import FarMemoryConfig, FarMemoryModel
+    from repro.core.workloads import WORKLOADS
+
+    kw = {"vector": True, "vec_chunk": 64} if vector else {}
+    if wl == "GUPS":
+        inst = WORKLOADS[wl].build(0, table_words=1 << 17, updates=updates,
+                                   **kw)
+    else:
+        kw.pop("vec_chunk", None)
+        inst = WORKLOADS[wl].build(0, **kw)
+    far = FarMemoryModel(FarMemoryConfig.from_latency_us(latency_us))
+    eng = make_engine("batched", inst.engine_config, far, inst.mem)
+    sched = BatchScheduler(eng)
+    t0 = time.perf_counter()
+    sched.run(inst.tasks)
+    eng.drain()
+    dt = time.perf_counter() - t0
+    assert inst.verify(eng.mem)
+    return far.requests / dt
+
+
+def engine_driver(n_requests: int = 100_000, smoke: bool = False) -> List[Row]:
     rows: List[Row] = []
-    for qlen in (256, 1024):
+    if smoke:
+        n_requests = 20_000
+    for qlen in ((256,) if smoke else (256, 1024)):
         scalar = _drive_engine("scalar", n_requests, qlen)
         batched = _drive_engine("batched", n_requests, qlen)
         rows.append((f"engine/scalar_driver_q{qlen}", 1e6 / scalar,
@@ -69,6 +100,17 @@ def engine_driver(n_requests: int = 100_000) -> List[Row]:
         rows.append((f"engine/batched_driver_q{qlen}", 1e6 / batched,
                      f"req_per_s={batched:.0f},"
                      f"speedup_vs_scalar={batched / scalar:.2f}x"))
+    # vector-command axis: scalar-yield vs AloadVec ports through the full
+    # scheduler stack (GUPS scaled up so fixed costs don't mask the ratio)
+    updates = 16_384 if smoke else 65_536
+    for wl in (("GUPS",) if smoke else ("GUPS", "STREAM", "IS", "HPCG")):
+        s = _drive_workload_port(wl, vector=False, updates=updates)
+        v = _drive_workload_port(wl, vector=True, updates=updates)
+        rows.append((f"engine/{wl}_sched_scalar_yield", 1e6 / s,
+                     f"req_per_s={s:.0f}"))
+        rows.append((f"engine/{wl}_sched_vector", 1e6 / v,
+                     f"req_per_s={v:.0f},"
+                     f"speedup_vs_scalar_yield={v / s:.2f}x"))
     return rows
 
 

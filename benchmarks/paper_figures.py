@@ -23,10 +23,17 @@ Row = Tuple[str, float, str]
 # which engine produced them. benchmarks.run --engine=... overrides this.
 ENGINE = "batched"
 
+# Run the AloadVec/AstoreVec workload ports (where they exist: GUPS, STREAM,
+# IS, HPCG, BS) instead of the scalar-yield ports. benchmarks.run --vector
+# sets this; vector ports are trace-equivalent (same far-memory traffic,
+# verified results) but sweep several times faster on the host.
+VECTOR = False
+
 
 def _run(wl: str, config: str, latency_us: float, **kw) -> Dict[str, float]:
     if config.startswith("amu"):
         kw.setdefault("engine", ENGINE)
+        kw.setdefault("vector", VECTOR)
     return sim.run(wl, config, latency_us, **kw)
 
 

@@ -2,14 +2,34 @@
 engine-driver throughput + roofline. Prints ``name,us_per_call,derived`` CSV.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--engine scalar|batched]
-                                               [figure ...]
+                                               [--vector] [--smoke]
+                                               [--json PATH] [figure ...]
 (no args -> everything; roofline rows require results/dryrun.jsonl).
 `--engine` picks the timed-engine implementation behind the AMU configs:
 "batched" (default; vectorized, fast sweeps) or "scalar" (per-event oracle).
+`--vector` runs the AloadVec/AstoreVec workload ports where they exist
+(GUPS/STREAM/IS/HPCG/BS) and adds the vector axis to the `engine` suite.
+`--smoke` is the CI regression gate: a shrunken `engine` suite only, which
+FAILS (exit 1) if the batched engine or the vector ports lose their
+speedup floors. `--json PATH` additionally archives the rows as JSON
+(name/us_per_call/derived records) — the nightly job uploads this artifact.
 """
 from __future__ import annotations
 
+import json
 import sys
+
+# CI floors for --smoke (deliberately below the ~6-8x / ~4x seen locally so
+# noisy runners don't flake, but well above a real regression)
+SMOKE_MIN_BATCHED_SPEEDUP = 2.0     # aload_batch driver vs scalar driver
+SMOKE_MIN_VECTOR_SPEEDUP = 1.5      # vector port vs scalar-yield port
+
+
+def _parse_speedup(derived: str, key: str) -> float:
+    for part in derived.split(","):
+        if part.startswith(key + "="):
+            return float(part.split("=")[1].rstrip("x"))
+    return 0.0
 
 
 def main() -> None:
@@ -27,13 +47,33 @@ def main() -> None:
             raise SystemExit(2)
         pf.ENGINE = args[i + 1]
         del args[i:i + 2]
+    if "--vector" in args:
+        pf.VECTOR = True
+        args.remove("--vector")
+    smoke = "--smoke" in args
+    if smoke:
+        args.remove("--smoke")
+    json_path = None
+    if "--json" in args:
+        i = args.index("--json")
+        if i + 1 >= len(args):
+            print("error: --json requires a path", file=sys.stderr)
+            raise SystemExit(2)
+        json_path = args[i + 1]
+        del args[i:i + 2]
 
     suites = dict(pf.ALL_FIGURES)
     suites["kernels"] = kernel_micro
-    suites["engine"] = engine_driver
+    suites["engine"] = lambda: engine_driver(smoke=smoke)
     suites["roofline"] = roofline_rows
 
-    wanted = args or list(suites)
+    # smoke mode: the (shrunken) engine-driver throughput suite always runs,
+    # so the regression gate below can never be vacuously green
+    if smoke:
+        wanted = ["engine"] + [a for a in args if a != "engine"]
+    else:
+        wanted = args or list(suites)
+    collected = []
     print("name,us_per_call,derived")
     for name in wanted:
         if name not in suites:
@@ -41,7 +81,34 @@ def main() -> None:
                   file=sys.stderr)
             continue
         for row_name, us, derived in suites[name]():
+            collected.append({"name": row_name, "us_per_call": us,
+                              "derived": derived})
             print(f'{row_name},{us:.2f},"{derived}"', flush=True)
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(collected, f, indent=1)
+        print(f"# wrote {len(collected)} rows to {json_path}",
+              file=sys.stderr)
+
+    if smoke:
+        failures = []
+        for row in collected:
+            sp = _parse_speedup(row["derived"], "speedup_vs_scalar")
+            if sp and sp < SMOKE_MIN_BATCHED_SPEEDUP:
+                failures.append(f"{row['name']}: batched/scalar {sp:.2f}x "
+                                f"< {SMOKE_MIN_BATCHED_SPEEDUP}x")
+            sp = _parse_speedup(row["derived"], "speedup_vs_scalar_yield")
+            if sp and sp < SMOKE_MIN_VECTOR_SPEEDUP:
+                failures.append(f"{row['name']}: vector/scalar-yield "
+                                f"{sp:.2f}x < {SMOKE_MIN_VECTOR_SPEEDUP}x")
+        if failures:
+            print("SMOKE FAIL: driver-throughput regression:",
+                  file=sys.stderr)
+            for msg in failures:
+                print(f"  {msg}", file=sys.stderr)
+            raise SystemExit(1)
+        print("# smoke: driver-throughput floors held", file=sys.stderr)
 
 
 if __name__ == "__main__":

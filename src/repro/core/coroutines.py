@@ -11,6 +11,15 @@ Python generators stand in for the paper's C++20 coroutines. A task yields
   4. the task reads/writes the returned bytes in SPM with synchronous
      :class:`SpmRead`/:class:`SpmWrite` (short, fixed latency — no misses).
 
+Vector commands (:class:`AloadVec`/:class:`AstoreVec` + :class:`AwaitRids`)
+issue a whole request vector per generator hop: the scheduler dispatches them
+through the engine's ``aload_batch``/``astore_batch`` entry points (true
+vector path on `BatchedAsyncMemoryEngine`, scalar-issue loop on the oracle)
+and charges ONE amortized issue + ID-batch cost per vector — the §4.2
+speculative ID pre-allocation applied at the framework layer. This is what
+removes the per-request Python coroutine round-trip from the loop-parallel
+workload ports.
+
 :class:`Acquire`/:class:`Release` wrap the software memory-disambiguation set
 (Listing 1): conflicting tasks suspend and are resumed in FIFO order when the
 owner releases the block.
@@ -29,6 +38,8 @@ from __future__ import annotations
 from collections import deque
 from dataclasses import dataclass
 from typing import Callable, Deque, Dict, Generator, Iterable, Optional
+
+import numpy as np
 
 from repro.core.disambiguation import CuckooAddressSet
 from repro.core.engine import AsyncEngineBase
@@ -59,6 +70,11 @@ class CostModel:
     # doorbell over the NoC, non-speculative issue)
     dma_descriptor_insts: int = 60
     dma_serialize_cycles: float = 180.0
+    # vector AMI commands (AloadVec/AstoreVec): the paper's speculative ID
+    # pre-allocation means a whole vector pays ONE issue + ID-batch cost
+    # (ami_issue_insts, plus refill_cycles per actual list refill) and only a
+    # small per-element marginal: address append into the request vector.
+    vec_elem_insts: float = 1.5
 
     def insts_to_cycles(self, insts: float) -> float:
         return insts / self.issue_width
@@ -98,6 +114,35 @@ class AstoreNoWait:
 @dataclass(frozen=True)
 class AwaitRid:
     rid: int
+
+
+@dataclass(frozen=True, eq=False)
+class AloadVec:
+    """Vectorized aload: issue ``len(spm)`` far->SPM requests as ONE AMI
+    vector command (§4.2 metadata batching at the framework level). `spm` and
+    `mem` are parallel sequences (lists/tuples/numpy arrays) of SPM offsets
+    and far-memory addresses; `size` is the shared granularity (None -> the
+    engine's configured granularity). The task resumes immediately with a
+    tuple of wait tokens — pair with :class:`AwaitRids` to suspend until the
+    whole vector has completed."""
+    spm: object
+    mem: object
+    size: Optional[int] = None
+
+
+@dataclass(frozen=True, eq=False)
+class AstoreVec:
+    """Vectorized astore (SPM -> far memory); see :class:`AloadVec`."""
+    spm: object
+    mem: object
+    size: Optional[int] = None
+
+
+@dataclass(frozen=True, eq=False)
+class AwaitRids:
+    """Suspend until EVERY token in `rids` has completed (one coroutine
+    resume total — the amortized counterpart of N AwaitRid hops)."""
+    rids: tuple
 
 
 @dataclass(frozen=True)
@@ -157,6 +202,10 @@ class Scheduler:
         self._rid_tok: Dict[int, int] = {}
         self._waiting_tok: Dict[int, Task] = {}
         self._unclaimed: set = set()                # completed tokens, no waiter
+        # vector-command state: tokens already issued for a parked vector
+        # (id(task) -> list), and AwaitRids countdowns (id(task) -> remaining)
+        self._vec_acc: Dict[int, list] = {}
+        self._wait_count: Dict[int, int] = {}
         self._live = 0
 
     # --------------------------------------------------------------- helpers
@@ -165,7 +214,9 @@ class Scheduler:
         self.t += self.cost.insts_to_cycles(insts)
 
     def _issue(self, task: Task, cmd) -> None:
-        """Execute an Aload/Astore[-NoWait] command for `task`."""
+        """Execute an Aload/Astore[-NoWait] or vector issue command."""
+        if isinstance(cmd, (AloadVec, AstoreVec)):
+            return self._issue_vec(task, cmd)
         c = self.cost
         self._tick_insts(c.ami_issue_insts)
         if self.dma_mode:
@@ -190,6 +241,48 @@ class Scheduler:
         else:
             self._waiting_tok[self._tok] = task
 
+    def _issue_vec(self, task: Task, cmd) -> None:
+        """Execute an AloadVec/AstoreVec for `task`: one amortized issue cost,
+        one engine batch call. If the ID pool exhausts mid-vector, the
+        remainder parks (retried as completions free IDs) and the task only
+        resumes once every element has been issued."""
+        c = self.cost
+        n = len(cmd.spm)
+        acc = self._vec_acc.pop(id(task), [])
+        if n == 0:
+            self._results[id(task)] = tuple(acc)
+            self._ready.append(task)
+            return
+        # speculative ID pre-allocation: one issue + ID-batch cost per vector
+        self._tick_insts(c.ami_issue_insts + c.vec_elem_insts * n)
+        if self.dma_mode:
+            # external engines pay descriptor setup + doorbell per request
+            self._tick_insts(c.dma_descriptor_insts * n)
+            self.t += c.dma_serialize_cycles * n
+        self.engine.advance(self.t)
+        refills = self.engine.stats["free_refills"]
+        if isinstance(cmd, AloadVec):
+            rids = self.engine.aload_batch(cmd.spm, cmd.mem, self._vec_sizes(cmd, n))
+        else:
+            rids = self.engine.astore_batch(cmd.spm, cmd.mem, self._vec_sizes(cmd, n))
+        self.t += c.refill_cycles * (self.engine.stats["free_refills"] - refills)
+        k = int(np.count_nonzero(rids))     # allocation fails as a suffix
+        for rid in rids[:k]:
+            self._tok += 1
+            self._rid_tok[int(rid)] = self._tok
+            acc.append(self._tok)
+        if k < n:
+            rest = type(cmd)(cmd.spm[k:], cmd.mem[k:], cmd.size)
+            self._vec_acc[id(task)] = acc
+            self._alloc_parked.append((task, rest))
+        else:
+            self._results[id(task)] = tuple(acc)
+            self._ready.append(task)
+
+    @staticmethod
+    def _vec_sizes(cmd, n: int):
+        return None if cmd.size is None else np.full(n, cmd.size, np.int64)
+
     def _run_task(self, task: Task, send_value=None) -> None:
         """Resume `task`, process the command it yields (if not finished)."""
         c = self.cost
@@ -198,7 +291,8 @@ class Scheduler:
         except StopIteration:
             self._live -= 1
             return
-        if isinstance(cmd, (Aload, Astore, AloadNoWait, AstoreNoWait)):
+        if isinstance(cmd, (Aload, Astore, AloadNoWait, AstoreNoWait,
+                            AloadVec, AstoreVec)):
             self._issue(task, cmd)
         elif isinstance(cmd, AwaitRid):
             if cmd.rid in self._unclaimed:       # cmd.rid is the issue token
@@ -206,6 +300,18 @@ class Scheduler:
                 self._ready.append(task)
             else:
                 self._waiting_tok[cmd.rid] = task
+        elif isinstance(cmd, AwaitRids):
+            remaining = 0
+            for tok in cmd.rids:
+                if tok in self._unclaimed:
+                    self._unclaimed.discard(tok)
+                else:
+                    self._waiting_tok[tok] = task
+                    remaining += 1
+            if remaining:
+                self._wait_count[id(task)] = remaining
+            else:
+                self._ready.append(task)
         elif isinstance(cmd, Cost):
             self._tick_insts(cmd.insts)
             self.t += cmd.cycles
@@ -244,15 +350,23 @@ class Scheduler:
             raise TypeError(f"unknown command {cmd!r}")
 
     def _dispatch_fin(self, rid: int) -> None:
-        """Route a completed request ID to its awaiting task (if any)."""
+        """Route a completed request ID to its awaiting task (if any). A task
+        suspended on AwaitRids only resumes — and only pays the coroutine
+        switch once — when its LAST outstanding token completes."""
         tok = self._rid_tok.pop(rid)
         task = self._waiting_tok.pop(tok, None)
-        if task is not None:
-            self._tick_insts(self.cost.switch_insts)  # resume the awaiter
-            self.t += self.cost.switch_stall_cycles
-            self._ready.append(task)
-        else:
+        if task is None:
             self._unclaimed.add(tok)
+            return
+        cnt = self._wait_count.get(id(task))
+        if cnt is not None:
+            if cnt > 1:
+                self._wait_count[id(task)] = cnt - 1
+                return                       # still waiting on more tokens
+            del self._wait_count[id(task)]
+        self._tick_insts(self.cost.switch_insts)  # resume the awaiter
+        self.t += self.cost.switch_stall_cycles
+        self._ready.append(task)
 
     def _idle_until_completion(self) -> None:
         """Nothing runnable: validate liveness and advance to the next
@@ -326,6 +440,33 @@ class BatchScheduler(Scheduler):
     makes the drain itself a vectorized operation.
     """
 
+    def _dispatch_fins(self, rids) -> None:
+        """Bulk :meth:`_dispatch_fin`: same routing per ID, with the switch
+        costs summed into one clock update (all IDs retire at the same epoch
+        boundary, so incremental vs summed ticks reach the same time)."""
+        pop_rid = self._rid_tok.pop
+        waiting_pop = self._waiting_tok.pop
+        wc = self._wait_count
+        switches = 0
+        for rid in rids:
+            tok = pop_rid(rid)
+            task = waiting_pop(tok, None)
+            if task is None:
+                self._unclaimed.add(tok)
+                continue
+            tid = id(task)
+            cnt = wc.get(tid)
+            if cnt is not None:
+                if cnt > 1:
+                    wc[tid] = cnt - 1
+                    continue
+                del wc[tid]
+            switches += 1
+            self._ready.append(task)
+        if switches:
+            self._tick_insts(self.cost.switch_insts * switches)
+            self.t += self.cost.switch_stall_cycles * switches
+
     def run(self, tasks: Optional[Iterable[Task]] = None) -> dict:
         c = self.cost
         for task in tasks or ():
@@ -337,13 +478,17 @@ class BatchScheduler(Scheduler):
                 rids = self.engine.getfin_all()
                 # one poll per retrieved ID + the terminating empty poll
                 self._tick_insts(c.getfin_insts * (len(rids) + 1))
-                for rid in rids:
-                    self._dispatch_fin(rid)
-                # freed IDs: parked tasks can retry their issues
+                self._dispatch_fins(rids)
+                # freed IDs: parked tasks can retry their issues. Stop as
+                # soon as a retry parks again — the ID pool is exhausted and
+                # every further retry this epoch would issue nothing.
                 retries = min(len(rids), len(self._alloc_parked))
                 for _ in range(retries):
                     ptask, pcmd = self._alloc_parked.popleft()
+                    before = len(self._alloc_parked)
                     self._issue(ptask, pcmd)
+                    if len(self._alloc_parked) > before:
+                        break
             if self._ready:
                 # step every currently-ready task once (snapshot: tasks that
                 # re-queue themselves run again next epoch, after the poll)

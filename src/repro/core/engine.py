@@ -115,6 +115,32 @@ class AsyncEngineBase:
                 return out
             out.append(rid)
 
+    # Batch AMI entry points. The base implementations loop the scalar issue
+    # path, so vector commands (AloadVec/AstoreVec) run against any engine;
+    # BatchedAsyncMemoryEngine overrides them with true vector paths.
+    def aload_batch(self, spm_addrs, mem_addrs, sizes=None) -> np.ndarray:
+        """Vectorized aload: returns rids (0 where ID allocation failed)."""
+        return self._issue_seq(LOAD, spm_addrs, mem_addrs, sizes)
+
+    def astore_batch(self, spm_addrs, mem_addrs, sizes=None) -> np.ndarray:
+        """Vectorized astore: returns rids (0 where ID allocation failed)."""
+        return self._issue_seq(STORE, spm_addrs, mem_addrs, sizes)
+
+    def _issue_seq(self, kind: int, spm_addrs, mem_addrs,
+                   sizes=None) -> np.ndarray:
+        spm_addrs = np.asarray(spm_addrs, np.int64)
+        mem_addrs = np.asarray(mem_addrs, np.int64)
+        n = spm_addrs.size
+        if sizes is None:
+            szs = [None] * n
+        else:
+            szs = [int(s) for s in np.asarray(sizes, np.int64).ravel()]
+        rids = np.zeros(n, np.int64)
+        for i in range(n):
+            rids[i] = self._issue(kind, int(spm_addrs[i]), int(mem_addrs[i]),
+                                  szs[i])
+        return rids
+
     # -------------------------------------------- config registers (Table 1)
     CFG_REGISTERS = ("granularity", "queue_base", "queue_length")
 
@@ -434,21 +460,74 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
                 j += 1
             run = fin[i:j]
             sizes = self._size[run]
+            same_gran = sizes.size > 1 and bool((sizes == sizes[0]).all())
             if kinds[i] == LOAD:
-                if sizes.size > 1 and (sizes == sizes[0]).all():
-                    cols = np.arange(int(sizes[0]))
-                    self.spm[self._spm_a[run][:, None] + cols] = \
-                        self.mem[self._mem_a[run][:, None] + cols]
+                if same_gran:
+                    self._move_loads_same_gran(run, int(sizes[0]))
                 else:
+                    # mixed granularities (or a single request): scalar copies
                     for rid in run:
                         a, m, s = (int(self._spm_a[rid]),
                                    int(self._mem_a[rid]), int(self._size[rid]))
                         self.spm[a:a + s] = self.mem[m:m + s]
             else:
-                for rid in run:
-                    m, s = int(self._mem_a[rid]), int(self._size[rid])
-                    self.mem[m:m + s] = self._store_data[rid]
+                if same_gran:
+                    self._move_stores_same_gran(run, int(sizes[0]))
+                else:
+                    for rid in run:
+                        m, s = int(self._mem_a[rid]), int(self._size[rid])
+                        self.mem[m:m + s] = self._store_data[rid]
             i = j
+
+    def _move_loads_same_gran(self, run: np.ndarray, g: int) -> None:
+        """Same-granularity load retirement: one copy per run instead of
+        O(n*g) fancy-index arithmetic where the access pattern allows.
+
+        Tiers: (1) both sides form one ascending contiguous block -> a single
+        reshaped slice copy (sequential workloads: STREAM/IS blocks); (2) g
+        is a machine word and everything is g-aligned -> one dtype-view
+        gather/scatter of n elements (GUPS-style random words); (3) general
+        same-size 2D fancy gather. In-order fancy assignment keeps
+        last-writer-wins for duplicate destinations within a run.
+        """
+        assert g > 0 and (self._size[run] == g).all(), \
+            "same-granularity fast path fed mixed sizes"
+        spm_a = self._spm_a[run]
+        mem_a = self._mem_a[run]
+        n = run.size
+        d_spm = np.diff(spm_a)
+        if (d_spm == g).all() and (np.diff(mem_a) == g).all():
+            s0, m0 = int(spm_a[0]), int(mem_a[0])
+            self.spm[s0:s0 + n * g] = self.mem[m0:m0 + n * g]
+            return
+        if g in (1, 2, 4, 8) and not ((spm_a % g).any() or (mem_a % g).any()):
+            dt = np.dtype(f"u{g}")
+            sv = self.spm[:(self.spm.size // g) * g].view(dt)
+            mv = self.mem[:(self.mem.size // g) * g].view(dt)
+            sv[spm_a // g] = mv[mem_a // g]
+            return
+        cols = np.arange(g)
+        self.spm[spm_a[:, None] + cols] = self.mem[mem_a[:, None] + cols]
+
+    def _move_stores_same_gran(self, run: np.ndarray, g: int) -> None:
+        """Same-granularity store retirement (payloads captured at issue)."""
+        assert g > 0 and (self._size[run] == g).all(), \
+            "same-granularity fast path fed mixed sizes"
+        mem_a = self._mem_a[run]
+        n = run.size
+        data = np.empty(n * g, np.uint8)
+        for i, rid in enumerate(run):
+            data[i * g:(i + 1) * g] = self._store_data[rid]
+        if (np.diff(mem_a) == g).all():
+            m0 = int(mem_a[0])
+            self.mem[m0:m0 + n * g] = data
+            return
+        if g in (1, 2, 4, 8) and not (mem_a % g).any():
+            dt = np.dtype(f"u{g}")
+            mv = self.mem[:(self.mem.size // g) * g].view(dt)
+            mv[mem_a // g] = data.view(dt)
+            return
+        self.mem[mem_a[:, None] + np.arange(g)] = data.reshape(n, g)
 
     @property
     def outstanding(self) -> int:
@@ -575,9 +654,16 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         ok = np.asarray(got, np.int64)
         rids[:k] = ok
         if kind == STORE:
-            for i in range(k):
-                a, s = int(spm_addrs[i]), int(sizes[i])
-                self._store_data[int(ok[i])] = self.spm[a:a + s].copy()
+            if (sizes[:k] == sizes[0]).all():
+                # same-granularity capture: one fancy gather, row views out
+                g = int(sizes[0])
+                rows = self.spm[spm_addrs[:k, None] + np.arange(g)]
+                for i in range(k):
+                    self._store_data[int(ok[i])] = rows[i]
+            else:
+                for i in range(k):
+                    a, s = int(spm_addrs[i]), int(sizes[i])
+                    self._store_data[int(ok[i])] = self.spm[a:a + s].copy()
         done = self.far.issue_batch(self.now, sizes[:k])
         self._kind[ok] = kind
         self._spm_a[ok] = spm_addrs[:k]

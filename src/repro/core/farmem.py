@@ -75,7 +75,10 @@ class FarMemoryModel:
         self._n_done += 1
         self._sum_issue += issue_t
 
-    def _record_batch(self, issue_t: float, done: np.ndarray) -> None:
+    def _record_batch(self, issue_t, done: np.ndarray) -> None:
+        """Ledger-record a batch. `issue_t` is a scalar (all requests start
+        counting at the same instant) or a per-request array (backpressured
+        admission staggers the MSHR-occupancy start times)."""
         need = self._n_done + done.size
         if need > self._dones.size:
             grow = max(self._dones.size * 2, need)
@@ -84,7 +87,13 @@ class FarMemoryModel:
                  np.empty(grow - self._n_done, np.float64)])
         self._dones[self._n_done:need] = done
         self._n_done = need
-        self._sum_issue += issue_t * done.size
+        if np.ndim(issue_t):
+            # sequential adds keep the ledger bit-identical to n scalar
+            # _record() calls (np.sum's pairwise order differs in float)
+            for v in issue_t:
+                self._sum_issue += float(v)
+        else:
+            self._sum_issue += float(issue_t) * done.size
 
     def inflight_at(self, now: float) -> int:
         """Requests issued at or before `now` that have not completed."""
@@ -140,23 +149,91 @@ class FarMemoryModel:
             return np.empty(0, np.float64)
         cfg = self.config
         if cfg.max_inflight:
-            # device-side queue coupling makes injection depend on completions;
-            # keep the scalar path (rare in the sweeps we vectorize)
-            return np.array([self.issue(now, int(s)) for s in sizes],
-                            np.float64)
+            return self._issue_batch_backpressured(now, sizes)
         serial = sizes / cfg.bandwidth_bytes_per_cycle
         inject0 = max(now, self._link_free)
-        injects = inject0 + np.concatenate([[0.0], np.cumsum(serial[:-1])])
+        # cumsum over [inject0, s0, s1, ...] reproduces the scalar loop's
+        # left-to-right link_free accumulation bit-for-bit
+        injects = np.cumsum(np.concatenate([[inject0], serial[:-1]]))
         lat = np.full(n, cfg.base_latency_cycles)
         if cfg.jitter_frac:
             lat *= 1.0 + cfg.jitter_frac * self._rng.uniform(-1.0, 1.0, size=n)
         done = injects + serial + lat
-        self._link_free = inject0 + float(serial.sum())
+        self._link_free = float(injects[-1]) + float(serial[-1])
         self._token += n
         self._record_batch(now, done)
         self.requests += n
         self.bytes_moved += int(sizes.sum())
         return done
+
+    def _issue_batch_backpressured(self, now: float,
+                                   sizes: "np.ndarray") -> "np.ndarray":
+        """`issue_batch` under ``max_inflight``: chunked admission against the
+        completion heap, time-identical to n sequential :meth:`issue` calls.
+
+        The scalar loop admits requests freely while the device queue has
+        room (each occupies an MSHR from `now`), then couples injection to
+        completions: a backpressured request waits for the oldest in-flight
+        completion, and the pop at its injection time may retire *several*
+        entries, opening room for another admission burst. We replay exactly
+        that alternation, but each admission burst computes its
+        link-serialized injection times, jitter draws, and ledger records as
+        one vector chunk instead of one Python call per request.
+        """
+        cfg = self.config
+        hp = self._inflight
+        n = sizes.size
+        serial = sizes / cfg.bandwidth_bytes_per_cycle
+        dones = np.empty(n, np.float64)
+        starts = np.empty(n, np.float64)
+        i = 0
+        while i < n:
+            # the scalar loop calls inflight_at(now) before every admission
+            while hp and hp[0][0] <= now:
+                heapq.heappop(hp)
+            room = cfg.max_inflight - len(hp)
+            if room > 0:
+                # admission burst: k requests inject back-to-back from
+                # link_free; each counts as in flight from `now`
+                k = min(room, n - i)
+                chunk = serial[i:i + k]
+                inject0 = max(now, self._link_free)
+                # same association as the scalar link_free chain (see above)
+                injects = np.cumsum(np.concatenate([[inject0], chunk[:-1]]))
+                lat = np.full(k, cfg.base_latency_cycles)
+                if cfg.jitter_frac:
+                    lat *= 1.0 + cfg.jitter_frac * self._rng.uniform(
+                        -1.0, 1.0, size=k)
+                dk = injects + chunk + lat
+                self._link_free = float(injects[-1]) + float(chunk[-1])
+                for d in dk:
+                    self._token += 1
+                    heapq.heappush(hp, (float(d), self._token))
+                dones[i:i + k] = dk
+                starts[i:i + k] = now
+                i += k
+            else:
+                # queue full: wait for the oldest completion; the pop at the
+                # injection time may drain several entries (next loop turn
+                # then takes the admission-burst branch)
+                inject_at = max(now, self._link_free, hp[0][0])
+                while hp and hp[0][0] <= inject_at:
+                    heapq.heappop(hp)
+                lat = cfg.base_latency_cycles
+                if cfg.jitter_frac:
+                    lat *= 1.0 + cfg.jitter_frac * float(
+                        self._rng.uniform(-1.0, 1.0))
+                d = inject_at + float(serial[i]) + lat
+                self._link_free = inject_at + float(serial[i])
+                self._token += 1
+                heapq.heappush(hp, (d, self._token))
+                dones[i] = d
+                starts[i] = inject_at
+                i += 1
+        self._record_batch(starts, dones)
+        self.requests += n
+        self.bytes_moved += int(sizes.sum())
+        return dones
 
     def reset_stats(self) -> None:
         """Zero the request/byte/MLP counters. Requests in flight at the

@@ -42,8 +42,9 @@ from repro.core.coroutines import SCHEDULER_KINDS, CostModel, Scheduler
 from repro.core.disambiguation import CuckooAddressSet
 from repro.core.engine import AsyncMemoryEngine, make_engine
 from repro.core.farmem import FarMemoryConfig, FarMemoryModel
-from repro.core.workloads import (WORKLOADS, IterationProfile,
-                                  WorkloadInstance, WorkloadSpec)
+from repro.core.workloads import (VECTOR_WORKLOADS, WORKLOADS,
+                                  IterationProfile, WorkloadInstance,
+                                  WorkloadSpec)
 
 FREQ_GHZ = 3.0
 LINE = 64
@@ -204,7 +205,8 @@ def simulate_window(profile: IterationProfile, iters: int, latency_us: float,
 def run_amu(spec: WorkloadSpec, latency_us: float, dma_mode: bool = False,
             seed: int = 0, llvm_mode: bool = False,
             engine_config: Optional[EngineConfig] = None,
-            verify: bool = True, engine: str = "scalar") -> Dict[str, float]:
+            verify: bool = True, engine: str = "scalar",
+            vector: bool = False) -> Dict[str, float]:
     """Run the real coroutine port of `spec` against the timed engine.
 
     `engine=` selects the execution path: ``"scalar"`` is the per-event
@@ -215,11 +217,19 @@ def run_amu(spec: WorkloadSpec, latency_us: float, dma_mode: bool = False,
     trace-identical under a fixed scheduler (tests/test_batched_engine.py);
     the batch-stepped scheduler's coarser interleaving shifts timing stats
     by ~1%, so results are equivalent, not bit-identical, across the knob.
+
+    `vector=True` runs the workload's vector-command port (AloadVec/
+    AstoreVec batches per generator hop) where one exists
+    (`VECTOR_WORKLOADS`); other workloads silently keep their scalar port —
+    the returned ``stats["vector"]`` records which port actually ran. Vector
+    ports are trace-equivalent to the scalar ports (same far-memory bytes,
+    same verify()), proven by tests/test_batched_engine.py.
     """
     if engine not in SCHEDULER_KINDS:
         raise KeyError(f"unknown engine {engine!r}; "
                        f"known: {sorted(SCHEDULER_KINDS)}")
-    inst = spec.build(seed)
+    use_vector = vector and spec.name in VECTOR_WORKLOADS
+    inst = spec.build(seed, vector=True) if use_vector else spec.build(seed)
     ecfg = engine_config or inst.engine_config
     if dma_mode:
         ecfg = replace(ecfg, batch_ids=1)
@@ -257,6 +267,7 @@ def run_amu(spec: WorkloadSpec, latency_us: float, dma_mode: bool = False,
     stats = sched.summary()
     stats["verified"] = bool(inst.verify(eng.mem)) if verify else None
     stats["units"] = inst.units
+    stats["vector"] = use_vector
     return stats
 
 

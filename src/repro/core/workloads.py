@@ -24,11 +24,19 @@ from typing import Callable, Dict, Iterable, List, Optional, Tuple
 import numpy as np
 
 from repro.configs.base import EngineConfig
-from repro.core.coroutines import (Acquire, Aload, AloadNoWait, Astore,
-                                   AstoreNoWait, AwaitRid, Cost, Release,
-                                   SpmRead, SpmWrite)
+from repro.core.coroutines import (Acquire, Aload, AloadNoWait, AloadVec,
+                                   Astore, AstoreNoWait, AstoreVec, AwaitRid,
+                                   AwaitRids, Cost, Release, SpmRead,
+                                   SpmWrite)
 
 LINE = 64  # baseline cache-line granularity
+
+# Workloads with a vector (AloadVec/AstoreVec) port: the loop-level-parallel
+# benchmarks where each coroutine can issue a whole batch of independent
+# requests per hop (§5.2), plus the BS probe-batch port. Their builders take
+# `vector=True`; the scalar ports stay the default (and the differential
+# oracle — tests pin vector execution to the scalar port's results).
+VECTOR_WORKLOADS = frozenset({"GUPS", "STREAM", "IS", "HPCG", "BS"})
 
 
 def _unique_keys(rng, n: int, lo: int = 1, hi: int = 1 << 40) -> "np.ndarray":
@@ -90,11 +98,20 @@ def _cfg(granularity: int, queue_length: int = 256,
 # GUPS — HPCC RandomAccess: read-modify-write random 8B words (LLP)
 # =========================================================================
 def build_gups(seed: int = 0, table_words: int = 8192, updates: int = 4096,
-               coroutines: int = 256) -> WorkloadInstance:
+               coroutines: int = 256, vector: bool = False,
+               vec_chunk: int = 32, distinct: bool = False) -> WorkloadInstance:
     rng = np.random.default_rng(seed)
     table = rng.integers(0, 1 << 63, size=table_words, dtype=np.uint64)
     mem = table.view(np.uint8).copy()
-    idx = rng.integers(0, table_words, size=updates)
+    if distinct:
+        # conflict-free update set (each slot touched at most once): makes
+        # the final bytes schedule-independent for differential tests
+        if updates > table_words:
+            raise ValueError(f"distinct=True needs updates <= table_words "
+                             f"({updates} > {table_words})")
+        idx = rng.permutation(table_words)[:updates]
+    else:
+        idx = rng.integers(0, table_words, size=updates)
     vals = rng.integers(0, 1 << 63, size=updates, dtype=np.uint64)
 
     def task(c: int, lo: int, hi: int):
@@ -108,8 +125,26 @@ def build_gups(seed: int = 0, table_words: int = 8192, updates: int = 4096,
             yield Astore(spm, addr, 8)
             yield Cost(insts=6)
 
+    def vtask(c: int, lo: int, hi: int):
+        base = c * vec_chunk * 8           # vec_chunk 8B slots per coroutine
+        for k0 in range(lo, hi, vec_chunk):
+            cnt = min(vec_chunk, hi - k0)
+            addrs = idx[k0:k0 + cnt] * 8
+            slots = base + np.arange(cnt) * 8
+            rids = yield AloadVec(slots, addrs, 8)
+            yield AwaitRids(rids)
+            data = yield SpmRead(base, cnt * 8)
+            new = np.frombuffer(data, np.uint64) ^ vals[k0:k0 + cnt]
+            yield SpmWrite(base, new.tobytes())
+            rids = yield AstoreVec(slots, addrs, 8)
+            yield AwaitRids(rids)
+            yield Cost(insts=6 * cnt)
+
+    if vector:
+        coroutines = min(coroutines, 32)
     bounds = np.linspace(0, updates, coroutines + 1).astype(int)
-    tasks = [task(c, bounds[c], bounds[c + 1]) for c in range(coroutines)]
+    mk = vtask if vector else task
+    tasks = [mk(c, bounds[c], bounds[c + 1]) for c in range(coroutines)]
 
     expect = table.copy()
     for k in range(updates):
@@ -121,14 +156,19 @@ def build_gups(seed: int = 0, table_words: int = 8192, updates: int = 4096,
         # HPCC allows racy updates to diverge; conflict-free slots must match
         return bool(np.array_equal(got[conflict_free], expect[conflict_free]))
 
-    return WorkloadInstance("GUPS", mem, tasks, updates, _cfg(8), verify)
+    # vector mode wants every coroutine's whole chunk in flight: size the ID
+    # queue to the aggregate vector demand (parking stays correct but slow)
+    cfg = _cfg(8, queue_length=min(2048, max(256, coroutines * vec_chunk))) \
+        if vector else _cfg(8)
+    return WorkloadInstance("GUPS", mem, tasks, updates, cfg, verify)
 
 
 # =========================================================================
 # STREAM — triad a = b + s*c with large-granularity (512B) aload/astore (LLP)
 # =========================================================================
 def build_stream(seed: int = 0, n: int = 65536, block_doubles: int = 64,
-                 coroutines: int = 32) -> WorkloadInstance:
+                 coroutines: int = 32, vector: bool = False,
+                 vec_chunk: int = 4) -> WorkloadInstance:
     rng = np.random.default_rng(seed)
     b = rng.standard_normal(n)
     c = rng.standard_normal(n)
@@ -155,8 +195,33 @@ def build_stream(seed: int = 0, n: int = 65536, block_doubles: int = 64,
             yield SpmWrite(sb, out.tobytes())
             yield Astore(sb, a_off + off, gran)
 
+    def vtask(coro: int, lo: int, hi: int):
+        # vec_chunk b-slots then vec_chunk c-slots, contiguous per coroutine
+        sb = coro * 2 * vec_chunk * gran
+        sc = sb + vec_chunk * gran
+        for b0 in range(lo, hi, vec_chunk):
+            cnt = min(vec_chunk, hi - b0)
+            offs = np.arange(b0, b0 + cnt) * gran
+            bslots = sb + np.arange(cnt) * gran
+            cslots = sc + np.arange(cnt) * gran
+            rids = yield AloadVec(np.concatenate([bslots, cslots]),
+                                  np.concatenate([b_off + offs, c_off + offs]),
+                                  gran)
+            yield AwaitRids(rids)
+            db = yield SpmRead(sb, cnt * gran)
+            dc = yield SpmRead(sc, cnt * gran)
+            out = (np.frombuffer(db, np.float64)
+                   + s * np.frombuffer(dc, np.float64))
+            yield Cost(insts=2 * block_doubles * cnt)
+            yield SpmWrite(sb, out.tobytes())
+            rids = yield AstoreVec(bslots, a_off + offs, gran)
+            yield AwaitRids(rids)
+
+    if vector:
+        coroutines = min(coroutines, 8)
     bounds = np.linspace(0, blocks, coroutines + 1).astype(int)
-    tasks = [task(i, bounds[i], bounds[i + 1]) for i in range(coroutines)]
+    mk = vtask if vector else task
+    tasks = [mk(i, bounds[i], bounds[i + 1]) for i in range(coroutines)]
     expect = b + s * c
 
     def verify(mem_out: np.ndarray) -> bool:
@@ -170,7 +235,7 @@ def build_stream(seed: int = 0, n: int = 65536, block_doubles: int = 64,
 # BS — binary search over sorted 16B elements (RLP, dependent chase)
 # =========================================================================
 def build_bs(seed: int = 0, n_elems: int = 16384, searches: int = 512,
-             coroutines: int = 256) -> WorkloadInstance:
+             coroutines: int = 256, vector: bool = False) -> WorkloadInstance:
     rng = np.random.default_rng(seed)
     keys = np.sort(_unique_keys(rng, n_elems))
     payload = rng.integers(0, 1 << 63, size=n_elems, dtype=np.uint64)
@@ -196,14 +261,49 @@ def build_bs(seed: int = 0, n_elems: int = 16384, searches: int = 512,
                     break
                 lo, hi = (mid + 1, hi) if k < target else (lo, mid - 1)
 
+    def vtask(c: int, qs: "np.ndarray"):
+        # probe batch: all of this task's searches advance in lock-step —
+        # one AloadVec fetches the current mid element of every live search
+        nq = len(qs)
+        base = c * nq * 16                 # one 16B element slot per search
+        lo = np.zeros(nq, np.int64)
+        hi = np.full(nq, n_elems - 1, np.int64)
+        live = np.ones(nq, bool)
+        while live.any():
+            act = np.nonzero(live)[0]
+            mid = (lo[act] + hi[act]) // 2
+            rids = yield AloadVec(base + act * 16, mid * 16, 16)
+            yield AwaitRids(rids)
+            yield Cost(insts=8 * len(act))
+            for pos, ai in enumerate(act):
+                data = yield SpmRead(int(base + ai * 16), 16)
+                k, v = np.frombuffer(data, np.uint64)
+                target = queries[qs[ai]]
+                if k == target:
+                    found_payload[qs[ai]] = v
+                    live[ai] = False
+                elif k < target:
+                    lo[ai] = mid[pos] + 1
+                else:
+                    hi[ai] = mid[pos] - 1
+                if live[ai] and lo[ai] > hi[ai]:
+                    live[ai] = False
+
+    if vector:
+        coroutines = min(coroutines, 32)   # fewer tasks, each a probe batch
     qsplit = np.array_split(np.arange(searches), coroutines)
-    tasks = [task(c, list(qs)) for c, qs in enumerate(qsplit) if len(qs)]
+    if vector:
+        tasks = [vtask(c, qs) for c, qs in enumerate(qsplit) if len(qs)]
+    else:
+        tasks = [task(c, list(qs)) for c, qs in enumerate(qsplit) if len(qs)]
     expect = payload[np.searchsorted(keys, queries)]
 
     def verify(mem_out: np.ndarray) -> bool:
         return bool(np.array_equal(found_payload, expect))
 
-    return WorkloadInstance("BS", mem, tasks, searches, _cfg(16), verify)
+    cfg = _cfg(16, queue_length=min(1024, max(256, searches))) if vector \
+        else _cfg(16)
+    return WorkloadInstance("BS", mem, tasks, searches, cfg, verify)
 
 
 # =========================================================================
@@ -575,7 +675,8 @@ def build_bfs(seed: int = 0, n_vertices: int = 2048, n_edges: int = 32768,
 # IS — NAS integer sort (bucket counting): sequential key blocks (LLP)
 # =========================================================================
 def build_is(seed: int = 0, n_keys: int = 65536, block: int = 128,
-             coroutines: int = 32, n_buckets: int = 1024) -> WorkloadInstance:
+             coroutines: int = 32, n_buckets: int = 1024,
+             vector: bool = False, vec_chunk: int = 8) -> WorkloadInstance:
     rng = np.random.default_rng(seed)
     keys = rng.integers(0, n_buckets, size=n_keys).astype(np.int32)
     mem = keys.view(np.uint8).copy()
@@ -592,8 +693,23 @@ def build_is(seed: int = 0, n_keys: int = 65536, block: int = 128,
             np.add.at(hist, ks, 1)
             yield Cost(insts=3 * block)
 
+    def vtask(c: int, lo: int, hi: int):
+        base = c * vec_chunk * gran
+        for b0 in range(lo, hi, vec_chunk):
+            cnt = min(vec_chunk, hi - b0)
+            rids = yield AloadVec(base + np.arange(cnt) * gran,
+                                  np.arange(b0, b0 + cnt) * gran, gran)
+            yield AwaitRids(rids)
+            data = yield SpmRead(base, cnt * gran)
+            ks = np.frombuffer(data, np.int32)
+            np.add.at(hist, ks, 1)
+            yield Cost(insts=3 * block * cnt)
+
+    if vector:
+        coroutines = min(coroutines, 8)
     bounds = np.linspace(0, blocks, coroutines + 1).astype(int)
-    tasks = [task(c, bounds[c], bounds[c + 1]) for c in range(coroutines)]
+    mk = vtask if vector else task
+    tasks = [mk(c, bounds[c], bounds[c + 1]) for c in range(coroutines)]
     expect = np.bincount(keys, minlength=n_buckets)
 
     def verify(mem_out: np.ndarray) -> bool:
@@ -606,7 +722,8 @@ def build_is(seed: int = 0, n_keys: int = 65536, block: int = 128,
 # HPCG — sparse matrix-vector product y = A x (LLP; mixed granularity)
 # =========================================================================
 def build_hpcg(seed: int = 0, rows: int = 2048, nnz_per_row: int = 27,
-               coroutines: int = 64) -> WorkloadInstance:
+               coroutines: int = 64, vector: bool = False,
+               vec_rows: int = 4) -> WorkloadInstance:
     rng = np.random.default_rng(seed)
     cols = rng.integers(0, rows, size=(rows, nnz_per_row)).astype(np.int32)
     vals = rng.standard_normal((rows, nnz_per_row))
@@ -653,15 +770,56 @@ def build_hpcg(seed: int = 0, rows: int = 2048, nnz_per_row: int = 27,
             yield SpmWrite(spm, np.float64(acc).tobytes())
             yield Astore(spm, y_off + r * 8, 8)
 
+    def vtask(c: int, lo: int, hi: int):
+        # per-coroutine SPM layout: vec_rows row slots | vec_rows*27 x-slots
+        # | vec_rows y-slots.  Row gather -> one AloadVec per batch of rows.
+        stride = vec_rows * (row_pad + nnz_per_row * 8 + 8)
+        rbase = c * stride
+        xbase = rbase + vec_rows * row_pad
+        ybase = xbase + vec_rows * nnz_per_row * 8
+        for r0 in range(lo, hi, vec_rows):
+            cnt = min(vec_rows, hi - r0)
+            rids = yield AloadVec(rbase + np.arange(cnt) * row_pad,
+                                  (r0 + np.arange(cnt)) * row_pad, row_pad)
+            yield AwaitRids(rids)
+            rcs, rvs = [], []
+            for i in range(cnt):
+                data = yield SpmRead(rbase + i * row_pad, row_pad)
+                rcs.append(np.frombuffer(data[:nnz_per_row * 4], np.int32))
+                rvs.append(np.frombuffer(
+                    data[nnz_per_row * 4:nnz_per_row * 4 + nnz_per_row * 8],
+                    np.float64))
+            cols_flat = np.concatenate(rcs).astype(np.int64)
+            rids = yield AloadVec(xbase + np.arange(cnt * nnz_per_row) * 8,
+                                  x_off + cols_flat * 8, 8)
+            yield AwaitRids(rids)
+            xdata = yield SpmRead(xbase, cnt * nnz_per_row * 8)
+            xv = np.frombuffer(xdata, np.float64)
+            accs = np.empty(cnt)
+            for i in range(cnt):
+                acc = 0.0
+                for j in range(nnz_per_row):   # scalar-port accumulation order
+                    acc += rvs[i][j] * xv[i * nnz_per_row + j]
+                accs[i] = acc
+                yield Cost(insts=4 * nnz_per_row)
+            yield SpmWrite(ybase, accs.tobytes())
+            rids = yield AstoreVec(ybase + np.arange(cnt) * 8,
+                                   y_off + (r0 + np.arange(cnt)) * 8, 8)
+            yield AwaitRids(rids)
+
+    if vector:
+        coroutines = min(coroutines, 8)
     bounds = np.linspace(0, rows, coroutines + 1).astype(int)
-    tasks = [task(c, bounds[c], bounds[c + 1]) for c in range(coroutines)]
+    mk = vtask if vector else task
+    tasks = [mk(c, bounds[c], bounds[c + 1]) for c in range(coroutines)]
     expect = np.einsum("rj,rj->r", vals, x[cols])
 
     def verify(mem_out: np.ndarray) -> bool:
         got = mem_out[y_off:y_off + rows * 8].view(np.float64)
         return bool(np.allclose(got, expect))
 
-    return WorkloadInstance("HPCG", mem, tasks, rows, _cfg(512), verify)
+    cfg = _cfg(512, queue_length=1024) if vector else _cfg(512)
+    return WorkloadInstance("HPCG", mem, tasks, rows, cfg, verify)
 
 
 # =========================================================================

@@ -40,6 +40,10 @@ except ImportError:                                    # pragma: no cover
             return _Strategy(lambda rng: seq[rng.integers(0, len(seq))])
 
         @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
         def lists(elem, min_size=0, max_size=10):
             def draw(rng):
                 n = int(rng.integers(min_size, max_size + 1))

@@ -18,29 +18,31 @@ from proplib import given, settings, st
 
 from repro.configs.base import EngineConfig
 from repro.core import simulator as sim
-from repro.core.coroutines import (Acquire, Aload, BatchScheduler, Cost,
-                                   Release, Scheduler)
+from repro.core.coroutines import (Acquire, Aload, AloadVec, AstoreVec,
+                                   AwaitRids, BatchScheduler, Cost, Release,
+                                   Scheduler, SpmRead, SpmWrite)
 from repro.core.disambiguation import CuckooAddressSet
 from repro.core.engine import (AsyncMemoryEngine, BatchedAsyncMemoryEngine,
                                SpmOverflow, make_engine)
 from repro.core.farmem import FarMemoryConfig, FarMemoryModel, InstantMemory
-from repro.core.workloads import WORKLOADS
+from repro.core.workloads import VECTOR_WORKLOADS, WORKLOADS
 
 
-def _far(kind: str, latency_us: float = 1.0):
+def _far(kind: str, latency_us: float = 1.0, max_inflight: int = 0):
     if kind == "instant":
         return InstantMemory()
-    return FarMemoryModel(FarMemoryConfig.from_latency_us(latency_us))
+    return FarMemoryModel(FarMemoryConfig.from_latency_us(
+        latency_us, max_inflight=max_inflight))
 
 
 def _pair(qlen=16, granularity=8, mem_kind="timed", latency_us=1.0,
-          spm_bytes=64 * 1024, batch_ids=31):
+          spm_bytes=64 * 1024, batch_ids=31, max_inflight=0):
     """A (scalar, batched) engine pair with identical config + far memory."""
     cfg = EngineConfig(queue_length=qlen, granularity=granularity,
                        spm_bytes=spm_bytes, batch_ids=batch_ids)
     engines = []
     for cls in (AsyncMemoryEngine, BatchedAsyncMemoryEngine):
-        engines.append(cls(cfg, _far(mem_kind, latency_us),
+        engines.append(cls(cfg, _far(mem_kind, latency_us, max_inflight),
                            record_trace=True))
     return engines
 
@@ -256,6 +258,275 @@ def test_acquire_release_fifo_order(sched_cls):
     sched.run([task(i) for i in range(12)])
     assert grant_order == sorted(grant_order), grant_order
     assert len(grant_order) == 12
+
+
+# =========================================================================
+# issue_batch under max_inflight: vectorized backpressure must be
+# time-identical to the scalar issue() loop (regression for the silent
+# scalar fallback that made MSHR-limited sweeps slow)
+# =========================================================================
+@given(n=st.integers(1, 120), max_inflight=st.integers(1, 24),
+       jitter=st.sampled_from([0.0, 0.2]), seed=st.integers(0, 1 << 16))
+@settings(max_examples=40, deadline=None)
+def test_issue_batch_max_inflight_time_identical(n, max_inflight, jitter,
+                                                 seed):
+    rng = np.random.default_rng(seed)
+    sizes = rng.choice([8, 64, 512], size=n)
+    cfg = dict(base_latency_cycles=3000.0, bandwidth_bytes_per_cycle=21.3,
+               max_inflight=max_inflight, jitter_frac=jitter, seed=seed)
+    a = FarMemoryModel(FarMemoryConfig(**cfg))
+    b = FarMemoryModel(FarMemoryConfig(**cfg))
+    now = float(rng.uniform(0, 5000))
+    dones_a = np.array([a.issue(now, int(s)) for s in sizes])
+    dones_b = b.issue_batch(now, sizes)
+    assert np.array_equal(dones_a, dones_b)
+    assert a._link_free == b._link_free
+    assert sorted(a._inflight) == sorted(b._inflight)
+    assert a.requests == b.requests and a.bytes_moved == b.bytes_moved
+    t_end = float(dones_a.max()) + 1.0
+    assert a.avg_mlp(t_end) == b.avg_mlp(t_end)
+    assert a.inflight_at(now + 1.0) == b.inflight_at(now + 1.0)
+
+
+def test_issue_batch_max_inflight_across_calls():
+    """Backpressure state (heap + link) must carry correctly across a mix of
+    scalar and batch issues at advancing timestamps."""
+    cfg = dict(base_latency_cycles=1000.0, bandwidth_bytes_per_cycle=8.0,
+               max_inflight=4)
+    a = FarMemoryModel(FarMemoryConfig(**cfg))
+    b = FarMemoryModel(FarMemoryConfig(**cfg))
+    rng = np.random.default_rng(3)
+    now = 0.0
+    for _ in range(12):
+        n = int(rng.integers(1, 9))
+        sizes = rng.choice([8, 64], size=n)
+        da = np.array([a.issue(now, int(s)) for s in sizes])
+        db = b.issue_batch(now, sizes)
+        assert np.array_equal(da, db)
+        now += float(rng.uniform(0, 3000))
+    assert a._link_free == b._link_free
+    assert sorted(a._inflight) == sorted(b._inflight)
+
+
+def test_max_inflight_engine_trace_identical():
+    """End-to-end: the batched engine's batch entry points under an
+    MSHR-limited far memory are trace-identical (incl. done-times) to the
+    scalar oracle — the old fallback is gone, the new path must not diverge."""
+    a, b = _pair(qlen=24, max_inflight=6)
+    rng = np.random.default_rng(11)
+    for e in (a, b):
+        e.mem[:4096] = np.arange(4096, dtype=np.uint8)
+    t = 0.0
+    for _ in range(10):
+        n = int(rng.integers(1, 20))
+        spm = rng.integers(0, 64, n) * 8
+        addr = rng.integers(0, 500, n) * 8
+        if rng.random() < 0.5:
+            rb = b.aload_batch(spm, addr, np.full(n, 8))
+            ra = np.array([a.aload(int(s), int(m), 8)
+                           for s, m in zip(spm, addr)])
+        else:
+            rb = b.astore_batch(spm, addr, np.full(n, 8))
+            ra = np.array([a.astore(int(s), int(m), 8)
+                           for s, m in zip(spm, addr)])
+        assert np.array_equal(ra, rb)
+        t += float(rng.uniform(0, 4000))
+        a.advance(t)
+        b.advance(t)
+        assert a.getfin_all() == b.getfin_all()
+    for e in (a, b):
+        e.drain()
+        e.getfin_all()
+    _assert_identical(a, b)
+
+
+# =========================================================================
+# _move_data fast paths: contiguous / word-gather / mixed-granularity
+# =========================================================================
+@given(seed=st.integers(0, 1 << 16), qlen=st.integers(4, 32),
+       mixed=st.booleans())
+@settings(max_examples=30, deadline=None)
+def test_move_data_granularity_paths(seed, qlen, mixed):
+    """Same-granularity retirement (word-gather + 2D fancy) and the
+    mixed-granularity fallback all match the scalar oracle byte-for-byte,
+    including duplicate destinations (last-writer-wins)."""
+    a, b = _pair(qlen=qlen)
+    rng = np.random.default_rng(seed)
+    fill = rng.integers(0, 256, 8192).astype(np.uint8)
+    for e in (a, b):
+        e.mem[:8192] = fill
+    t = 0.0
+    for _ in range(6):
+        n = int(rng.integers(1, qlen + 1))
+        if mixed:
+            sizes = rng.choice([8, 16, 24], size=n)
+            spm = rng.integers(0, 64, n) * 8
+            addr = rng.integers(0, 500, n) * 8
+        else:
+            sizes = np.full(n, 8)
+            # odd (unaligned) addresses push the same-size path off the
+            # word-gather tier onto the 2D fancy tier
+            spm = rng.integers(0, 400, n) + (0 if rng.random() < 0.5 else 1)
+            addr = rng.integers(0, 4000, n)
+        for e in (a, b):
+            for i in range(n):
+                e.aload(int(spm[i]), int(addr[i]), int(sizes[i]))
+        t += float(rng.uniform(500, 5000))
+        for e in (a, b):
+            e.advance(t)
+            e.getfin_all()
+    for e in (a, b):
+        e.drain()
+        e.getfin_all()
+    _assert_identical(a, b)
+
+
+def test_move_data_contiguous_block_path():
+    """Ascending same-granularity runs retire via the single-slice copy."""
+    a, b = _pair(qlen=32, granularity=64)
+    pattern = np.arange(4096, dtype=np.int64).view(np.uint8)
+    for e in (a, b):
+        e.mem[:pattern.size] = pattern
+        for i in range(16):
+            e.aload(i * 64, i * 64, 64)          # contiguous both sides
+        e.drain()
+        e.getfin_all()
+        e.spm_write(0, bytes(range(64)))
+        for i in range(16):                       # contiguous store run
+            e.astore(0, 8192 + i * 64, 64)
+        e.drain()
+        e.getfin_all()
+    _assert_identical(a, b)
+    assert bytes(a.spm[:64]) == bytes(range(64))
+
+
+# =========================================================================
+# Vector commands: AloadVec/AstoreVec/AwaitRids
+# =========================================================================
+def _run_port(wl: str, vector: bool, mem_kind: str, engine="batched",
+              sched_cls=BatchScheduler, max_inflight=0):
+    """Run a workload port to completion; returns (engine, instance)."""
+    kw = {"vector": True} if vector else {}
+    if wl == "GUPS":
+        kw["distinct"] = True          # conflict-free -> deterministic bytes
+    inst = WORKLOADS[wl].build(0, **kw)
+    far = _far(mem_kind, max_inflight=max_inflight)
+    eng = make_engine(engine, inst.engine_config, far, inst.mem)
+    sched = sched_cls(eng)
+    sched.run(inst.tasks)
+    eng.drain()
+    eng.getfin_all()
+    eng.check_invariants()
+    return eng, inst
+
+
+_scalar_port_cache = {}
+
+
+def _scalar_port_mem(wl: str, mem_kind: str):
+    key = (wl, mem_kind)
+    if key not in _scalar_port_cache:
+        eng, inst = _run_port(wl, vector=False, mem_kind=mem_kind)
+        assert inst.verify(eng.mem)
+        _scalar_port_cache[key] = eng.mem.copy()
+    return _scalar_port_cache[key]
+
+
+@pytest.mark.parametrize("wl", sorted(VECTOR_WORKLOADS))
+@pytest.mark.parametrize("mem_kind", ["instant", "timed"])
+def test_vector_port_matches_scalar_port(wl, mem_kind):
+    """Every vector port must be trace-equivalent to its scalar port: same
+    far-memory bytes, verify() passes (found/hist side-results included)."""
+    ref_mem = _scalar_port_mem(wl, mem_kind)
+    eng, inst = _run_port(wl, vector=True, mem_kind=mem_kind)
+    assert inst.verify(eng.mem)
+    assert np.array_equal(eng.mem, ref_mem)
+
+
+@pytest.mark.parametrize("wl", ["GUPS", "STREAM"])
+def test_vector_port_matches_scalar_port_max_inflight(wl):
+    """Vector ports under an MSHR-limited (max_inflight) far memory — the
+    configuration the old issue_batch fallback served scalar-only."""
+    eng_s, inst_s = _run_port(wl, vector=False, mem_kind="timed",
+                              max_inflight=16)
+    eng_v, inst_v = _run_port(wl, vector=True, mem_kind="timed",
+                              max_inflight=16)
+    assert inst_s.verify(eng_s.mem)
+    assert inst_v.verify(eng_v.mem)
+    assert np.array_equal(eng_v.mem, eng_s.mem)
+
+
+@pytest.mark.parametrize("sched_cls", [Scheduler, BatchScheduler])
+def test_vector_commands_on_scalar_engine(sched_cls):
+    """Vector commands work against the scalar oracle too (base-class
+    scalar-issue fallback), under both runtime loops."""
+    ref_mem = _scalar_port_mem("GUPS", "instant")
+    eng, inst = _run_port("GUPS", vector=True, mem_kind="instant",
+                          engine="scalar", sched_cls=sched_cls)
+    assert inst.verify(eng.mem)
+    assert np.array_equal(eng.mem, ref_mem)
+
+
+@pytest.mark.parametrize("sched_cls", [Scheduler, BatchScheduler])
+def test_vector_partial_allocation_parks_and_recovers(sched_cls):
+    """A vector bigger than the whole ID pool parks its remainder and the
+    task resumes exactly once, after every element has been issued."""
+    far = FarMemoryModel(FarMemoryConfig.from_latency_us(1.0))
+    eng = BatchedAsyncMemoryEngine(
+        EngineConfig(queue_length=4, granularity=8), far)
+    eng.mem[:256] = np.arange(256, dtype=np.uint8)
+    got = {}
+
+    def task():
+        slots = np.arange(16) * 8
+        rids = yield AloadVec(slots, slots, 8)
+        assert len(rids) == 16
+        yield AwaitRids(rids)
+        got["data"] = yield SpmRead(0, 128)
+
+    sched_cls(eng).run([task()])
+    eng.drain()
+    eng.getfin_all()
+    eng.check_invariants()
+    assert got["data"] == bytes(range(128))
+    assert eng.stats["alloc_fail"] > 0
+
+
+def test_await_rids_after_completion():
+    """AwaitRids over tokens that already completed (unclaimed) resumes
+    immediately; mixed claimed/unclaimed resolves exactly once."""
+    eng = BatchedAsyncMemoryEngine(
+        EngineConfig(queue_length=16, granularity=8), InstantMemory())
+    eng.mem[:128] = np.arange(128, dtype=np.uint8)
+    got = {}
+
+    def task():
+        rids = yield AloadVec(np.arange(8) * 8, np.arange(8) * 8, 8)
+        yield Cost(insts=500)            # completions land before the await
+        yield AwaitRids(rids)
+        got["data"] = yield SpmRead(0, 64)
+
+    BatchScheduler(eng).run([task()])
+    assert got["data"] == bytes(range(64))
+
+
+def test_astore_vec_roundtrip():
+    """AstoreVec payloads are captured at issue and land at the right
+    far-memory addresses (scatter, duplicate-free)."""
+    eng = BatchedAsyncMemoryEngine(
+        EngineConfig(queue_length=16, granularity=8), InstantMemory())
+
+    def task():
+        yield SpmWrite(0, bytes(range(64)))
+        rids = yield AstoreVec(np.arange(8) * 8, 1024 + np.arange(8)[::-1] * 8, 8)
+        yield AwaitRids(rids)
+
+    BatchScheduler(eng).run([task()])
+    eng.drain()
+    eng.getfin_all()
+    for i in range(8):
+        expect = bytes(range(i * 8, i * 8 + 8))
+        assert bytes(eng.mem[1024 + (7 - i) * 8:1024 + (7 - i) * 8 + 8]) == expect
 
 
 @given(ncontend=st.integers(2, 16), seed=st.integers(0, 1 << 16))
