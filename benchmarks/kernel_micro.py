@@ -59,27 +59,49 @@ def _drive_engine(kind: str, n_requests: int, qlen: int,
     return n_requests / (time.perf_counter() - t0)
 
 
+# Per-port build kwargs for the scheduler-stack axis. `scale` applies to
+# both ports (same problem); `vec` shapes only the vector/pipelined port
+# (chunk widths and coroutine counts are port properties, not workload
+# size). Chase ports (LL/Redis) run their software-pipelined variant.
+_PORT_SCALE = {
+    "GUPS": dict(table_words=1 << 17),
+    "STREAM": dict(n=1 << 18),
+    "IS": dict(n_keys=1 << 18),
+    "LL": dict(lookups=512, coroutines=64),
+}
+_PORT_VEC = {
+    "GUPS": dict(vec_chunk=64),
+    "STREAM": dict(vec_chunk=64, coroutines=2),
+    "IS": dict(vec_chunk=64, coroutines=4),
+    "HPCG": {},
+    "LL": dict(pipeline_k=16),
+    "Redis": dict(pipeline_k=16),
+}
+
+
 def _drive_workload_port(wl: str, vector: bool, updates: int,
                          latency_us: float = 1.0) -> float:
     """Run a workload port through the full BatchScheduler + batched-engine
     stack; returns far-memory requests retired per wall-clock second. This is
     the host-side throughput that bounds paper sweeps — `vector=True` runs
-    the AloadVec/AstoreVec port, `vector=False` PR 1's scalar-yield port."""
+    the AloadVec/AstoreVec (or pipelined-chase) port, `vector=False` PR 1's
+    scalar-yield port."""
     from repro.core.coroutines import BatchScheduler
+    from repro.core.disambiguation import CuckooAddressSet
     from repro.core.engine import make_engine
     from repro.core.farmem import FarMemoryConfig, FarMemoryModel
     from repro.core.workloads import WORKLOADS
 
-    kw = {"vector": True, "vec_chunk": 64} if vector else {}
+    kw = dict(_PORT_SCALE.get(wl, {}))
     if wl == "GUPS":
-        inst = WORKLOADS[wl].build(0, table_words=1 << 17, updates=updates,
-                                   **kw)
-    else:
-        kw.pop("vec_chunk", None)
-        inst = WORKLOADS[wl].build(0, **kw)
+        kw["updates"] = updates
+    if vector:
+        kw.update(vector=True, **_PORT_VEC.get(wl, {}))
+    inst = WORKLOADS[wl].build(0, **kw)
     far = FarMemoryModel(FarMemoryConfig.from_latency_us(latency_us))
     eng = make_engine("batched", inst.engine_config, far, inst.mem)
-    sched = BatchScheduler(eng)
+    disamb = CuckooAddressSet() if inst.disambiguation else None
+    sched = BatchScheduler(eng, disambiguator=disamb)
     t0 = time.perf_counter()
     sched.run(inst.tasks)
     eng.drain()
@@ -100,10 +122,15 @@ def engine_driver(n_requests: int = 100_000, smoke: bool = False) -> List[Row]:
         rows.append((f"engine/batched_driver_q{qlen}", 1e6 / batched,
                      f"req_per_s={batched:.0f},"
                      f"speedup_vs_scalar={batched / scalar:.2f}x"))
-    # vector-command axis: scalar-yield vs AloadVec ports through the full
-    # scheduler stack (GUPS scaled up so fixed costs don't mask the ratio)
+    # vector-command axis: scalar-yield vs AloadVec/pipelined ports through
+    # the full scheduler stack (GUPS scaled up so fixed costs don't mask the
+    # ratio). The smoke set keeps one representative per port family the CI
+    # gate holds a floor for: GUPS (vector RMW), STREAM/IS (zero-copy block
+    # ports), LL (pipelined chase).
     updates = 16_384 if smoke else 65_536
-    for wl in (("GUPS",) if smoke else ("GUPS", "STREAM", "IS", "HPCG")):
+    wls = (("GUPS", "STREAM", "IS", "LL") if smoke
+           else ("GUPS", "STREAM", "IS", "HPCG", "LL", "Redis"))
+    for wl in wls:
         s = _drive_workload_port(wl, vector=False, updates=updates)
         v = _drive_workload_port(wl, vector=True, updates=updates)
         rows.append((f"engine/{wl}_sched_scalar_yield", 1e6 / s,

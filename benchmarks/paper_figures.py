@@ -23,10 +23,15 @@ Row = Tuple[str, float, str]
 # which engine produced them. benchmarks.run --engine=... overrides this.
 ENGINE = "batched"
 
-# Run the AloadVec/AstoreVec workload ports (where they exist: GUPS, STREAM,
-# IS, HPCG, BS) instead of the scalar-yield ports. benchmarks.run --vector
-# sets this; vector ports are trace-equivalent (same far-memory traffic,
-# verified results) but sweep several times faster on the host.
+# Run the AloadVec/AstoreVec (and software-pipelined chase) workload ports
+# instead of the scalar-yield ports — every workload has one.
+# benchmarks.run --vector sets this. Vector ports are trace-equivalent in
+# memory effects (same far-memory traffic, verified results) and sweep
+# several times faster on the host, but they MODEL the vector-AMI software
+# configuration (one amortized issue per request vector): their simulated
+# times/MLP are a faster machine point than the paper's scalar coroutine
+# port. Record residuals vs the paper from scalar-port sweeps; archive
+# --vector sweeps as the vector-AMI variant.
 VECTOR = False
 
 

@@ -35,6 +35,7 @@ doorbell, no speculative ID batching).
 """
 from __future__ import annotations
 
+import heapq
 from collections import deque
 from dataclasses import dataclass
 from typing import Callable, Deque, Dict, Generator, Iterable, Optional
@@ -122,12 +123,17 @@ class AloadVec:
     vector command (§4.2 metadata batching at the framework level). `spm` and
     `mem` are parallel sequences (lists/tuples/numpy arrays) of SPM offsets
     and far-memory addresses; `size` is the shared granularity (None -> the
-    engine's configured granularity). The task resumes immediately with a
-    tuple of wait tokens — pair with :class:`AwaitRids` to suspend until the
-    whole vector has completed."""
+    engine's configured granularity). With ``wait=False`` the task resumes
+    immediately with a sequence of wait tokens — pair with
+    :class:`AwaitRids` to suspend until the whole vector has completed.
+    ``wait=True`` fuses the two: the task suspends on the whole vector in
+    the same command (identical cost-model charges — AwaitRids itself is
+    free and the coroutine switch is charged at completion dispatch — but
+    one less host-side generator hop per batch)."""
     spm: object
     mem: object
     size: Optional[int] = None
+    wait: bool = False
 
 
 @dataclass(frozen=True, eq=False)
@@ -136,6 +142,7 @@ class AstoreVec:
     spm: object
     mem: object
     size: Optional[int] = None
+    wait: bool = False
 
 
 @dataclass(frozen=True, eq=False)
@@ -155,16 +162,28 @@ class Release:     # software disambiguation: end_access
     addr: int
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, eq=False)
 class SpmWrite:
+    """Synchronous register->SPM store. `data` may be bytes or any
+    C-contiguous ndarray (ports hand back computed arrays without a
+    `.tobytes()` round trip; the cost model charges the same bytes)."""
     spm: int
-    data: bytes
+    data: object
 
 
 @dataclass(frozen=True)
 class SpmRead:
+    """Synchronous SPM->register load. The task receives a READ-ONLY numpy
+    view aliasing live SPM (zero-copy): it observes later SpmWrites and DMA
+    retirements into its range. Ports that need a snapshot across such an
+    overwrite must `.copy()` (or double-buffer their slots); the scalar
+    oracle engine asserts on reads racing in-flight loads."""
     spm: int
     size: int
+
+
+def _nbytes(data) -> int:
+    return data.nbytes if isinstance(data, np.ndarray) else len(data)
 
 
 @dataclass(frozen=True)
@@ -213,6 +232,35 @@ class Scheduler:
         self.insts += insts
         self.t += self.cost.insts_to_cycles(insts)
 
+    # Token bookkeeping hooks — dict-based here (the oracle); BatchScheduler
+    # overrides them with preallocated numpy maps for vectorized dispatch.
+    def _new_token(self, rid: int) -> int:
+        self._tok += 1
+        self._rid_tok[rid] = self._tok
+        return self._tok
+
+    def _new_tokens(self, rids) -> list:
+        """Batch token mint for a successful vector issue (rids all != 0)."""
+        return [self._new_token(int(rid)) for rid in rids]
+
+    def _waiting_count(self) -> int:
+        return len(self._waiting_tok)
+
+    def _await_tokens(self, task: Task, toks) -> None:
+        """Suspend `task` until every token in `toks` completes (tokens that
+        already completed unclaimed are consumed immediately)."""
+        remaining = 0
+        for tok in toks:
+            if tok in self._unclaimed:
+                self._unclaimed.discard(tok)
+            else:
+                self._waiting_tok[tok] = task
+                remaining += 1
+        if remaining:
+            self._wait_count[id(task)] = remaining
+        else:
+            self._ready.append(task)
+
     def _issue(self, task: Task, cmd) -> None:
         """Execute an Aload/Astore[-NoWait] or vector issue command."""
         if isinstance(cmd, (AloadVec, AstoreVec)):
@@ -233,13 +281,12 @@ class Scheduler:
         if rid == 0:
             self._alloc_parked.append((task, cmd))  # queue full: retry later
             return
-        self._tok += 1
-        self._rid_tok[rid] = self._tok
+        tok = self._new_token(rid)
         if isinstance(cmd, (AloadNoWait, AstoreNoWait)):
-            self._results[id(task)] = self._tok  # token back, keep running
+            self._results[id(task)] = tok        # token back, keep running
             self._ready.append(task)
         else:
-            self._waiting_tok[self._tok] = task
+            self._await_tokens(task, (tok,))
 
     def _issue_vec(self, task: Task, cmd) -> None:
         """Execute an AloadVec/AstoreVec for `task`: one amortized issue cost,
@@ -262,26 +309,26 @@ class Scheduler:
         self.engine.advance(self.t)
         refills = self.engine.stats["free_refills"]
         if isinstance(cmd, AloadVec):
-            rids = self.engine.aload_batch(cmd.spm, cmd.mem, self._vec_sizes(cmd, n))
+            rids = self.engine.aload_batch(cmd.spm, cmd.mem, cmd.size)
         else:
-            rids = self.engine.astore_batch(cmd.spm, cmd.mem, self._vec_sizes(cmd, n))
+            rids = self.engine.astore_batch(cmd.spm, cmd.mem, cmd.size)
         self.t += c.refill_cycles * (self.engine.stats["free_refills"] - refills)
         k = int(np.count_nonzero(rids))     # allocation fails as a suffix
-        for rid in rids[:k]:
-            self._tok += 1
-            self._rid_tok[int(rid)] = self._tok
-            acc.append(self._tok)
+        toks = self._new_tokens(rids[:k]) if k else []
         if k < n:
-            rest = type(cmd)(cmd.spm[k:], cmd.mem[k:], cmd.size)
+            acc.extend(toks)
+            rest = type(cmd)(cmd.spm[k:], cmd.mem[k:], cmd.size, cmd.wait)
             self._vec_acc[id(task)] = acc
             self._alloc_parked.append((task, rest))
-        else:
-            self._results[id(task)] = tuple(acc)
-            self._ready.append(task)
-
-    @staticmethod
-    def _vec_sizes(cmd, n: int):
-        return None if cmd.size is None else np.full(n, cmd.size, np.int64)
+            return
+        if acc:                             # parked earlier: stitch the tail
+            acc.extend(toks)
+            toks = tuple(acc)
+        if cmd.wait:                        # fused await: suspend in place
+            self._await_tokens(task, toks)
+        else:                               # tokens straight through (ndarray
+            self._results[id(task)] = toks  # on the batch scheduler, list on
+            self._ready.append(task)        # the oracle)
 
     def _run_task(self, task: Task, send_value=None) -> None:
         """Resume `task`, process the command it yields (if not finished)."""
@@ -294,37 +341,24 @@ class Scheduler:
         if isinstance(cmd, (Aload, Astore, AloadNoWait, AstoreNoWait,
                             AloadVec, AstoreVec)):
             self._issue(task, cmd)
-        elif isinstance(cmd, AwaitRid):
-            if cmd.rid in self._unclaimed:       # cmd.rid is the issue token
-                self._unclaimed.discard(cmd.rid)
-                self._ready.append(task)
-            else:
-                self._waiting_tok[cmd.rid] = task
-        elif isinstance(cmd, AwaitRids):
-            remaining = 0
-            for tok in cmd.rids:
-                if tok in self._unclaimed:
-                    self._unclaimed.discard(tok)
-                else:
-                    self._waiting_tok[tok] = task
-                    remaining += 1
-            if remaining:
-                self._wait_count[id(task)] = remaining
-            else:
-                self._ready.append(task)
-        elif isinstance(cmd, Cost):
-            self._tick_insts(cmd.insts)
-            self.t += cmd.cycles
-            self._ready.append(task)
-        elif isinstance(cmd, SpmWrite):
-            self.t += c.spm_access_cycles + c.spm_byte_cycles * len(cmd.data)
-            self._tick_insts(1 + len(cmd.data) // 8)
-            self.engine.spm_write(cmd.spm, cmd.data)
-            self._ready.append(task)
         elif isinstance(cmd, SpmRead):
             self.t += c.spm_access_cycles + c.spm_byte_cycles * cmd.size
             self._tick_insts(1 + cmd.size // 8)
             self._results[id(task)] = self.engine.spm_read(cmd.spm, cmd.size)
+            self._ready.append(task)
+        elif isinstance(cmd, Cost):
+            self._tick_insts(cmd.insts)
+            self.t += cmd.cycles
+            self._ready.append(task)
+        elif isinstance(cmd, AwaitRid):
+            self._await_tokens(task, (cmd.rid,))  # cmd.rid is the issue token
+        elif isinstance(cmd, AwaitRids):
+            self._await_tokens(task, cmd.rids)
+        elif isinstance(cmd, SpmWrite):
+            nbytes = _nbytes(cmd.data)
+            self.t += c.spm_access_cycles + c.spm_byte_cycles * nbytes
+            self._tick_insts(1 + nbytes // 8)
+            self.engine.spm_write(cmd.spm, cmd.data)
             self._ready.append(task)
         elif isinstance(cmd, Acquire):
             assert self.disamb is not None, "no disambiguator configured"
@@ -371,14 +405,14 @@ class Scheduler:
     def _idle_until_completion(self) -> None:
         """Nothing runnable: validate liveness and advance to the next
         completion (shared deadlock detection for both runtime loops)."""
-        if not (self._waiting_tok or self._alloc_parked):
+        if not (self._waiting_count() or self._alloc_parked):
             raise DeadlockError("live tasks but none ready/waiting")
         next_done = self.engine.next_completion_time
         if next_done is None:
             if self.engine.finished_pending:
                 return                     # drain via getfin next round
             raise DeadlockError(
-                f"{len(self._waiting_tok)} waiting, "
+                f"{self._waiting_count()} waiting, "
                 f"{len(self._alloc_parked)} parked, none outstanding")
         self.t = max(self.t, next_done)
         self.engine.advance(self.t)
@@ -395,7 +429,7 @@ class Scheduler:
             self.spawn(task)
         while self._live > 0:
             # event loop: poll completions first (Fig 4 step 3)
-            if (self._waiting_tok or self._alloc_parked
+            if (self._waiting_count() or self._alloc_parked
                     or self.engine.outstanding or self.engine.finished_pending):
                 self.engine.advance(self.t)
                 self._tick_insts(c.getfin_insts)
@@ -438,57 +472,247 @@ class BatchScheduler(Scheduler):
     only the interleaving — and therefore the Python-level driver overhead —
     differs. Works with either engine; `BatchedAsyncMemoryEngine.getfin_all`
     makes the drain itself a vectorized operation.
+
+    Token routing is a numpy data plane rather than the oracle's dicts: a
+    preallocated ``rid -> token`` array, growable ``token -> waiter-group``
+    / ``token -> completed-unclaimed`` maps, and per-group outstanding
+    counters. :meth:`_dispatch_fins` retires a whole getfin_all epoch in a
+    handful of numpy ops (gather tokens, gather groups, scatter-subtract
+    counters, find the groups that hit zero) instead of per-rid dict pops —
+    the §4.2 metadata-batching idea applied to completion dispatch itself.
     """
 
-    def _dispatch_fins(self, rids) -> None:
-        """Bulk :meth:`_dispatch_fin`: same routing per ID, with the switch
-        costs summed into one clock update (all IDs retire at the same epoch
-        boundary, so incremental vs summed ticks reach the same time)."""
-        pop_rid = self._rid_tok.pop
-        waiting_pop = self._waiting_tok.pop
-        wc = self._wait_count
-        switches = 0
-        for rid in rids:
-            tok = pop_rid(rid)
-            task = waiting_pop(tok, None)
-            if task is None:
-                self._unclaimed.add(tok)
-                continue
-            tid = id(task)
-            cnt = wc.get(tid)
-            if cnt is not None:
-                if cnt > 1:
-                    wc[tid] = cnt - 1
-                    continue
-                del wc[tid]
-            switches += 1
+    _GROW = 1024
+
+    def __init__(self, engine: AsyncEngineBase,
+                 cost: CostModel = CostModel(),
+                 disambiguator: Optional[CuckooAddressSet] = None,
+                 dma_mode: bool = False):
+        super().__init__(engine, cost, disambiguator, dma_mode)
+        # rid -> token map (slot 0 unused; rids are 1-based)
+        self._rid_tok = np.zeros(engine.config.queue_length + 1, np.int64)
+        # token-indexed maps (slot 0 unused; tokens are 1-based)
+        self._tok_group = np.full(self._GROW, -1, np.int64)
+        self._tok_done = np.zeros(self._GROW, bool)
+        self._tok_time = np.zeros(self._GROW, np.float64)
+        # waiter groups: one per suspended task; counters hit 0 -> resume
+        self._group_task: list = []
+        self._group_left = np.zeros(self._GROW, np.int64)
+        self._n_wait_groups = 0
+        self._n_unclaimed = 0            # completed tokens nobody awaits yet
+        # wake planning: each waiting group readies exactly when its LAST
+        # token completes; the idle path jumps the clock straight there
+        # instead of crawling one completion (= one empty epoch) at a time
+        self._wake_heap: list = []
+
+    # ------------------------------------------------- token plumbing hooks
+    def _grow_tok_maps(self) -> None:
+        grow = max(self._tok_group.size, self._tok + self._GROW)
+        self._tok_group = np.concatenate(
+            [self._tok_group, np.full(grow, -1, np.int64)])
+        self._tok_done = np.concatenate(
+            [self._tok_done, np.zeros(grow, bool)])
+        self._tok_time = np.concatenate(
+            [self._tok_time, np.zeros(grow, np.float64)])
+
+    def _new_token(self, rid: int) -> int:
+        self._tok += 1
+        tok = self._tok
+        if rid >= self._rid_tok.size:            # queue_length was resized up
+            self._rid_tok = np.concatenate(
+                [self._rid_tok, np.zeros(rid + 1 - self._rid_tok.size,
+                                         np.int64)])
+        self._rid_tok[rid] = tok
+        if tok >= self._tok_group.size:
+            self._grow_tok_maps()
+        self._tok_group[tok] = -1
+        self._tok_time[tok] = self.engine.done_time(rid)
+        return tok
+
+    def _new_tokens(self, rids) -> list:
+        """Vectorized token mint: tokens are sequential, so a whole vector
+        issue is a handful of fancy-index stores instead of a per-rid loop."""
+        k = len(rids)
+        toks = np.arange(self._tok + 1, self._tok + k + 1)
+        self._tok += k
+        if self._tok >= self._tok_group.size:
+            self._grow_tok_maps()
+        rids = np.asarray(rids, np.int64)
+        if int(rids.max()) >= self._rid_tok.size:    # queue_length resized up
+            self._rid_tok = np.concatenate(
+                [self._rid_tok, np.zeros(int(rids.max()) + 1
+                                         - self._rid_tok.size, np.int64)])
+        self._rid_tok[rids] = toks
+        self._tok_group[toks] = -1
+        self._tok_time[toks] = self.engine.done_times(rids)
+        return toks
+
+    def _waiting_count(self) -> int:
+        return self._n_wait_groups
+
+    # Token maps grow with every token ever minted. At quiesce points — no
+    # request in flight, no waiter, no unclaimed completion, nothing parked,
+    # so no live token reference can exist — the maps recycle, keeping
+    # resident memory bounded by the busiest in-flight window instead of
+    # the total request count of a long sweep.
+    _RECYCLE_AT = 1 << 16
+
+    def _maybe_recycle_tokens(self) -> None:
+        if (self._tok < self._RECYCLE_AT or self._n_wait_groups
+                or self._n_unclaimed or self._alloc_parked
+                or self.engine.active_requests):
+            return
+        self._tok = 0
+        self._tok_group = np.full(self._GROW, -1, np.int64)
+        self._tok_done = np.zeros(self._GROW, bool)
+        self._tok_time = np.zeros(self._GROW, np.float64)
+        self._group_task = []
+        self._group_left = np.zeros(self._GROW, np.int64)
+        self._wake_heap.clear()          # all entries are <= now: stale
+
+    def _idle_until_completion(self) -> None:
+        """Idle step with wake planning: nothing is runnable, so no new
+        issues can occur before some waiter resumes — it is therefore safe
+        (and exact) to jump the clock to the earliest group-ready time (the
+        max done-time of that group's tokens) instead of crawling one
+        completion per epoch. With tasks parked on ID exhaustion, any single
+        completion can unblock them, so fall back to single-stepping."""
+        if not (self._n_wait_groups or self._alloc_parked):
+            raise DeadlockError("live tasks but none ready/waiting")
+        next_done = self.engine.next_completion_time
+        if next_done is None:
+            if self.engine.finished_pending:
+                return                     # drain via getfin next round
+            raise DeadlockError(
+                f"{self._n_wait_groups} waiting, "
+                f"{len(self._alloc_parked)} parked, none outstanding")
+        heap = self._wake_heap
+        while heap and heap[0] <= self.t:  # groups already dispatched
+            heapq.heappop(heap)
+        if self._alloc_parked or not heap:
+            self.t = max(self.t, next_done)
+        else:
+            self.t = max(self.t, heap[0])
+        self.engine.advance(self.t)
+
+    def _new_group(self, task: Task, count: int, wake_time: float) -> int:
+        """Register a waiter group: `task` resumes when `count` of its
+        tokens complete, which wake planning knows happens at `wake_time`."""
+        gid = len(self._group_task)
+        self._group_task.append(task)
+        if gid >= self._group_left.size:
+            self._group_left = np.concatenate(
+                [self._group_left,
+                 np.zeros(max(self._group_left.size, self._GROW), np.int64)])
+        self._group_left[gid] = count
+        self._n_wait_groups += 1
+        heapq.heappush(self._wake_heap, wake_time)
+        return gid
+
+    def _await_tokens(self, task: Task, toks) -> None:
+        if len(toks) == 1:                       # AwaitRid / awaited scalar
+            tok = toks[0]                        # issue: skip array overhead
+            if self._tok_done[tok]:
+                self._tok_done[tok] = False
+                self._n_unclaimed -= 1
+                self._ready.append(task)
+                return
+            self._tok_group[tok] = self._new_group(
+                task, 1, float(self._tok_time[tok]))
+            return
+        toks = np.asarray(toks, np.int64)
+        if toks.size == 0:
             self._ready.append(task)
-        if switches:
-            self._tick_insts(self.cost.switch_insts * switches)
-            self.t += self.cost.switch_stall_cycles * switches
+            return
+        done = self._tok_done[toks]
+        if done.all():
+            self._tok_done[toks] = False         # consume unclaimed tokens
+            self._n_unclaimed -= toks.size
+            self._ready.append(task)
+            return
+        self._tok_done[toks[done]] = False
+        self._n_unclaimed -= int(done.sum())
+        pending = toks[~done]
+        self._tok_group[pending] = self._new_group(
+            task, pending.size, float(self._tok_time[pending].max()))
+
+    def _dispatch_fins(self, rids) -> None:
+        """Vectorized bulk dispatch: route a whole epoch of completed IDs to
+        their waiter groups in O(few numpy ops). Tasks resume in the same
+        order the oracle's per-rid loop would produce (a group becomes ready
+        exactly where its LAST outstanding token sits in `rids`); the switch
+        costs are summed into one clock update, as before."""
+        if not rids:
+            return
+        if len(rids) == 1:                       # sparse epoch: skip the
+            tok = self._rid_tok[rids[0]]         # vector machinery
+            gid = self._tok_group[tok]
+            if gid < 0:
+                self._tok_done[tok] = True
+                self._n_unclaimed += 1
+                return
+            left = self._group_left[gid] - 1
+            self._group_left[gid] = left
+            if left == 0:
+                self._ready.append(self._group_task[gid])
+                self._group_task[gid] = None
+                self._n_wait_groups -= 1
+                self._tick_insts(self.cost.switch_insts)
+                self.t += self.cost.switch_stall_cycles
+            return
+        toks = self._rid_tok[np.asarray(rids, np.int64)]
+        groups = self._tok_group[toks]
+        unclaimed = groups < 0
+        if unclaimed.any():
+            self._tok_done[toks[unclaimed]] = True
+            self._n_unclaimed += int(unclaimed.sum())
+            if unclaimed.all():
+                return
+            groups = groups[~unclaimed]
+        np.subtract.at(self._group_left, groups, 1)
+        # groups hitting zero, ordered by their last occurrence in the epoch
+        uniq, rev_idx = np.unique(groups[::-1], return_index=True)
+        ready_mask = self._group_left[uniq] == 0
+        n_ready = int(ready_mask.sum())
+        if n_ready == 0:
+            return
+        last_pos = groups.size - 1 - rev_idx[ready_mask]
+        for gid in uniq[ready_mask][np.argsort(last_pos, kind="stable")]:
+            self._ready.append(self._group_task[gid])
+            self._group_task[gid] = None
+        self._n_wait_groups -= n_ready
+        self._tick_insts(self.cost.switch_insts * n_ready)
+        self.t += self.cost.switch_stall_cycles * n_ready
 
     def run(self, tasks: Optional[Iterable[Task]] = None) -> dict:
         c = self.cost
         for task in tasks or ():
             self.spawn(task)
         while self._live > 0:
-            if (self._waiting_tok or self._alloc_parked
+            if self._tok >= self._RECYCLE_AT:
+                self._maybe_recycle_tokens()
+            if (self._n_wait_groups or self._alloc_parked
                     or self.engine.outstanding or self.engine.finished_pending):
                 self.engine.advance(self.t)
-                rids = self.engine.getfin_all()
-                # one poll per retrieved ID + the terminating empty poll
-                self._tick_insts(c.getfin_insts * (len(rids) + 1))
-                self._dispatch_fins(rids)
-                # freed IDs: parked tasks can retry their issues. Stop as
-                # soon as a retry parks again — the ID pool is exhausted and
-                # every further retry this epoch would issue nothing.
-                retries = min(len(rids), len(self._alloc_parked))
-                for _ in range(retries):
-                    ptask, pcmd = self._alloc_parked.popleft()
-                    before = len(self._alloc_parked)
-                    self._issue(ptask, pcmd)
-                    if len(self._alloc_parked) > before:
-                        break
+                # poll only when the finished list can be non-empty — the
+                # batch runtime KNOWS (it just advanced the clock), so
+                # epochs between completions skip the drain entirely
+                if self.engine.finished_pending:
+                    rids = self.engine.getfin_all()
+                    # one poll per retrieved ID + the terminating empty poll
+                    self._tick_insts(c.getfin_insts * (len(rids) + 1))
+                    self._dispatch_fins(rids)
+                    # freed IDs: parked tasks can retry their issues. The
+                    # retry budget is the engine's free-ID count, read once
+                    # per epoch: retries stop the moment a retry parks again
+                    # (pool drained mid-vector), so heavy ID exhaustion
+                    # costs O(retries), not O(parked^2) re-park churn.
+                    while self._alloc_parked and self.engine.free_ids:
+                        ptask, pcmd = self._alloc_parked.popleft()
+                        parked_before = len(self._alloc_parked)
+                        self._issue(ptask, pcmd)
+                        if len(self._alloc_parked) > parked_before:
+                            break
             if self._ready:
                 # step every currently-ready task once (snapshot: tasks that
                 # re-queue themselves run again next epoch, after the poll)

@@ -133,6 +133,8 @@ class AsyncEngineBase:
         n = spm_addrs.size
         if sizes is None:
             szs = [None] * n
+        elif np.ndim(sizes) == 0:              # shared granularity
+            szs = [int(sizes)] * n
         else:
             szs = [int(s) for s in np.asarray(sizes, np.int64).ravel()]
         rids = np.zeros(n, np.int64)
@@ -178,26 +180,43 @@ class AsyncEngineBase:
         raise KeyError(reg)
 
     # ------------------------------------------------- synchronous SPM access
-    def spm_write(self, spm_addr: int, data: bytes) -> None:
-        arr = np.frombuffer(data, np.uint8)
-        if spm_addr + arr.size > self.spm_data_bytes:
-            raise SpmOverflow("spm_write outside data area")
+    #
+    # Zero-copy contract: `spm_read` returns a READ-ONLY numpy view aliasing
+    # the live SPM byte array — NOT a snapshot. The view observes every later
+    # `spm_write` and every DMA retirement that lands in its range; a port
+    # that needs the bytes to survive such an overwrite must `.copy()` (or
+    # double-buffer its SPM slots). Views are never writable: all mutation
+    # goes through `spm_write`, which accepts bytes or any C-contiguous
+    # ndarray (so ports can hand back computed arrays without `.tobytes()`).
+    def spm_write(self, spm_addr: int, data) -> None:
+        if isinstance(data, np.ndarray):
+            arr = np.ascontiguousarray(data).reshape(-1).view(np.uint8)
+        else:
+            arr = np.frombuffer(data, np.uint8)
+        self._check_bounds(spm_addr, arr.size, "spm_write")
         self.spm[spm_addr:spm_addr + arr.size] = arr
 
-    def spm_read(self, spm_addr: int, size: int) -> bytes:
-        if spm_addr + size > self.spm_data_bytes:
-            raise SpmOverflow("spm_read outside data area")
-        return self.spm[spm_addr:spm_addr + size].tobytes()
+    def spm_read(self, spm_addr: int, size: int) -> np.ndarray:
+        self._check_bounds(spm_addr, size, "spm_read")
+        view = self.spm[spm_addr:spm_addr + size]
+        view.flags.writeable = False
+        return view
 
-    def _check_bounds(self, spm_addr: int, size: int) -> None:
-        if spm_addr + size > self.spm_data_bytes:
-            raise SpmOverflow(f"SPM access [{spm_addr}, {spm_addr+size}) "
+    def _check_bounds(self, spm_addr: int, size: int,
+                      what: str = "SPM access") -> None:
+        if spm_addr < 0 or size < 0 or spm_addr + size > self.spm_data_bytes:
+            raise SpmOverflow(f"{what} [{spm_addr}, {spm_addr+size}) "
                               f"outside data area of {self.spm_data_bytes}B")
 
     def drain(self) -> None:
         """Advance past every outstanding completion (functional mode helper)."""
         while self.outstanding:
             self.advance(self.next_completion_time)
+
+    @property
+    def free_ids(self) -> int:
+        """IDs currently allocatable (ASMC free list + ALSU cache)."""
+        return len(self._free) + len(self._free_cache)
 
     # subclass responsibilities --------------------------------------------
     def advance(self, now: float) -> None:
@@ -216,6 +235,10 @@ class AsyncEngineBase:
     def done_time(self, rid: int) -> float:
         raise NotImplementedError
 
+    def done_times(self, rids) -> np.ndarray:
+        """Vector :meth:`done_time` (schedulers use it for wake planning)."""
+        return np.array([self.done_time(int(r)) for r in np.ravel(rids)])
+
     @property
     def active_requests(self) -> int:
         """Number of allocated IDs (AMART entries in use)."""
@@ -223,7 +246,15 @@ class AsyncEngineBase:
 
 
 class AsyncMemoryEngine(AsyncEngineBase):
-    """Scalar reference engine — the differential-testing oracle."""
+    """Scalar reference engine — the differential-testing oracle.
+
+    As the oracle it also polices the zero-copy contract: a synchronous SPM
+    access that overlaps the destination of an in-flight LOAD is a data race
+    (the DMA will clobber, or race with, the access) and raises immediately
+    here, so view-aliasing bugs fail loudly in differential tests instead of
+    silently corrupting the batched path. In-flight STOREs don't conflict:
+    their payload was captured at issue.
+    """
 
     def __init__(self, config: EngineConfig,
                  far_memory: Optional[FarMemoryModel] = None,
@@ -261,6 +292,28 @@ class AsyncMemoryEngine(AsyncEngineBase):
     @property
     def next_completion_time(self) -> Optional[float]:
         return self._pending[0][0] if self._pending else None
+
+    # ------------------------------------------- zero-copy race detection
+    def _assert_no_inflight_load_overlap(self, spm_addr: int, size: int,
+                                         what: str) -> None:
+        end = spm_addr + size
+        for _, rid in self._pending:
+            req = self.amart[rid]
+            if (req.kind == LOAD and spm_addr < req.spm_addr + req.size
+                    and req.spm_addr < end):
+                raise AssertionError(
+                    f"{what} [{spm_addr}, {end}) races in-flight aload "
+                    f"rid={rid} -> [{req.spm_addr}, "
+                    f"{req.spm_addr + req.size}); await it first")
+
+    def spm_write(self, spm_addr: int, data) -> None:
+        size = data.nbytes if isinstance(data, np.ndarray) else len(data)
+        self._assert_no_inflight_load_overlap(spm_addr, size, "spm_write")
+        super().spm_write(spm_addr, data)
+
+    def spm_read(self, spm_addr: int, size: int) -> np.ndarray:
+        self._assert_no_inflight_load_overlap(spm_addr, size, "spm_read")
+        return super().spm_read(spm_addr, size)
 
     @property
     def finished_pending(self) -> int:
@@ -409,7 +462,10 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         cap = config.queue_length
         self._free = _IdRing(cap, fill=np.arange(1, cap + 1))
         self._finished = _IdRing(cap)
-        self._free_cache: Deque[int] = deque()
+        # ALSU free-ID cache as an array + cursor (bulk allocation pops a
+        # slice instead of draining a deque element-wise)
+        self._fc = np.empty(0, np.int64)
+        self._fc_head = 0
         self._fin_cache: Deque[int] = deque()
         # SoA AMART, indexed by rid (slot 0 unused — 0 is the failure code)
         self._kind = np.zeros(cap + 1, np.int8)
@@ -486,9 +542,13 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         Tiers: (1) both sides form one ascending contiguous block -> a single
         reshaped slice copy (sequential workloads: STREAM/IS blocks); (2) g
         is a machine word and everything is g-aligned -> one dtype-view
-        gather/scatter of n elements (GUPS-style random words); (3) general
-        same-size 2D fancy gather. In-order fancy assignment keeps
-        last-writer-wins for duplicate destinations within a run.
+        gather/scatter of n elements (GUPS-style random words); (3) both
+        sides decompose into a FEW piecewise-contiguous segments -> one
+        slice copy per segment (vector ports that concatenate several
+        sequential slot windows into one AloadVec, e.g. STREAM's b|c
+        halves); (4) general same-size 2D fancy gather. In-order
+        segment/fancy assignment keeps last-writer-wins for duplicate
+        destinations within a run.
         """
         assert g > 0 and (self._size[run] == g).all(), \
             "same-granularity fast path fed mixed sizes"
@@ -496,7 +556,8 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         mem_a = self._mem_a[run]
         n = run.size
         d_spm = np.diff(spm_a)
-        if (d_spm == g).all() and (np.diff(mem_a) == g).all():
+        d_mem = np.diff(mem_a)
+        if (d_spm == g).all() and (d_mem == g).all():
             s0, m0 = int(spm_a[0]), int(mem_a[0])
             self.spm[s0:s0 + n * g] = self.mem[m0:m0 + n * g]
             return
@@ -505,6 +566,24 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
             sv = self.spm[:(self.spm.size // g) * g].view(dt)
             mv = self.mem[:(self.mem.size // g) * g].view(dt)
             sv[spm_a // g] = mv[mem_a // g]
+            return
+        if g >= 256:          # big blocks: piecewise-contiguous segments
+            starts = np.flatnonzero((d_spm != g) | (d_mem != g)) + 1
+            if starts.size + 1 <= max(1, n // 4):
+                bounds = [0, *starts.tolist(), n]
+                for i in range(len(bounds) - 1):
+                    lo, hi = bounds[i], bounds[i + 1]
+                    s0, m0 = int(spm_a[lo]), int(mem_a[lo])
+                    ln = (hi - lo) * g
+                    self.spm[s0:s0 + ln] = self.mem[m0:m0 + ln]
+                return
+        if g % 8 == 0 and not ((spm_a % 8).any() or (mem_a % 8).any()):
+            # word-aligned scatter (chase nodes): 8x fewer gathered elements
+            w = g // 8
+            sv = self.spm[:(self.spm.size // 8) * 8].view(np.uint64)
+            mv = self.mem[:(self.mem.size // 8) * 8].view(np.uint64)
+            cols = np.arange(w)
+            sv[(spm_a // 8)[:, None] + cols] = mv[(mem_a // 8)[:, None] + cols]
             return
         cols = np.arange(g)
         self.spm[spm_a[:, None] + cols] = self.mem[mem_a[:, None] + cols]
@@ -515,9 +594,9 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
             "same-granularity fast path fed mixed sizes"
         mem_a = self._mem_a[run]
         n = run.size
-        data = np.empty(n * g, np.uint8)
-        for i, rid in enumerate(run):
-            data[i * g:(i + 1) * g] = self._store_data[rid]
+        # one concatenate over the captured row views — no per-rid fill loop
+        data = np.concatenate([self._store_data[rid] for rid in run]) \
+            if n > 1 else self._store_data[int(run[0])]
         if (np.diff(mem_a) == g).all():
             m0 = int(mem_a[0])
             self.mem[m0:m0 + n * g] = data
@@ -526,6 +605,12 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
             dt = np.dtype(f"u{g}")
             mv = self.mem[:(self.mem.size // g) * g].view(dt)
             mv[mem_a // g] = data.view(dt)
+            return
+        if g % 8 == 0 and not (mem_a % 8).any():
+            w = g // 8
+            mv = self.mem[:(self.mem.size // 8) * 8].view(np.uint64)
+            mv[(mem_a // 8)[:, None] + np.arange(w)] = \
+                np.ascontiguousarray(data).view(np.uint64).reshape(n, w)
             return
         self.mem[mem_a[:, None] + np.arange(g)] = data.reshape(n, g)
 
@@ -548,34 +633,45 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
     def done_time(self, rid: int) -> float:
         return float(self._done_t[rid])
 
+    def done_times(self, rids) -> np.ndarray:
+        return self._done_t[np.asarray(rids, np.int64)]
+
     # ----------------------------------------------------------------- AMI
+    @property
+    def free_ids(self) -> int:
+        return len(self._free) + (self._fc.size - self._fc_head)
+
     def _alloc_id(self) -> int:
-        if not self._free_cache:
+        if self._fc_head >= self._fc.size:
             if len(self._free) == 0:
                 self.stats["alloc_fail"] += 1
                 return 0
             n = min(self.config.batch_ids, len(self._free))
-            self._free_cache.extend(self._free.pop_many(n).tolist())
+            self._fc = self._free.pop_many(n)
+            self._fc_head = 0
             self.stats["free_refills"] += 1
-        return self._free_cache.popleft()
+        rid = int(self._fc[self._fc_head])
+        self._fc_head += 1
+        return rid
 
-    def _alloc_ids(self, n: int) -> List[int]:
+    def _alloc_ids(self, n: int) -> np.ndarray:
         """Allocate up to n IDs — state/stat-equivalent to n scalar allocs."""
-        out: List[int] = []
-        take = min(n, len(self._free_cache))
-        for _ in range(take):
-            out.append(self._free_cache.popleft())
+        take = min(n, self._fc.size - self._fc_head)
+        parts = [self._fc[self._fc_head:self._fc_head + take]]
+        self._fc_head += take
         need = n - take
         while need > 0 and len(self._free):
             chunk = min(self.config.batch_ids, len(self._free))
-            got = self._free.pop_many(chunk).tolist()
+            got = self._free.pop_many(chunk)
             self.stats["free_refills"] += 1
             use = min(need, chunk)
-            out.extend(got[:use])
-            self._free_cache.extend(got[use:])
+            parts.append(got[:use])
+            if use < chunk:              # leftover becomes the new cache
+                self._fc = got
+                self._fc_head = use
             need -= use
         self.stats["alloc_fail"] += need
-        return out
+        return parts[0] if len(parts) == 1 else np.concatenate(parts)
 
     def _set_request(self, rid: int, kind: int, spm_addr: int, mem_addr: int,
                      size: int, done: float) -> None:
@@ -635,17 +731,23 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         spm_addrs = np.asarray(spm_addrs, np.int64)
         mem_addrs = np.asarray(mem_addrs, np.int64)
         n = spm_addrs.size
-        if sizes is None:
-            sizes = np.full(n, self.config.granularity, np.int64)
+        if sizes is None or np.ndim(sizes) == 0:
+            # shared granularity (`size or granularity`, like the scalar path)
+            sizes = np.full(n, int(sizes or 0) or self.config.granularity,
+                            np.int64)
         else:
             # match the scalar path's `size or granularity` coercion
             sizes = np.asarray(sizes, np.int64)
             sizes = np.where(sizes == 0, self.config.granularity, sizes)
-        if n and int((spm_addrs + sizes).max()) > self.spm_data_bytes:
-            bad = int(np.argmax(spm_addrs + sizes > self.spm_data_bytes))
-            raise SpmOverflow(
-                f"SPM access [{spm_addrs[bad]}, {spm_addrs[bad]+sizes[bad]}) "
-                f"outside data area of {self.spm_data_bytes}B")
+        if n:
+            bad_mask = ((spm_addrs < 0) | (sizes < 0)
+                        | (spm_addrs + sizes > self.spm_data_bytes))
+            if bad_mask.any():
+                bad = int(np.argmax(bad_mask))
+                raise SpmOverflow(
+                    f"SPM access [{spm_addrs[bad]}, "
+                    f"{spm_addrs[bad] + sizes[bad]}) "
+                    f"outside data area of {self.spm_data_bytes}B")
         got = self._alloc_ids(n)
         k = len(got)
         rids = np.zeros(n, np.int64)
@@ -655,9 +757,15 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         rids[:k] = ok
         if kind == STORE:
             if (sizes[:k] == sizes[0]).all():
-                # same-granularity capture: one fancy gather, row views out
+                # same-granularity capture: one copy, row views out — a
+                # single reshaped slice when the source slots are contiguous
+                # (vector ports), else one fancy gather
                 g = int(sizes[0])
-                rows = self.spm[spm_addrs[:k, None] + np.arange(g)]
+                if k > 1 and (np.diff(spm_addrs[:k]) == g).all():
+                    a0 = int(spm_addrs[0])
+                    rows = self.spm[a0:a0 + k * g].copy().reshape(k, g)
+                else:
+                    rows = self.spm[spm_addrs[:k, None] + np.arange(g)]
                 for i in range(k):
                     self._store_data[int(ok[i])] = rows[i]
             else:
@@ -724,7 +832,8 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         cap = queue_length
         self._free = _IdRing(cap, fill=np.arange(1, cap + 1))
         self._finished = _IdRing(cap)
-        self._free_cache.clear()
+        self._fc = np.empty(0, np.int64)
+        self._fc_head = 0
         self._fin_cache.clear()
         self._kind = np.zeros(cap + 1, np.int8)
         self._spm_a = np.zeros(cap + 1, np.int64)
@@ -742,7 +851,7 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
     def check_invariants(self) -> None:
         """ID conservation: every ID is in exactly one place."""
         pend = self._pend[:self._pend_n].tolist()
-        ids = (self._free.tolist() + list(self._free_cache)
+        ids = (self._free.tolist() + self._fc[self._fc_head:].tolist()
                + list(self._fin_cache) + self._finished.tolist() + pend)
         assert len(ids) == self.config.queue_length, (
             f"ID leak: {len(ids)} != {self.config.queue_length}")

@@ -154,11 +154,17 @@ class FarMemoryModel:
         inject0 = max(now, self._link_free)
         # cumsum over [inject0, s0, s1, ...] reproduces the scalar loop's
         # left-to-right link_free accumulation bit-for-bit
-        injects = np.cumsum(np.concatenate([[inject0], serial[:-1]]))
-        lat = np.full(n, cfg.base_latency_cycles)
+        injects = np.empty(n, np.float64)
+        injects[0] = inject0
+        injects[1:] = serial[:-1]
+        np.cumsum(injects, out=injects)
         if cfg.jitter_frac:
-            lat *= 1.0 + cfg.jitter_frac * self._rng.uniform(-1.0, 1.0, size=n)
-        done = injects + serial + lat
+            lat = cfg.base_latency_cycles * (
+                1.0 + cfg.jitter_frac * self._rng.uniform(-1.0, 1.0, size=n))
+            done = injects + serial + lat
+        else:
+            # scalar broadcast == np.full(n, lat) elementwise, bit-for-bit
+            done = injects + serial + cfg.base_latency_cycles
         self._link_free = float(injects[-1]) + float(serial[-1])
         self._token += n
         self._record_batch(now, done)

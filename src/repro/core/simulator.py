@@ -219,11 +219,17 @@ def run_amu(spec: WorkloadSpec, latency_us: float, dma_mode: bool = False,
     by ~1%, so results are equivalent, not bit-identical, across the knob.
 
     `vector=True` runs the workload's vector-command port (AloadVec/
-    AstoreVec batches per generator hop) where one exists
-    (`VECTOR_WORKLOADS`); other workloads silently keep their scalar port —
-    the returned ``stats["vector"]`` records which port actually ran. Vector
-    ports are trace-equivalent to the scalar ports (same far-memory bytes,
-    same verify()), proven by tests/test_batched_engine.py.
+    AstoreVec batches — or software-pipelined chases — per generator hop;
+    every workload has one, see `VECTOR_WORKLOADS`). The returned
+    ``stats["vector"]`` records which port ran. Vector ports are
+    trace-equivalent to the scalar ports in *memory effects* (same
+    far-memory bytes, same verify(); tests/test_batched_engine.py and
+    tests/test_pipelined_ports.py), but they model the vector-AMI software
+    configuration — one amortized issue cost per request vector — so their
+    *timing* is a different (faster) machine point than the paper's scalar
+    coroutine port. Paper-figure residuals are recorded from scalar-port
+    sweeps; `--vector` sweeps are archived separately as the vector-AMI
+    variant.
     """
     if engine not in SCHEDULER_KINDS:
         raise KeyError(f"unknown engine {engine!r}; "

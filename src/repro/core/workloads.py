@@ -28,15 +28,40 @@ from repro.core.coroutines import (Acquire, Aload, AloadNoWait, AloadVec,
                                    Astore, AstoreNoWait, AstoreVec, AwaitRid,
                                    AwaitRids, Cost, Release, SpmRead,
                                    SpmWrite)
+from repro.core.engine import AMART_ENTRY_BYTES
 
 LINE = 64  # baseline cache-line granularity
 
-# Workloads with a vector (AloadVec/AstoreVec) port: the loop-level-parallel
-# benchmarks where each coroutine can issue a whole batch of independent
-# requests per hop (§5.2), plus the BS probe-batch port. Their builders take
-# `vector=True`; the scalar ports stay the default (and the differential
-# oracle — tests pin vector execution to the scalar port's results).
-VECTOR_WORKLOADS = frozenset({"GUPS", "STREAM", "IS", "HPCG", "BS"})
+# Every workload now has a vector (AloadVec/AstoreVec) port behind a
+# `vector=True` builder knob; the scalar ports stay the default (and the
+# differential oracle — tests pin vector execution to the scalar port's
+# results). Loop-level-parallel benchmarks batch independent requests per
+# generator hop (§5.2); the request-level-parallel chase workloads (HJ, HT,
+# LL, SL, Redis) use software-pipelined ports instead: K concurrent chases
+# per coroutine advance in lockstep, one AloadVec per round over the live
+# set (the BS probe-batch pattern generalized — arXiv 2112.13306's software
+# pipelining); BFS batches the per-chunk parent fetch/claim.
+VECTOR_WORKLOADS = frozenset({"GUPS", "STREAM", "IS", "HPCG", "BS",
+                              "HJ", "HT", "LL", "SL", "Redis", "BFS"})
+
+# Zero-copy port idiom: SpmRead yields a read-only view aliasing live SPM.
+# Ports do view arithmetic directly (`data.view(dt)`), hand computed arrays
+# to SpmWrite without `.tobytes()`, and only copy (or double-buffer slots)
+# where a value must survive a later DMA/SpmWrite into the same range — see
+# the SL port (double-buffered node slots) and the pipelined SL port
+# (per-chase node snapshots).
+
+
+def _fit_spm(data_bytes: int, queue_length: int,
+             floor: int = 64 * 1024) -> int:
+    """Smallest power-of-two SPM that fits `data_bytes` of slots plus the
+    AMART/queue metadata area (vector ports with big per-coroutine windows
+    outgrow the default 64 KiB — the paper's SPM is an L2-slice, MiB-scale)."""
+    need = data_bytes + queue_length * AMART_ENTRY_BYTES + 1
+    spm = floor
+    while spm < need:
+        spm *= 2
+    return spm
 
 
 def _unique_keys(rng, n: int, lo: int = 1, hi: int = 1 << 40) -> "np.ndarray":
@@ -94,6 +119,17 @@ def _cfg(granularity: int, queue_length: int = 256,
                         spm_bytes=spm_bytes, batch_ids=batch_ids)
 
 
+def _vec_cfg(granularity: int, coroutines: int, pipeline_k: int,
+             data_bytes: int = 0) -> EngineConfig:
+    """Engine config for a pipelined/vector port: ID pool sized to 2x the
+    peak in-flight demand (vectors that park at exact occupancy burn their
+    speedup on retry churn), SPM auto-fit when the slot windows outgrow the
+    default 64 KiB."""
+    qlen = min(2048, max(256, 2 * coroutines * pipeline_k))
+    spm = _fit_spm(data_bytes, qlen) if data_bytes else 64 * 1024
+    return _cfg(granularity, queue_length=qlen, spm_bytes=spm)
+
+
 # =========================================================================
 # GUPS — HPCC RandomAccess: read-modify-write random 8B words (LLP)
 # =========================================================================
@@ -120,8 +156,8 @@ def build_gups(seed: int = 0, table_words: int = 8192, updates: int = 4096,
             addr = int(idx[k]) * 8
             yield Aload(spm, addr, 8)
             data = yield SpmRead(spm, 8)
-            new = np.frombuffer(data, np.uint64)[0] ^ vals[k]
-            yield SpmWrite(spm, new.tobytes())
+            new = data.view(np.uint64) ^ vals[k]
+            yield SpmWrite(spm, new)
             yield Astore(spm, addr, 8)
             yield Cost(insts=6)
 
@@ -131,13 +167,11 @@ def build_gups(seed: int = 0, table_words: int = 8192, updates: int = 4096,
             cnt = min(vec_chunk, hi - k0)
             addrs = idx[k0:k0 + cnt] * 8
             slots = base + np.arange(cnt) * 8
-            rids = yield AloadVec(slots, addrs, 8)
-            yield AwaitRids(rids)
+            yield AloadVec(slots, addrs, 8, wait=True)
             data = yield SpmRead(base, cnt * 8)
-            new = np.frombuffer(data, np.uint64) ^ vals[k0:k0 + cnt]
-            yield SpmWrite(base, new.tobytes())
-            rids = yield AstoreVec(slots, addrs, 8)
-            yield AwaitRids(rids)
+            new = data.view(np.uint64) ^ vals[k0:k0 + cnt]
+            yield SpmWrite(base, new)
+            yield AstoreVec(slots, addrs, 8, wait=True)
             yield Cost(insts=6 * cnt)
 
     if vector:
@@ -189,10 +223,9 @@ def build_stream(seed: int = 0, n: int = 65536, block_doubles: int = 64,
             yield AwaitRid(rc)
             db = yield SpmRead(sb, gran)
             dc = yield SpmRead(sb + gran, gran)
-            out = (np.frombuffer(db, np.float64)
-                   + s * np.frombuffer(dc, np.float64))
+            out = db.view(np.float64) + s * dc.view(np.float64)
             yield Cost(insts=2 * block_doubles)
-            yield SpmWrite(sb, out.tobytes())
+            yield SpmWrite(sb, out)
             yield Astore(sb, a_off + off, gran)
 
     def vtask(coro: int, lo: int, hi: int):
@@ -204,18 +237,15 @@ def build_stream(seed: int = 0, n: int = 65536, block_doubles: int = 64,
             offs = np.arange(b0, b0 + cnt) * gran
             bslots = sb + np.arange(cnt) * gran
             cslots = sc + np.arange(cnt) * gran
-            rids = yield AloadVec(np.concatenate([bslots, cslots]),
+            yield AloadVec(np.concatenate([bslots, cslots]),
                                   np.concatenate([b_off + offs, c_off + offs]),
-                                  gran)
-            yield AwaitRids(rids)
+                                  gran, wait=True)
             db = yield SpmRead(sb, cnt * gran)
             dc = yield SpmRead(sc, cnt * gran)
-            out = (np.frombuffer(db, np.float64)
-                   + s * np.frombuffer(dc, np.float64))
+            out = db.view(np.float64) + s * dc.view(np.float64)
             yield Cost(insts=2 * block_doubles * cnt)
-            yield SpmWrite(sb, out.tobytes())
-            rids = yield AstoreVec(bslots, a_off + offs, gran)
-            yield AwaitRids(rids)
+            yield SpmWrite(sb, out)
+            yield AstoreVec(bslots, a_off + offs, gran, wait=True)
 
     if vector:
         coroutines = min(coroutines, 8)
@@ -228,7 +258,15 @@ def build_stream(seed: int = 0, n: int = 65536, block_doubles: int = 64,
         got = mem_out[a_off:a_off + n * 8].view(np.float64)
         return bool(np.allclose(got, expect))
 
-    return WorkloadInstance("STREAM", mem, tasks, blocks, _cfg(gran), verify)
+    cfg = _cfg(gran)
+    if vector:           # big per-coroutine windows outgrow the default SPM
+        # ID pool sized to 2x the peak vector demand (2 loads + 1 store per
+        # block in flight) so refills never park at exact occupancy
+        qlen = min(2048, max(256, 6 * coroutines * vec_chunk))
+        cfg = _cfg(gran, queue_length=qlen,
+                   spm_bytes=_fit_spm(coroutines * 2 * vec_chunk * gran,
+                                      qlen))
+    return WorkloadInstance("STREAM", mem, tasks, blocks, cfg, verify)
 
 
 # =========================================================================
@@ -254,7 +292,7 @@ def build_bs(seed: int = 0, n_elems: int = 16384, searches: int = 512,
                 mid = (lo + hi) // 2
                 yield Aload(spm, mid * 16, 16)
                 data = yield SpmRead(spm, 16)
-                k, v = np.frombuffer(data, np.uint64)
+                k, v = data.view(np.uint64)
                 yield Cost(insts=8)
                 if k == target:
                     found_payload[qi] = v
@@ -272,12 +310,11 @@ def build_bs(seed: int = 0, n_elems: int = 16384, searches: int = 512,
         while live.any():
             act = np.nonzero(live)[0]
             mid = (lo[act] + hi[act]) // 2
-            rids = yield AloadVec(base + act * 16, mid * 16, 16)
-            yield AwaitRids(rids)
+            yield AloadVec(base + act * 16, mid * 16, 16, wait=True)
             yield Cost(insts=8 * len(act))
             for pos, ai in enumerate(act):
                 data = yield SpmRead(int(base + ai * 16), 16)
-                k, v = np.frombuffer(data, np.uint64)
+                k, v = data.view(np.uint64)
                 target = queries[qs[ai]]
                 if k == target:
                     found_payload[qs[ai]] = v
@@ -329,6 +366,9 @@ def _build_chains(rng, n_keys: int, n_buckets: int):
     return keys.astype(np.uint64), vals, heads, nodes
 
 
+_NIL64 = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
 def _chase_chain(spm: int, head_off: int, target: int):
     """Generator fragment: follow a chain until key==target.
     Yields AMI commands; returns (node_off, value) via StopIteration value."""
@@ -336,19 +376,82 @@ def _chase_chain(spm: int, head_off: int, target: int):
     while off != -1:
         yield Aload(spm, off, _NODE)
         data = yield SpmRead(spm, _NODE)
-        k, v, nxt, _ = np.frombuffer(data, np.uint64)
+        k, v, nxt, _ = data.view(np.uint64)
         yield Cost(insts=8)
         if k == target:
             return off, int(v)
-        off = -1 if nxt == 0xFFFFFFFFFFFFFFFF else int(nxt)
+        off = -1 if nxt == _NIL64 else int(nxt)
     return -1, 0
+
+
+def _chase_chain_vec(base: int, heads, targets):
+    """Software-pipelined counterpart of :func:`_chase_chain`: K chases
+    advance in lockstep, one ``AloadVec`` per round over the still-live set
+    (the BS probe-batch pattern generalized to chained structures). Chase i
+    lands in SPM slot ``base + i*_NODE``; one zero-copy SpmRead view over the
+    whole slot window serves every chase's node each round. Per-chase far
+    traffic is identical to the scalar chase. Returns ``(offs, vals)`` int64/
+    uint64 arrays via StopIteration (off -1 where the key was absent)."""
+    targets = np.asarray(targets, np.uint64)
+    nb = targets.size
+    cur = np.asarray(heads, np.int64).copy()
+    offs = np.full(nb, -1, np.int64)
+    vals = np.zeros(nb, np.uint64)
+    live = cur >= 0
+    while live.any():
+        act = np.nonzero(live)[0]
+        yield AloadVec(base + act * _NODE, cur[act], _NODE, wait=True)
+        data = yield SpmRead(base, nb * _NODE)
+        nodes = data.view(np.uint64).reshape(nb, 4)
+        yield Cost(insts=8 * act.size)
+        k, v, nxt = nodes[act, 0], nodes[act, 1], nodes[act, 2]
+        hit = k == targets[act]
+        offs[act[hit]] = cur[act[hit]]
+        vals[act[hit]] = v[hit]
+        ended = ~hit & (nxt == _NIL64)
+        cont = ~hit & ~ended
+        cur[act[cont]] = nxt[cont].astype(np.int64)
+        live[act[hit | ended]] = False
+    return offs, vals
+
+
+def _lock_set(addrs) -> "np.ndarray":
+    """Ascending distinct 64B-block lock representatives for a pipeline
+    batch. The disambiguation set conflicts at aligned-block granularity, so
+    deduping per block both avoids self-conflict (two addresses of one batch
+    sharing a block would make the coroutine wait on itself) and gives a
+    total acquisition order across coroutines (deadlock-free)."""
+    a = np.asarray(addrs).astype(np.int64)
+    return np.unique(a >> 6) << 6
+
+
+def _distinct_key_batches(op_order, op_keys, k: int):
+    """Split ops into pipeline batches of <= k with pairwise-distinct keys.
+    Ops whose key already appears in the current batch are deferred to a
+    later batch (relative per-key order preserved), so concurrent chases in
+    one batch never race on the same key — each batch acquires its key set
+    once, in ascending order (total-order locking: deadlock-free even with
+    K locks held across coroutines)."""
+    remaining = list(op_order)
+    while remaining:
+        batch, used, deferred = [], set(), []
+        for oi in remaining:
+            key = int(op_keys[oi])
+            if len(batch) < k and key not in used:
+                batch.append(oi)
+                used.add(key)
+            else:
+                deferred.append(oi)
+        yield np.asarray(batch, np.int64)
+        remaining = deferred
 
 
 # =========================================================================
 # HJ — hash join probe (LLP) with software disambiguation (Table 5)
 # =========================================================================
 def build_hj(seed: int = 0, build_keys: int = 4096, buckets: int = 4096,
-             probes: int = 2048, coroutines: int = 256) -> WorkloadInstance:
+             probes: int = 2048, coroutines: int = 256, vector: bool = False,
+             pipeline_k: int = 16) -> WorkloadInstance:
     rng = np.random.default_rng(seed)
     keys, vals, heads, nodes = _build_chains(rng, build_keys, buckets)
     mem = nodes.view(np.uint8).copy()
@@ -370,8 +473,28 @@ def build_hj(seed: int = 0, build_keys: int = 4096, buckets: int = 4096,
                 yield Cost(insts=20, cycles=35)
             yield Release(head if head >= 0 else 0)
 
+    def vtask(c: int, ps: "np.ndarray"):
+        base = c * pipeline_k * _NODE          # one node slot per chase
+        for batch in _distinct_key_batches(ps, probe_keys, pipeline_k):
+            targets = probe_keys[batch]
+            locks = _lock_set(np.maximum(heads[targets % buckets], 0))
+            yield Cost(insts=6 * batch.size)
+            for lock in locks:                 # ascending = deadlock-free
+                yield Acquire(int(lock))
+            _, v = yield from _chase_chain_vec(
+                base, heads[targets % buckets], targets)
+            joined[batch] = v ^ probe_payload[batch]
+            yield Cost(insts=20 * batch.size, cycles=35 * batch.size)
+            for lock in locks:
+                yield Release(int(lock))
+
+    if vector:
+        coroutines = min(coroutines, 32)
     psplit = np.array_split(np.arange(probes), coroutines)
-    tasks = [task(c, list(ps)) for c, ps in enumerate(psplit) if len(ps)]
+    if vector:
+        tasks = [vtask(c, ps) for c, ps in enumerate(psplit) if len(ps)]
+    else:
+        tasks = [task(c, list(ps)) for c, ps in enumerate(psplit) if len(ps)]
     kv = dict(zip(keys.tolist(), vals.tolist()))
     expect = np.array([kv[int(k)] for k in probe_keys],
                       np.uint64) ^ probe_payload
@@ -379,7 +502,8 @@ def build_hj(seed: int = 0, build_keys: int = 4096, buckets: int = 4096,
     def verify(mem_out: np.ndarray) -> bool:
         return bool(np.array_equal(joined, expect))
 
-    inst = WorkloadInstance("HJ", mem, tasks, probes, _cfg(_NODE), verify)
+    cfg = _vec_cfg(_NODE, coroutines, pipeline_k) if vector else _cfg(_NODE)
+    inst = WorkloadInstance("HJ", mem, tasks, probes, cfg, verify)
     inst.disambiguation = True
     return inst
 
@@ -389,7 +513,8 @@ def build_hj(seed: int = 0, build_keys: int = 4096, buckets: int = 4096,
 # =========================================================================
 def build_ht(seed: int = 0, n_keys: int = 4096, buckets: int = 2048,
              ops: int = 2048, coroutines: int = 256,
-             hot_frac: float = 0.04) -> WorkloadInstance:
+             hot_frac: float = 0.04, vector: bool = False,
+             pipeline_k: int = 16) -> WorkloadInstance:
     rng = np.random.default_rng(seed)
     keys, vals, heads, nodes = _build_chains(rng, n_keys, buckets)
     mem = nodes.view(np.uint8).copy()
@@ -419,8 +544,38 @@ def build_ht(seed: int = 0, n_keys: int = 4096, buckets: int = 2048,
                 lookups[oi] = v
             yield Release(target)
 
+    def vtask(c: int, os_: "np.ndarray"):
+        base = c * pipeline_k * _NODE
+        # distinct-key batches: same-key RMWs never chase concurrently, so
+        # per-key serialization (and the final sum of deltas) is preserved
+        for batch in _distinct_key_batches(os_, op_keys, pipeline_k):
+            targets = op_keys[batch]
+            locks = _lock_set(targets)
+            yield Cost(insts=6 * batch.size)
+            for lock in locks:                     # ascending: deadlock-free
+                yield Acquire(int(lock))
+            offs, v = yield from _chase_chain_vec(
+                base, heads[targets % buckets], targets)
+            upd = op_upd[batch]
+            ui = np.nonzero(upd)[0]
+            for i in ui:                           # value-field RMW per slot
+                newv = v[i] + op_delta[batch[i]]
+                yield SpmWrite(int(base + i * _NODE + 8),
+                               np.uint64(newv).tobytes())
+            if ui.size:
+                yield AstoreVec(base + ui * _NODE + 8,
+                                       offs[ui] + 8, 8, wait=True)
+            lookups[batch[~upd]] = v[~upd]
+            for lock in locks:
+                yield Release(int(lock))
+
+    if vector:
+        coroutines = min(coroutines, 32)
     osplit = np.array_split(np.arange(ops), coroutines)
-    tasks = [task(c, list(o)) for c, o in enumerate(osplit) if len(o)]
+    if vector:
+        tasks = [vtask(c, o) for c, o in enumerate(osplit) if len(o)]
+    else:
+        tasks = [task(c, list(o)) for c, o in enumerate(osplit) if len(o)]
 
     expect_vals = dict(zip(keys.tolist(), vals.tolist()))
     expect_lookup = np.zeros(ops, np.uint64)
@@ -446,7 +601,8 @@ def build_ht(seed: int = 0, n_keys: int = 4096, buckets: int = 2048,
                     return False
         return True
 
-    inst = WorkloadInstance("HT", mem, tasks, ops, _cfg(_NODE), verify)
+    cfg = _vec_cfg(_NODE, coroutines, pipeline_k) if vector else _cfg(_NODE)
+    inst = WorkloadInstance("HT", mem, tasks, ops, cfg, verify)
     inst.disambiguation = True
     return inst
 
@@ -455,7 +611,8 @@ def build_ht(seed: int = 0, n_keys: int = 4096, buckets: int = 2048,
 # LL — hand-over-hand linked list lookup (RLP, deep dependent chase)
 # =========================================================================
 def build_ll(seed: int = 0, list_len: int = 400, lookups: int = 96,
-             coroutines: int = 96) -> WorkloadInstance:
+             coroutines: int = 96, vector: bool = False,
+             pipeline_k: int = 16) -> WorkloadInstance:
     rng = np.random.default_rng(seed)
     keys = np.sort(_unique_keys(rng, list_len))
     vals = rng.integers(1, 1 << 62, size=list_len, dtype=np.uint64)
@@ -482,23 +639,72 @@ def build_ll(seed: int = 0, list_len: int = 400, lookups: int = 96,
             while off != -1:
                 yield Aload(spm, off, _NODE)
                 data = yield SpmRead(spm, _NODE)
-                k, v, nxt, _ = np.frombuffer(data, np.uint64)
+                k, v, nxt, _ = data.view(np.uint64)
                 yield Cost(insts=10)
                 if k == target:
                     found[qi] = v
                     break
                 if k > target:
                     break
-                off = -1 if nxt == 0xFFFFFFFFFFFFFFFF else int(nxt)
+                off = -1 if nxt == _NIL64 else int(nxt)
 
+    def vtask(c: int, qs: "np.ndarray"):
+        # K hand-over-hand chases, software-pipelined: a finished chase's
+        # slot is refilled with the next lookup immediately (LL holds no
+        # locks, so refill cannot deadlock), keeping the AloadVec width at K
+        # until the queue drains instead of degenerating with the batch.
+        # The sorted-key early exit (k > target) retires a chase exactly
+        # where the scalar port stops, so far traffic stays pinned.
+        base = c * pipeline_k * _NODE
+        tq = keys[q_idx[qs]]                   # per-lookup targets
+        nq = len(qs)
+        prime = min(pipeline_k, nq)
+        slot_q = np.full(pipeline_k, -1, np.int64)   # lookup index per slot
+        slot_q[:prime] = np.arange(prime)
+        cur = np.full(pipeline_k, head, np.int64)
+        nexti = prime
+        act = np.arange(prime)                 # active slots, kept up to date
+        while act.size:
+            yield AloadVec(base + act * _NODE, cur[act], _NODE, wait=True)
+            data = yield SpmRead(base, pipeline_k * _NODE)
+            nodes = data.view(np.uint64).reshape(pipeline_k, 4)
+            yield Cost(insts=10 * act.size)
+            sub = nodes[act]                   # one gather for k/v/nxt cols
+            k, v, nxt = sub[:, 0], sub[:, 1], sub[:, 2]
+            t = tq[slot_q[act]]
+            hit = k == t
+            found[qs[slot_q[act[hit]]]] = v[hit]
+            stop = hit | (k > t) | (nxt == _NIL64)
+            cur[act[~stop]] = nxt[~stop].astype(np.int64)
+            refills = []
+            for s in act[stop]:                # refill retired slots
+                if nexti < nq:
+                    slot_q[s] = nexti
+                    cur[s] = head
+                    nexti += 1
+                    refills.append(s)
+            act = act[~stop]
+            if refills:
+                act = np.concatenate([act, np.asarray(refills, np.int64)])
+
+    if vector:
+        # keep the scalar port's total chase concurrency (`coroutines`), but
+        # fold it into coroutines-of-K so every slot refills many times —
+        # the pipeline only pays off when each task streams lookups through
+        # its K slots, not when it holds exactly one batch
+        coroutines = max(1, min(coroutines, lookups) // pipeline_k)
     qsplit = np.array_split(np.arange(lookups), coroutines)
-    tasks = [task(c, list(q)) for c, q in enumerate(qsplit) if len(q)]
+    if vector:
+        tasks = [vtask(c, q) for c, q in enumerate(qsplit) if len(q)]
+    else:
+        tasks = [task(c, list(q)) for c, q in enumerate(qsplit) if len(q)]
     expect = vals[q_idx]
 
     def verify(mem_out: np.ndarray) -> bool:
         return bool(np.array_equal(found, expect))
 
-    return WorkloadInstance("LL", mem, tasks, lookups, _cfg(_NODE), verify)
+    cfg = _vec_cfg(_NODE, coroutines, pipeline_k) if vector else _cfg(_NODE)
+    return WorkloadInstance("LL", mem, tasks, lookups, cfg, verify)
 
 
 # =========================================================================
@@ -509,7 +715,8 @@ _SL_NODE = 160  # 32B payload (key,val,meta) + 15 * 8B forward pointers
 
 
 def build_sl(seed: int = 0, n_keys: int = 2048, lookups: int = 512,
-             coroutines: int = 128) -> WorkloadInstance:
+             coroutines: int = 128, vector: bool = False,
+             pipeline_k: int = 16) -> WorkloadInstance:
     rng = np.random.default_rng(seed)
     keys = np.sort(_unique_keys(rng, n_keys, lo=2))
     vals = rng.integers(1, 1 << 62, size=n_keys, dtype=np.uint64)
@@ -541,23 +748,30 @@ def build_sl(seed: int = 0, n_keys: int = 2048, lookups: int = 512,
     def read_node(spm, off):
         yield Aload(spm, off, _SL_NODE)
         data = yield SpmRead(spm, _SL_NODE)
-        return np.frombuffer(data, np.uint64)
+        return data.view(np.uint64)
 
     def task(c: int, qs: Iterable[int]):
-        spm = c * _SL_NODE
+        # two slots per coroutine: SpmRead views alias live SPM, and the
+        # rejected-probe path keeps using `node` after the NEXT fetch — so
+        # each fetch lands in the slot NOT holding the current node
+        # (double-buffering instead of a per-node copy)
+        base = c * 2 * _SL_NODE
         for qi in qs:
             target = keys[q_idx[qi]]
-            node = yield from read_node(spm, 0)     # sentinel
+            cur = 0
+            node = yield from read_node(base, 0)    # sentinel into slot 0
             yield Cost(insts=6)
             for lv in range(_SL_LEVELS - 1, -1, -1):
                 while True:
                     nxt = node[4 + lv]
                     if nxt == NIL:
                         break
-                    nxt_node = yield from read_node(spm, int(nxt))
+                    nxt_node = yield from read_node(
+                        base + (1 - cur) * _SL_NODE, int(nxt))
                     yield Cost(insts=8)
                     if nxt_node[0] <= target:
                         node = nxt_node
+                        cur = 1 - cur
                     else:
                         break
                 if node[0] == target:
@@ -565,22 +779,109 @@ def build_sl(seed: int = 0, n_keys: int = 2048, lookups: int = 512,
             if node[0] == target:
                 found[qi] = node[1]
 
+    _ROW = _SL_NODE // 8
+
+    def vtask(c: int, qs: "np.ndarray"):
+        # K skip-list descents, software-pipelined (slot refill — SL holds
+        # no locks). Level moves that need no far fetch (NIL forward
+        # pointers) resolve locally; each round AloadVec's the next node of
+        # every live chase. The current node is snapshotted per chase
+        # (`node[si] = rows[si]`): the slot window is overwritten every
+        # round, and a rejected probe must keep the prior node — the
+        # documented copy-on-overwrite case of the zero-copy contract. The
+        # fetch sequence (and far traffic) per lookup is identical to the
+        # scalar port's.
+        base = c * pipeline_k * _SL_NODE
+        tq = keys[q_idx[qs]]
+        nq = len(qs)
+        prime = min(pipeline_k, nq)
+        slot_q = np.full(pipeline_k, -1, np.int64)
+        slot_q[:prime] = np.arange(prime)
+        nexti = prime
+        node = np.zeros((pipeline_k, _ROW), np.uint64)  # per-chase snapshot
+        lv = np.zeros(pipeline_k, np.int64)             # level cursor
+        fetch = np.zeros(pipeline_k, np.int64)          # next offset (=sentinel)
+        sentinel = np.ones(pipeline_k, bool)
+        live = slot_q >= 0
+
+        def finish(si):
+            """Chase in slot `si` ended: record a hit, refill or retire."""
+            nonlocal nexti
+            if node[si, 0] == tq[slot_q[si]]:
+                found[qs[slot_q[si]]] = node[si, 1]
+            if nexti < nq:
+                slot_q[si] = nexti
+                fetch[si] = 0
+                sentinel[si] = True
+                nexti += 1
+            else:
+                live[si] = False
+
+        while live.any():
+            act = np.nonzero(live)[0]
+            yield AloadVec(base + act * _SL_NODE, fetch[act],
+                                  _SL_NODE, wait=True)
+            data = yield SpmRead(base, pipeline_k * _SL_NODE)
+            rows = data.view(np.uint64).reshape(pipeline_k, _ROW)
+            n_sent = int(sentinel[act].sum())
+            yield Cost(insts=6 * n_sent + 8 * (act.size - n_sent))
+            for si in act:
+                got = rows[si]
+                target = tq[slot_q[si]]
+                if sentinel[si]:
+                    node[si] = got                   # snapshot (see above)
+                    sentinel[si] = False
+                    lv[si] = _SL_LEVELS - 1
+                elif got[0] <= target:
+                    node[si] = got                   # accept, stay at level
+                elif node[si, 0] == target:
+                    finish(si)                       # reject -> hit
+                    continue
+                else:
+                    lv[si] -= 1                      # reject -> descend
+                # local descent to the next fetchable forward pointer
+                while lv[si] >= 0:
+                    nxt = node[si, 4 + lv[si]]
+                    if nxt != NIL:
+                        fetch[si] = int(nxt)
+                        break
+                    if node[si, 0] == target:
+                        break
+                    lv[si] -= 1
+                else:
+                    finish(si)                       # levels exhausted
+                    continue
+                if node[si, 4 + lv[si]] == NIL:      # stopped on hit check
+                    finish(si)
+
+    if vector:
+        # fold the scalar port's concurrency into coroutines-of-K (see the
+        # LL port): each task streams lookups through refilled slots
+        coroutines = max(1, min(coroutines, lookups) // pipeline_k)
     qsplit = np.array_split(np.arange(lookups), coroutines)
-    tasks = [task(c, list(q)) for c, q in enumerate(qsplit) if len(q)]
+    if vector:
+        tasks = [vtask(c, q) for c, q in enumerate(qsplit) if len(q)]
+    else:
+        tasks = [task(c, list(q)) for c, q in enumerate(qsplit) if len(q)]
     expect = vals[q_idx]
 
     def verify(mem_out: np.ndarray) -> bool:
         return bool(np.array_equal(found, expect))
 
-    return WorkloadInstance("SL", mem, tasks, lookups,
-                            _cfg(_SL_NODE, spm_bytes=64 * 1024), verify)
+    if vector:
+        cfg = _vec_cfg(_SL_NODE, coroutines, pipeline_k,
+                       data_bytes=coroutines * pipeline_k * _SL_NODE)
+    else:
+        cfg = _cfg(_SL_NODE,
+                   spm_bytes=_fit_spm(coroutines * 2 * _SL_NODE, 256))
+    return WorkloadInstance("SL", mem, tasks, lookups, cfg, verify)
 
 
 # =========================================================================
 # BFS — Graph500-style level-synchronous BFS (frontier parallelism)
 # =========================================================================
 def build_bfs(seed: int = 0, n_vertices: int = 2048, n_edges: int = 32768,
-              coroutines: int = 224) -> WorkloadInstance:
+              coroutines: int = 224, vector: bool = False) -> WorkloadInstance:
     rng = np.random.default_rng(seed)
     src = rng.integers(0, n_vertices, size=n_edges)
     dst = rng.integers(0, n_vertices, size=n_edges)
@@ -615,24 +916,60 @@ def build_bfs(seed: int = 0, n_vertices: int = 2048, n_edges: int = 32768,
                 cnt = min(CHUNK, hi - base)
                 yield Aload(spm, base * 4, cnt * 4)
                 data = yield SpmRead(spm, cnt * 4)
-                neigh = np.frombuffer(data, np.int32)
+                neigh = data.view(np.int32)
                 yield Cost(insts=4 * cnt)
                 for vv in neigh:
                     vv = int(vv)
                     yield Aload(pslot, par_off + vv * 8, 8)
                     pdata = yield SpmRead(pslot, 8)
-                    if np.frombuffer(pdata, np.int64)[0] == -1:
+                    if pdata.view(np.int64)[0] == -1:
                         yield SpmWrite(pslot, np.int64(uu).tobytes())
                         yield Astore(pslot, par_off + vv * 8, 8)
                         next_frontier.add(vv)
                     yield Cost(insts=6)
+
+    # vector port SPM layout per coroutine: 240B neighbor chunk | 8B parent
+    # staging slot (holds uu for the AstoreVec scatter) | CHUNK parent slots
+    VSLOT = 768
+
+    def vexpand(c: int, vertices: List[int]):
+        nbase = c * VSLOT
+        stage = nbase + 240
+        pbase = nbase + 248
+        for uu in vertices:
+            lo, hi = int(offs[uu]), int(offs[uu + 1])
+            yield Cost(insts=8)
+            for base in range(lo, hi, CHUNK):
+                cnt = min(CHUNK, hi - base)
+                yield Aload(nbase, base * 4, cnt * 4)
+                data = yield SpmRead(nbase, cnt * 4)
+                neigh = data.view(np.int32).astype(np.int64)
+                yield Cost(insts=4 * cnt)
+                # one vector fetch of every neighbor's parent word
+                yield AloadVec(pbase + np.arange(cnt) * 8,
+                                      par_off + neigh * 8, 8, wait=True)
+                pdata = yield SpmRead(pbase, cnt * 8)
+                parents = pdata.view(np.int64)
+                yield Cost(insts=6 * cnt)
+                claim = np.unique(neigh[parents == -1])
+                if claim.size:
+                    # scatter `uu` from one staging slot to every claimed
+                    # parent word (repeated SPM source, vector of targets)
+                    yield SpmWrite(stage, np.int64(uu).tobytes())
+                    yield AstoreVec(np.full(claim.size, stage),
+                                           par_off + claim * 8, 8, wait=True)
+                    next_frontier.update(int(vv) for vv in claim)
+
+    if vector:
+        coroutines = min(coroutines, 64)
 
     # level-synchronous driver is run by the caller via `rounds`
     def make_round_tasks(frontier: List[int]) -> List:
         next_frontier.clear()
         fsplit = np.array_split(np.array(frontier, dtype=np.int64),
                                 min(coroutines, max(1, len(frontier))))
-        return [expand(c, list(f)) for c, f in enumerate(fsplit) if len(f)]
+        mk = vexpand if vector else expand
+        return [mk(c, list(f)) for c, f in enumerate(fsplit) if len(f)]
 
     # reference BFS distances
     dist = np.full(n_vertices, -1, np.int64)
@@ -650,7 +987,8 @@ def build_bfs(seed: int = 0, n_vertices: int = 2048, n_edges: int = 32768,
         frontier = nxt
         d += 1
 
-    inst = WorkloadInstance("BFS", mem, [], 2 * n_edges, _cfg(256), lambda m: True)
+    cfg = _cfg(256, queue_length=1024) if vector else _cfg(256)
+    inst = WorkloadInstance("BFS", mem, [], 2 * n_edges, cfg, lambda m: True)
     inst.make_round_tasks = make_round_tasks            # type: ignore
     inst.next_frontier = next_frontier                  # type: ignore
     inst.root = root                                    # type: ignore
@@ -689,20 +1027,17 @@ def build_is(seed: int = 0, n_keys: int = 65536, block: int = 128,
         for blk in range(lo, hi):
             yield Aload(spm, blk * gran, gran)
             data = yield SpmRead(spm, gran)
-            ks = np.frombuffer(data, np.int32)
-            np.add.at(hist, ks, 1)
+            np.add.at(hist, data.view(np.int32), 1)
             yield Cost(insts=3 * block)
 
     def vtask(c: int, lo: int, hi: int):
         base = c * vec_chunk * gran
         for b0 in range(lo, hi, vec_chunk):
             cnt = min(vec_chunk, hi - b0)
-            rids = yield AloadVec(base + np.arange(cnt) * gran,
-                                  np.arange(b0, b0 + cnt) * gran, gran)
-            yield AwaitRids(rids)
+            yield AloadVec(base + np.arange(cnt) * gran,
+                                  np.arange(b0, b0 + cnt) * gran, gran, wait=True)
             data = yield SpmRead(base, cnt * gran)
-            ks = np.frombuffer(data, np.int32)
-            np.add.at(hist, ks, 1)
+            np.add.at(hist, data.view(np.int32), 1)
             yield Cost(insts=3 * block * cnt)
 
     if vector:
@@ -715,7 +1050,10 @@ def build_is(seed: int = 0, n_keys: int = 65536, block: int = 128,
     def verify(mem_out: np.ndarray) -> bool:
         return bool(np.array_equal(hist, expect))
 
-    return WorkloadInstance("IS", mem, tasks, blocks, _cfg(gran), verify)
+    cfg = _vec_cfg(gran, coroutines, vec_chunk,
+                   data_bytes=coroutines * vec_chunk * gran) if vector \
+        else _cfg(gran)
+    return WorkloadInstance("IS", mem, tasks, blocks, cfg, verify)
 
 
 # =========================================================================
@@ -748,10 +1086,9 @@ def build_hpcg(seed: int = 0, rows: int = 2048, nnz_per_row: int = 27,
         for r in range(lo, hi):
             yield Aload(spm, r * row_pad, row_pad)
             data = yield SpmRead(spm, row_pad)
-            rc = np.frombuffer(data[:nnz_per_row * 4], np.int32)
-            rv = np.frombuffer(data[nnz_per_row * 4:
-                                    nnz_per_row * 4 + nnz_per_row * 8],
-                               np.float64)
+            rc = data[:nnz_per_row * 4].view(np.int32)
+            rv = data[nnz_per_row * 4:
+                      nnz_per_row * 4 + nnz_per_row * 8].view(np.float64)
             acc = 0.0
             # gather x entries: independent 8B aloads, 16 slots in flight
             rids = []
@@ -761,7 +1098,7 @@ def build_hpcg(seed: int = 0, rows: int = 2048, nnz_per_row: int = 27,
             for j in range(len(rc)):
                 yield AwaitRid(rids[j])
                 xd = yield SpmRead(xs + (j % 16) * 8, 8)
-                acc += rv[j] * np.frombuffer(xd, np.float64)[0]
+                acc += rv[j] * xd.view(np.float64)[0]
                 yield Cost(insts=4)
                 if j + 16 < len(rc):   # refill the freed slot
                     rid = yield AloadNoWait(xs + (j % 16) * 8,
@@ -779,22 +1116,20 @@ def build_hpcg(seed: int = 0, rows: int = 2048, nnz_per_row: int = 27,
         ybase = xbase + vec_rows * nnz_per_row * 8
         for r0 in range(lo, hi, vec_rows):
             cnt = min(vec_rows, hi - r0)
-            rids = yield AloadVec(rbase + np.arange(cnt) * row_pad,
-                                  (r0 + np.arange(cnt)) * row_pad, row_pad)
-            yield AwaitRids(rids)
+            yield AloadVec(rbase + np.arange(cnt) * row_pad,
+                                  (r0 + np.arange(cnt)) * row_pad, row_pad, wait=True)
             rcs, rvs = [], []
             for i in range(cnt):
                 data = yield SpmRead(rbase + i * row_pad, row_pad)
-                rcs.append(np.frombuffer(data[:nnz_per_row * 4], np.int32))
-                rvs.append(np.frombuffer(
-                    data[nnz_per_row * 4:nnz_per_row * 4 + nnz_per_row * 8],
-                    np.float64))
+                rcs.append(data[:nnz_per_row * 4].view(np.int32))
+                rvs.append(data[nnz_per_row * 4:
+                                nnz_per_row * 4 + nnz_per_row * 8]
+                           .view(np.float64))
             cols_flat = np.concatenate(rcs).astype(np.int64)
-            rids = yield AloadVec(xbase + np.arange(cnt * nnz_per_row) * 8,
-                                  x_off + cols_flat * 8, 8)
-            yield AwaitRids(rids)
+            yield AloadVec(xbase + np.arange(cnt * nnz_per_row) * 8,
+                                  x_off + cols_flat * 8, 8, wait=True)
             xdata = yield SpmRead(xbase, cnt * nnz_per_row * 8)
-            xv = np.frombuffer(xdata, np.float64)
+            xv = xdata.view(np.float64)
             accs = np.empty(cnt)
             for i in range(cnt):
                 acc = 0.0
@@ -802,10 +1137,9 @@ def build_hpcg(seed: int = 0, rows: int = 2048, nnz_per_row: int = 27,
                     acc += rvs[i][j] * xv[i * nnz_per_row + j]
                 accs[i] = acc
                 yield Cost(insts=4 * nnz_per_row)
-            yield SpmWrite(ybase, accs.tobytes())
-            rids = yield AstoreVec(ybase + np.arange(cnt) * 8,
-                                   y_off + (r0 + np.arange(cnt)) * 8, 8)
-            yield AwaitRids(rids)
+            yield SpmWrite(ybase, accs)
+            yield AstoreVec(ybase + np.arange(cnt) * 8,
+                                   y_off + (r0 + np.arange(cnt)) * 8, 8, wait=True)
 
     if vector:
         coroutines = min(coroutines, 8)
@@ -827,12 +1161,25 @@ def build_hpcg(seed: int = 0, rows: int = 2048, nnz_per_row: int = 27,
 # =========================================================================
 def build_redis(seed: int = 0, n_keys: int = 4096, buckets: int = 4096,
                 ops: int = 2048, coroutines: int = 256,
-                update_frac: float = 0.05) -> WorkloadInstance:
+                update_frac: float = 0.05, vector: bool = False,
+                pipeline_k: int = 16,
+                distinct: bool = False) -> WorkloadInstance:
     rng = np.random.default_rng(seed)
     keys, vals, heads, nodes = _build_chains(rng, n_keys, buckets)
     mem = nodes.view(np.uint8).copy()
     op_keys = keys[rng.integers(0, n_keys, size=ops)]
     op_upd = rng.random(ops) < update_frac
+    if distinct:
+        # at most one update per key (later conflicting updates demoted to
+        # lookups): final far-memory bytes become schedule-independent, so
+        # differential tests can pin vector runs to the scalar port exactly
+        seen: set = set()
+        for oi in np.nonzero(op_upd)[0]:
+            k = int(op_keys[oi])
+            if k in seen:
+                op_upd[oi] = False
+            else:
+                seen.add(k)
     op_newval = rng.integers(1, 1 << 62, size=ops, dtype=np.uint64)
     got_vals = np.zeros(ops, np.uint64)
 
@@ -852,8 +1199,36 @@ def build_redis(seed: int = 0, n_keys: int = 4096, buckets: int = 4096,
             yield Release(target)
             yield Cost(insts=8)                    # format reply
 
+    def vtask(c: int, os_: "np.ndarray"):
+        base = c * pipeline_k * _NODE
+        for batch in _distinct_key_batches(os_, op_keys, pipeline_k):
+            targets = op_keys[batch]
+            locks = _lock_set(targets)
+            yield Cost(insts=10 * batch.size)
+            for lock in locks:                     # ascending: deadlock-free
+                yield Acquire(int(lock))
+            offs, v = yield from _chase_chain_vec(
+                base, heads[targets % buckets], targets)
+            upd = op_upd[batch]
+            ui = np.nonzero(upd)[0]
+            for i in ui:
+                yield SpmWrite(int(base + i * _NODE + 8),
+                               op_newval[batch[i]].tobytes())
+            if ui.size:
+                yield AstoreVec(base + ui * _NODE + 8,
+                                       offs[ui] + 8, 8, wait=True)
+            got_vals[batch[~upd]] = v[~upd]
+            for lock in locks:
+                yield Release(int(lock))
+            yield Cost(insts=8 * batch.size)
+
+    if vector:
+        coroutines = min(coroutines, 32)
     osplit = np.array_split(np.arange(ops), coroutines)
-    tasks = [task(c, list(o)) for c, o in enumerate(osplit) if len(o)]
+    if vector:
+        tasks = [vtask(c, o) for c, o in enumerate(osplit) if len(o)]
+    else:
+        tasks = [task(c, list(o)) for c, o in enumerate(osplit) if len(o)]
 
     final = dict(zip(keys.tolist(), vals.tolist()))
     for oi in range(ops):
@@ -874,7 +1249,8 @@ def build_redis(seed: int = 0, n_keys: int = 4096, buckets: int = 4096,
                 return False
         return True
 
-    inst = WorkloadInstance("Redis", mem, tasks, ops, _cfg(_NODE), verify)
+    cfg = _vec_cfg(_NODE, coroutines, pipeline_k) if vector else _cfg(_NODE)
+    inst = WorkloadInstance("Redis", mem, tasks, ops, cfg, verify)
     inst.disambiguation = True
     return inst
 

@@ -175,6 +175,9 @@ def test_batch_spm_overflow_raises():
     with pytest.raises(SpmOverflow):
         b.aload_batch(np.array([0, b.spm_data_bytes - 4]),
                       np.array([0, 0]), np.array([8, 8]))
+    with pytest.raises(SpmOverflow):
+        b.aload_batch(np.array([-8, 16]), np.array([0, 8]),
+                      np.array([8, 8]))     # negative addr must not wrap
     # failed batch must not leak IDs
     b.check_invariants()
 
@@ -404,16 +407,23 @@ def test_move_data_contiguous_block_path():
 # Vector commands: AloadVec/AstoreVec/AwaitRids
 # =========================================================================
 def _run_port(wl: str, vector: bool, mem_kind: str, engine="batched",
-              sched_cls=BatchScheduler, max_inflight=0):
+              sched_cls=BatchScheduler, max_inflight=0, **build_kw):
     """Run a workload port to completion; returns (engine, instance)."""
-    kw = {"vector": True} if vector else {}
-    if wl == "GUPS":
+    kw = {"vector": True, **build_kw} if vector else dict(build_kw)
+    if wl in ("GUPS", "Redis"):
         kw["distinct"] = True          # conflict-free -> deterministic bytes
     inst = WORKLOADS[wl].build(0, **kw)
     far = _far(mem_kind, max_inflight=max_inflight)
     eng = make_engine(engine, inst.engine_config, far, inst.mem)
-    sched = sched_cls(eng)
-    sched.run(inst.tasks)
+    disamb = CuckooAddressSet() if inst.disambiguation else None
+    sched = sched_cls(eng, disambiguator=disamb)
+    if hasattr(inst, "make_round_tasks"):          # BFS: level-synchronous
+        frontier = [inst.root]
+        while frontier:
+            sched.run(inst.make_round_tasks(frontier))
+            frontier = sorted(inst.next_frontier)
+    else:
+        sched.run(inst.tasks)
     eng.drain()
     eng.getfin_all()
     eng.check_invariants()
@@ -436,11 +446,15 @@ def _scalar_port_mem(wl: str, mem_kind: str):
 @pytest.mark.parametrize("mem_kind", ["instant", "timed"])
 def test_vector_port_matches_scalar_port(wl, mem_kind):
     """Every vector port must be trace-equivalent to its scalar port: same
-    far-memory bytes, verify() passes (found/hist side-results included)."""
-    ref_mem = _scalar_port_mem(wl, mem_kind)
+    far-memory bytes, verify() passes (found/hist side-results included).
+    BFS parent claims race across tasks by design (any valid BFS tree
+    passes), so its final bytes are schedule- but not port-pinned: the
+    vector port must produce a verified tree, not identical bytes."""
     eng, inst = _run_port(wl, vector=True, mem_kind=mem_kind)
     assert inst.verify(eng.mem)
-    assert np.array_equal(eng.mem, ref_mem)
+    if wl != "BFS":
+        ref_mem = _scalar_port_mem(wl, mem_kind)
+        assert np.array_equal(eng.mem, ref_mem)
 
 
 @pytest.mark.parametrize("wl", ["GUPS", "STREAM"])
@@ -488,7 +502,7 @@ def test_vector_partial_allocation_parks_and_recovers(sched_cls):
     eng.drain()
     eng.getfin_all()
     eng.check_invariants()
-    assert got["data"] == bytes(range(128))
+    assert bytes(got["data"]) == bytes(range(128))
     assert eng.stats["alloc_fail"] > 0
 
 
@@ -507,7 +521,7 @@ def test_await_rids_after_completion():
         got["data"] = yield SpmRead(0, 64)
 
     BatchScheduler(eng).run([task()])
-    assert got["data"] == bytes(range(64))
+    assert bytes(got["data"]) == bytes(range(64))
 
 
 def test_astore_vec_roundtrip():

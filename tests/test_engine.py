@@ -45,7 +45,7 @@ def test_data_movement_roundtrip():
     rid = eng.aload(0, 100, 8)
     eng.drain()
     assert eng.getfin() == rid
-    assert eng.spm_read(0, 8) == bytes(range(8))
+    assert bytes(eng.spm_read(0, 8)) == bytes(range(8))
     eng.spm_write(8, bytes([9] * 8))
     eng.astore(8, 200, 8)
     eng.drain()
@@ -155,8 +155,8 @@ def test_scheduler_nowait_and_await():
         got["a"], got["b"] = a, b
 
     Scheduler(eng).run([task()])
-    assert got["a"] == bytes(range(8))
-    assert got["b"] == bytes(range(8, 16))
+    assert bytes(got["a"]) == bytes(range(8))
+    assert bytes(got["b"]) == bytes(range(8, 16))
 
 
 def test_scheduler_id_exhaustion_parks_and_recovers():

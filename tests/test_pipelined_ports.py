@@ -1,0 +1,106 @@
+"""Software-pipelined chase ports vs their scalar oracle ports.
+
+The request-level-parallel workloads (HJ, HT, LL, SL, Redis) carry
+`vector=True` ports that run K concurrent chases per coroutine in lockstep
+(AloadVec batches — the BS probe-batch pattern generalized). The scalar port
+is the oracle: for every workload, K in {1, 4, 16}, and an MSHR-limited
+(`max_inflight`) far memory, the pipelined port must be pinned
+trace-equivalent — identical final far-memory bytes, identical far-memory
+request/byte counts (each chase issues exactly the scalar port's loads),
+identical engine aload/astore totals, and a passing verify() (which also
+checks the side-result arrays: joined/lookups/found).
+
+Redis runs with `distinct=True` (at most one update per key) so final bytes
+are schedule-independent; HT update RMWs commute (+= delta under key locks),
+so it needs no such knob. BFS parent claims race benignly across tasks (any
+valid BFS tree verifies) — its vector port is covered by
+tests/test_batched_engine.py, not pinned here.
+"""
+import numpy as np
+import pytest
+
+from repro.core.coroutines import BatchScheduler
+from repro.core.disambiguation import CuckooAddressSet
+from repro.core.engine import make_engine
+from repro.core.farmem import FarMemoryConfig, FarMemoryModel
+
+from repro.core.workloads import (build_hj, build_ht, build_ll, build_redis,
+                                  build_sl)
+
+CHASE_BUILDERS = {
+    "HJ": lambda **kw: build_hj(0, build_keys=1024, buckets=1024, probes=384,
+                                coroutines=64, **kw),
+    "HT": lambda **kw: build_ht(0, n_keys=1024, buckets=512, ops=384,
+                                coroutines=64, **kw),
+    "LL": lambda **kw: build_ll(0, list_len=128, lookups=64, coroutines=32,
+                                **kw),
+    "SL": lambda **kw: build_sl(0, n_keys=512, lookups=160, coroutines=40,
+                                **kw),
+    "Redis": lambda **kw: build_redis(0, n_keys=1024, buckets=1024, ops=384,
+                                      coroutines=64, distinct=True, **kw),
+}
+
+
+def _run(wl: str, max_inflight: int = 0, **kw):
+    inst = CHASE_BUILDERS[wl](**kw)
+    far = FarMemoryModel(FarMemoryConfig.from_latency_us(
+        1.0, max_inflight=max_inflight))
+    eng = make_engine("batched", inst.engine_config, far, inst.mem)
+    disamb = CuckooAddressSet() if inst.disambiguation else None
+    sched = BatchScheduler(eng, disambiguator=disamb)
+    sched.run(inst.tasks)
+    eng.drain()
+    eng.getfin_all()
+    eng.check_invariants()
+    return eng, far, inst
+
+
+_ref_cache = {}
+
+
+def _reference(wl: str, max_inflight: int = 0):
+    key = (wl, max_inflight)
+    if key not in _ref_cache:
+        eng, far, inst = _run(wl, max_inflight=max_inflight)
+        assert inst.verify(eng.mem), f"{wl} scalar oracle port failed verify"
+        _ref_cache[key] = (eng.mem.copy(), far.requests, far.bytes_moved,
+                          eng.stats["aload"], eng.stats["astore"])
+    return _ref_cache[key]
+
+
+def _pin(wl: str, k: int, max_inflight: int = 0):
+    ref_mem, ref_req, ref_bytes, ref_al, ref_as = _reference(wl, max_inflight)
+    eng, far, inst = _run(wl, max_inflight=max_inflight, vector=True,
+                          pipeline_k=k)
+    assert inst.verify(eng.mem), f"{wl} K={k} pipelined port failed verify"
+    assert np.array_equal(eng.mem, ref_mem), f"{wl} K={k} far-memory bytes"
+    assert far.requests == ref_req, (wl, k, far.requests, ref_req)
+    assert far.bytes_moved == ref_bytes, (wl, k)
+    assert eng.stats["aload"] == ref_al, (wl, k)
+    assert eng.stats["astore"] == ref_as, (wl, k)
+
+
+@pytest.mark.parametrize("k", [1, 4, 16])
+@pytest.mark.parametrize("wl", sorted(CHASE_BUILDERS))
+def test_pipelined_port_pinned_to_scalar(wl, k):
+    _pin(wl, k)
+
+
+@pytest.mark.parametrize("wl", sorted(CHASE_BUILDERS))
+def test_pipelined_port_pinned_under_max_inflight(wl):
+    """K=16 under device-side backpressure (MSHR-limited far memory): the
+    completion-coupled admission path must not perturb the pinning."""
+    _pin(wl, 16, max_inflight=12)
+
+
+def test_pipelined_port_distinct_keys_per_batch():
+    """Ops on the same key never share a pipeline batch: the HT update RMW
+    chain must serialize per key, so the final value is the exact sum of
+    deltas even when one hot key dominates (hot_frac stresses this)."""
+    inst = CHASE_BUILDERS["HT"](vector=True, pipeline_k=16)
+    far = FarMemoryModel(FarMemoryConfig.from_latency_us(2.0))
+    eng = make_engine("batched", inst.engine_config, far, inst.mem)
+    sched = BatchScheduler(eng, disambiguator=CuckooAddressSet())
+    sched.run(inst.tasks)
+    eng.drain()
+    assert inst.verify(eng.mem)

@@ -1,0 +1,233 @@
+"""Zero-copy SPM data-plane property suite.
+
+The contract (documented in TESTING.md):
+
+* ``spm_read`` / the :class:`SpmRead` command return a READ-ONLY numpy view
+  **aliasing live SPM** — not a snapshot. The view observes every subsequent
+  ``spm_write`` and every DMA retirement that lands in its range.
+* Mutation only goes through ``spm_write`` (bytes or C-contiguous ndarray);
+  writing through a view raises.
+* The scalar oracle engine polices racy accesses: a synchronous SPM access
+  overlapping the destination of an in-flight LOAD raises AssertionError
+  (store payloads are captured at issue, so stores never conflict).
+
+Everything runs under both engines and both memory models.
+
+`hypothesis` optional — tests/proplib.py falls back to seeded-random
+example generation.
+"""
+import numpy as np
+import pytest
+from proplib import given, settings, st
+
+from repro.configs.base import EngineConfig
+from repro.core.coroutines import (Aload, AloadNoWait, AwaitRid,
+                                   BatchScheduler, Scheduler, SpmRead,
+                                   SpmWrite)
+from repro.core.engine import (AsyncMemoryEngine, BatchedAsyncMemoryEngine,
+                               SpmOverflow, make_engine)
+from repro.core.farmem import FarMemoryConfig, FarMemoryModel, InstantMemory
+
+ENGINES = ["scalar", "batched"]
+MEMS = ["instant", "timed"]
+
+
+def _engine(kind: str, mem_kind: str, qlen: int = 32, granularity: int = 8):
+    far = InstantMemory() if mem_kind == "instant" else FarMemoryModel(
+        FarMemoryConfig.from_latency_us(1.0))
+    return make_engine(kind, EngineConfig(queue_length=qlen,
+                                          granularity=granularity), far)
+
+
+# =========================================================================
+# Engine-level view semantics
+# =========================================================================
+@pytest.mark.parametrize("kind", ENGINES)
+@pytest.mark.parametrize("mem_kind", MEMS)
+def test_spm_read_returns_live_readonly_view(kind, mem_kind):
+    eng = _engine(kind, mem_kind)
+    eng.spm_write(0, bytes(range(16)))
+    view = eng.spm_read(0, 16)
+    assert isinstance(view, np.ndarray) and view.dtype == np.uint8
+    assert not view.flags.writeable
+    assert view.base is eng.spm                   # zero-copy: aliases SPM
+    assert bytes(view) == bytes(range(16))
+    with pytest.raises(ValueError):
+        view[0] = 99                              # mutation must go via write
+    # live alias: a later spm_write is observed by the existing view
+    eng.spm_write(4, bytes([200] * 4))
+    assert view[4] == 200 and view[3] == 3
+
+
+@pytest.mark.parametrize("kind", ENGINES)
+@pytest.mark.parametrize("mem_kind", MEMS)
+def test_view_observes_dma_retirement(kind, mem_kind):
+    """A DMA landing inside a view's range after the view was taken is
+    visible through the view (documented live-alias semantics)."""
+    eng = _engine(kind, mem_kind)
+    eng.mem[100:108] = np.arange(50, 58, dtype=np.uint8)
+    view = eng.spm_read(0, 8)
+    assert bytes(view) == bytes(8)
+    eng.aload(0, 100, 8)
+    eng.drain()
+    eng.getfin_all()
+    assert bytes(view) == bytes(range(50, 58))
+
+
+@pytest.mark.parametrize("kind", ENGINES)
+def test_spm_write_ndarray_equals_bytes(kind):
+    """spm_write accepts bytes or any C-contiguous ndarray; both land the
+    same bytes (ports can skip the .tobytes() round trip)."""
+    a, b = _engine(kind, "instant"), _engine(kind, "instant")
+    payload = np.arange(8, dtype=np.float64) * 1.5
+    a.spm_write(16, payload.tobytes())
+    b.spm_write(16, payload)
+    assert np.array_equal(a.spm, b.spm)
+    got = b.spm_read(16, 64).view(np.float64)
+    assert np.array_equal(got, payload)
+
+
+@pytest.mark.parametrize("kind", ENGINES)
+def test_spm_bounds_fail_loudly(kind):
+    eng = _engine(kind, "instant")
+    with pytest.raises(SpmOverflow):
+        eng.spm_read(eng.spm_data_bytes - 4, 8)
+    with pytest.raises(SpmOverflow):
+        eng.spm_read(-8, 8)
+    with pytest.raises(SpmOverflow):
+        eng.spm_write(eng.spm_data_bytes - 4, bytes(8))
+    with pytest.raises(SpmOverflow):
+        eng.spm_write(-8, bytes(8))
+
+
+# =========================================================================
+# Oracle race policing (the scalar engine fails loudly on view races)
+# =========================================================================
+@pytest.mark.parametrize("mem_kind", ["timed"])
+def test_oracle_asserts_on_read_racing_inflight_load(mem_kind):
+    eng = _engine("scalar", mem_kind)
+    eng.aload(8, 512, 8)                    # in flight (timed memory)
+    with pytest.raises(AssertionError, match="races in-flight aload"):
+        eng.spm_read(8, 8)
+    with pytest.raises(AssertionError, match="races in-flight aload"):
+        eng.spm_read(0, 16)                 # partial overlap
+    with pytest.raises(AssertionError, match="races in-flight aload"):
+        eng.spm_write(12, bytes(8))         # write into the landing zone
+    eng.spm_read(16, 8)                     # adjacent, disjoint: fine
+    eng.spm_write(0, bytes(8))
+    eng.drain()
+    eng.getfin_all()
+    eng.spm_read(8, 8)                      # retired: fine now
+
+
+def test_oracle_allows_access_over_inflight_store():
+    """Store payloads are captured at issue — reading or rewriting the
+    source region while the store is in flight is NOT a race."""
+    eng = _engine("scalar", "timed")
+    eng.spm_write(0, bytes(range(8)))
+    eng.astore(0, 512, 8)
+    assert bytes(eng.spm_read(0, 8)) == bytes(range(8))
+    eng.spm_write(0, bytes([7] * 8))        # overwrite source: still fine
+    eng.drain()
+    eng.getfin_all()
+    assert bytes(eng.mem[512:520]) == bytes(range(8))   # captured payload
+
+
+# =========================================================================
+# Scheduler-level: views handed to coroutines follow the same contract
+# =========================================================================
+@pytest.mark.parametrize("kind,sched_cls", [("scalar", Scheduler),
+                                            ("batched", BatchScheduler)])
+@pytest.mark.parametrize("mem_kind", MEMS)
+def test_task_view_sees_subsequent_spm_write(kind, sched_cls, mem_kind):
+    eng = _engine(kind, mem_kind)
+    seen = {}
+
+    def task():
+        yield SpmWrite(0, bytes(range(8)))
+        view = yield SpmRead(0, 8)
+        before = bytes(view)
+        yield SpmWrite(0, bytes([9] * 8))   # view must observe this
+        seen["before"], seen["after"] = before, bytes(view)
+
+    sched_cls(eng).run([task()])
+    assert seen["before"] == bytes(range(8))
+    assert seen["after"] == bytes([9] * 8)
+
+
+@pytest.mark.parametrize("kind,sched_cls", [("scalar", Scheduler),
+                                            ("batched", BatchScheduler)])
+@pytest.mark.parametrize("mem_kind", MEMS)
+def test_task_view_sees_awaited_dma(kind, sched_cls, mem_kind):
+    """An awaited aload landing in a previously-taken view's range is
+    observed through the view once the task resumes."""
+    eng = _engine(kind, mem_kind)
+    eng.mem[64:72] = np.arange(30, 38, dtype=np.uint8)
+    seen = {}
+
+    def task():
+        view = yield SpmRead(0, 8)
+        assert bytes(view) == bytes(8)
+        tok = yield AloadNoWait(0, 64, 8)
+        yield AwaitRid(tok)                 # DMA retired before resume
+        seen["after"] = bytes(view)
+
+    sched_cls(eng).run([task()])
+    assert seen["after"] == bytes(range(30, 38))
+
+
+@pytest.mark.parametrize("kind,sched_cls", [("scalar", Scheduler),
+                                            ("batched", BatchScheduler)])
+def test_snapshot_copy_isolates(kind, sched_cls):
+    """The documented escape hatch: .copy() detaches a snapshot from later
+    overwrites (what the SL port's double-buffering avoids paying)."""
+    eng = _engine(kind, "instant")
+    seen = {}
+
+    def task():
+        yield SpmWrite(0, bytes(range(8)))
+        view = yield SpmRead(0, 8)
+        snap = view.copy()
+        yield Aload(0, 256, 8)              # overwrites the viewed range
+        seen["view"], seen["snap"] = bytes(view), bytes(snap)
+
+    sched_cls(eng).run([task()])
+    assert seen["view"] == bytes(eng.mem[256:264])
+    assert seen["snap"] == bytes(range(8))
+
+
+# =========================================================================
+# Property: random interleavings — views always reflect the live SPM state
+# =========================================================================
+@given(ops=st.lists(st.sampled_from(["write", "load", "read"]),
+                    min_size=1, max_size=60),
+       seed=st.integers(0, 1 << 16))
+@settings(max_examples=25, deadline=None)
+def test_view_coherence_property(ops, seed):
+    """Both engines: any interleaving of spm_write / retired aloads keeps
+    every previously-taken view bit-identical to the live SPM range it
+    aliases, and the engines agree byte-for-byte."""
+    rng = np.random.default_rng(seed)
+    engines = [_engine(k, "timed", qlen=16) for k in ENGINES]
+    fill = rng.integers(0, 256, 1024).astype(np.uint8)
+    for eng in engines:
+        eng.mem[:1024] = fill
+    views = []
+    for op in ops:
+        spm = int(rng.integers(0, 56)) * 8
+        if op == "write":
+            data = bytes(rng.integers(0, 256, 8).astype(np.uint8))
+            for eng in engines:
+                eng.spm_write(spm, data)
+        elif op == "load":
+            addr = int(rng.integers(0, 120)) * 8
+            for eng in engines:
+                eng.aload(spm, addr, 8)
+                eng.drain()                  # retire before the next access
+                eng.getfin_all()
+        else:
+            views.append((spm, [eng.spm_read(spm, 8) for eng in engines]))
+        for spm_v, pair in views:
+            for eng, v in zip(engines, pair):
+                assert bytes(v) == bytes(eng.spm[spm_v:spm_v + 8])
+        assert np.array_equal(engines[0].spm, engines[1].spm)
