@@ -86,28 +86,22 @@ def _drive_workload_port(wl: str, vector: bool, updates: int,
     the host-side throughput that bounds paper sweeps — `vector=True` runs
     the AloadVec/AstoreVec (or pipelined-chase) port, `vector=False` PR 1's
     scalar-yield port."""
-    from repro.core.coroutines import BatchScheduler
-    from repro.core.disambiguation import CuckooAddressSet
-    from repro.core.engine import make_engine
-    from repro.core.farmem import FarMemoryConfig, FarMemoryModel
-    from repro.core.workloads import WORKLOADS
+    from repro.amu import REGISTRY, AmuConfig, AmuSession
 
     kw = dict(_PORT_SCALE.get(wl, {}))
     if wl == "GUPS":
         kw["updates"] = updates
     if vector:
         kw.update(vector=True, **_PORT_VEC.get(wl, {}))
-    inst = WORKLOADS[wl].build(0, **kw)
-    far = FarMemoryModel(FarMemoryConfig.from_latency_us(latency_us))
-    eng = make_engine("batched", inst.engine_config, far, inst.mem)
-    disamb = CuckooAddressSet() if inst.disambiguation else None
-    sched = BatchScheduler(eng, disambiguator=disamb)
+    inst = REGISTRY.build(wl, 0, **kw)
+    session = AmuSession(AmuConfig(engine="batched",
+                                   latency_us=latency_us, verify=False))
+    session.prepare(inst)       # build + stack construction outside timing
     t0 = time.perf_counter()
-    sched.run(inst.tasks)
-    eng.drain()
+    stats = session.execute()
     dt = time.perf_counter() - t0
-    assert inst.verify(eng.mem)
-    return far.requests / dt
+    assert inst.verify(session.engine.mem)
+    return stats.requests / dt
 
 
 def engine_driver(n_requests: int = 100_000, smoke: bool = False) -> List[Row]:

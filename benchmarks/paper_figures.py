@@ -7,38 +7,33 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
+from repro.amu import REGISTRY, AmuConfig
 from repro.core import simulator as sim
 from repro.core.simulator import PowerModel
 
 LATS = [0.1, 0.2, 0.5, 1.0, 2.0, 5.0]
-WORKLOADS = list(sim.WORKLOADS)
+WORKLOADS = REGISTRY.names()
 Row = Tuple[str, float, str]
 
-# Which timed-engine implementation drives the AMU configs. "batched" (the
-# vectorized engine + batch-stepped scheduler) makes the full 4-config x
-# 8-workload x 5-latency sweep tractable on CPU; "scalar" is the per-event
-# oracle. The engines themselves are trace-identical under a fixed scheduler
-# (tests/test_batched_engine.py); the batch-stepped scheduler's different
-# interleaving shifts timing stats ~1%, so archived sweeps should record
-# which engine produced them. benchmarks.run --engine=... overrides this.
-ENGINE = "batched"
-
-# Run the AloadVec/AstoreVec (and software-pipelined chase) workload ports
-# instead of the scalar-yield ports — every workload has one.
-# benchmarks.run --vector sets this. Vector ports are trace-equivalent in
-# memory effects (same far-memory traffic, verified results) and sweep
-# several times faster on the host, but they MODEL the vector-AMI software
-# configuration (one amortized issue per request vector): their simulated
-# times/MLP are a faster machine point than the paper's scalar coroutine
-# port. Record residuals vs the paper from scalar-port sweeps; archive
-# --vector sweeps as the vector-AMI variant.
-VECTOR = False
+# The AmuConfig behind every AMU data point of the sweep. The default drives
+# the batched engine + batch-stepped scheduler, which makes the full
+# 4-config x workload x latency grid tractable on CPU ("scalar" is the
+# per-event oracle; the engines are trace-identical under a fixed scheduler
+# — tests/test_batched_engine.py — and the batch-stepped scheduler's
+# different interleaving shifts timing stats ~1%, so archived sweeps record
+# which config produced them). `benchmarks.run --engine/--vector` derive
+# onto this. vector=True runs the AloadVec/AstoreVec (and software-
+# pipelined chase) ports: trace-equivalent in memory effects, several times
+# faster on the host, but MODELING the vector-AMI software configuration
+# (one amortized issue per request vector) — a faster machine point than
+# the paper's scalar coroutine port. Record residuals vs the paper from
+# scalar-port sweeps; archive --vector sweeps as the vector-AMI variant.
+AMU = AmuConfig(engine="batched")
 
 
 def _run(wl: str, config: str, latency_us: float, **kw) -> Dict[str, float]:
     if config.startswith("amu"):
-        kw.setdefault("engine", ENGINE)
-        kw.setdefault("vector", VECTOR)
+        kw.setdefault("amu", AMU)
     return sim.run(wl, config, latency_us, **kw)
 
 
@@ -114,7 +109,7 @@ def table4_prefetch() -> List[Row]:
     rows = []
     groups = (2, 8, 16, 32, 64, 128)
     for wl in ("GUPS", "HJ", "STREAM"):
-        spec = sim.WORKLOADS[wl]
+        spec = REGISTRY[wl]
         units = spec.build(0).units
         b0 = _run(wl, "baseline", 0.1)["us"]
         for L in LATS:
@@ -139,7 +134,7 @@ def fig3_group_sensitivity() -> List[Row]:
     """Fig 3: GP-GUPS performance vs group size across hardware scales —
     the best group size shifts with resources/latency (prefetch fragility)."""
     rows = []
-    spec = sim.WORKLOADS["GUPS"]
+    spec = REGISTRY["GUPS"]
     units = spec.build(0).units
     for core_name, core in (("cxl_ideal", sim.CXL_IDEAL_CORE),
                             ("x2", sim.CoreConfig(mshr=512, rob=1024,

@@ -58,10 +58,10 @@ def main() -> None:
             print("error: --engine requires a value: scalar | batched",
                   file=sys.stderr)
             raise SystemExit(2)
-        pf.ENGINE = args[i + 1]
+        pf.AMU = pf.AMU.derive(engine=args[i + 1])
         del args[i:i + 2]
     if "--vector" in args:
-        pf.VECTOR = True
+        pf.AMU = pf.AMU.derive(vector=True)
         args.remove("--vector")
     smoke = "--smoke" in args
     if smoke:

@@ -1,0 +1,35 @@
+"""Unified AMU session API — the paper's programming framework as one
+coherent public surface.
+
+Three pieces (see TESTING.md for the migration table from the old knobs):
+
+* :class:`AmuConfig` — one frozen config object (engine kind, scheduler
+  kind, vector/pipeline-K, DMA mode, SPM budget, far-memory operating
+  point) with validation and ``derive``-style variation.
+* :class:`AmuSession` — a context manager owning engine + scheduler +
+  far-memory lifecycle; ``session.run(port) -> RunStats``.
+* :func:`workload` / :data:`REGISTRY` — the pluggable workload registry
+  (one decorated builder per scenario, with declared capabilities), plus
+  the :class:`Port` protocol any custom workload can satisfy.
+
+Port bodies use the typed command facade :data:`ctx`
+(``yield ctx.aload(...)`` etc.) instead of hand-rolling command objects.
+"""
+from repro.amu.commands import CommandFacade, ctx
+from repro.amu.config import FREQ_GHZ, LINE, AmuConfig, far_config
+from repro.amu.deprecation import AmuDeprecationWarning
+from repro.amu.registry import (REGISTRY, Port, WorkloadDef,
+                                WorkloadRegistry, workload)
+from repro.amu.session import AmuSession, RunStats
+
+# Populate REGISTRY with the built-in Table 3 workloads. Deliberately last:
+# the port module imports the facade/registry submodules above, which are
+# fully initialized by now even when the import chain started from
+# `repro.core.workloads` itself.
+import repro.core.workloads  # noqa: E402,F401  (registration side-effect)
+
+__all__ = [
+    "AmuConfig", "AmuSession", "RunStats", "ctx", "CommandFacade",
+    "workload", "Port", "WorkloadDef", "WorkloadRegistry", "REGISTRY",
+    "AmuDeprecationWarning", "far_config", "FREQ_GHZ", "LINE",
+]

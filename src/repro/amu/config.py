@@ -1,0 +1,143 @@
+"""`AmuConfig` — one frozen, validated config object for an AMU run.
+
+Replaces the six orthogonal knobs that used to thread positionally through
+``run_amu`` / ``sim.run`` / the builders (``engine=``, ``vector=``,
+``dma_mode=``, pipeline ``K``, SPM budget, far-memory latency): construct
+one config, derive variants with :meth:`AmuConfig.derive`, hand it to
+:class:`repro.amu.AmuSession`.
+
+Migration table (old knob -> config field) lives in TESTING.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, replace
+from typing import Optional
+
+from repro.configs.base import EngineConfig
+from repro.core.coroutines import SCHEDULER_KINDS, CostModel
+from repro.core.engine import ENGINE_KINDS
+from repro.core.farmem import FarMemoryConfig
+
+#: Simulated core clock (Table 2: 3 GHz, 6-wide OoO).
+FREQ_GHZ = 3.0
+#: Baseline cache-line granularity.
+LINE = 64
+
+
+def far_config(latency_us: float, bandwidth_gbs: float = 64.0,
+               max_inflight: int = 0) -> FarMemoryConfig:
+    """The paper's far-memory operating point at `latency_us` (Fig 1/7).
+    (Transfer granularity is a property of each request, not of the
+    device — set it on the :class:`EngineConfig` instead.)"""
+    return FarMemoryConfig.from_latency_us(
+        latency_us, freq_ghz=FREQ_GHZ, bandwidth_gbs=bandwidth_gbs,
+        max_inflight=max_inflight)
+
+
+@dataclass(frozen=True)
+class AmuConfig:
+    """Everything an AMU execution needs, in one validated object.
+
+    * ``engine`` — timed-engine implementation: ``"scalar"`` (the per-event
+      oracle) or ``"batched"`` (vectorized SoA; production sweeps).
+    * ``scheduler`` — runtime loop: ``"auto"`` (follow the engine),
+      ``"scalar"`` (one getfin + one task step per turn) or ``"batched"``
+      (epoch-stepped ``getfin_all`` drain).
+    * ``vector`` — run the workload's AloadVec/AstoreVec (or software-
+      pipelined chase) port where one is registered.
+    * ``pipeline_k`` — chases per coroutine for pipelined ports
+      (``None`` -> the port's default).
+    * ``dma_mode`` — external-engine ablation: ``batch_ids=1`` plus the
+      per-request descriptor/doorbell cost.
+    * ``llvm_mode`` — compiler-lowered loop cost model (Table 4 AMU-LLVM),
+      plus any workload-declared LLVM rebuild kwargs.
+    * ``latency_us`` / ``max_inflight`` — far-memory operating point
+      (``max_inflight`` models device-side queue backpressure, 0 =
+      unlimited); ``far`` replaces both with a fully custom
+      :class:`FarMemoryConfig` — setting ``far`` together with a
+      non-default latency/backpressure knob is rejected, so a sweep's
+      ``derive(latency_us=...)`` can never be silently ignored.
+    * ``engine_config`` — overrides the workload's sized
+      :class:`EngineConfig` wholesale; ``spm_bytes`` overrides just the
+      SPM budget of whichever config is in effect.
+    * ``seed`` / ``verify`` — build seed; run the port's numpy oracle at
+      the end.
+    """
+    engine: str = "batched"
+    scheduler: str = "auto"
+    vector: bool = False
+    pipeline_k: Optional[int] = None
+    dma_mode: bool = False
+    llvm_mode: bool = False
+    latency_us: Optional[float] = None     # None -> 1.0 (unless far= given)
+    max_inflight: int = 0
+    far: Optional[FarMemoryConfig] = None
+    engine_config: Optional[EngineConfig] = None
+    spm_bytes: Optional[int] = None
+    seed: int = 0
+    verify: bool = True
+
+    def __post_init__(self) -> None:
+        if self.engine not in ENGINE_KINDS:
+            raise KeyError(f"unknown engine {self.engine!r}; "
+                           f"known: {sorted(ENGINE_KINDS)}")
+        if self.scheduler != "auto" and self.scheduler not in SCHEDULER_KINDS:
+            raise KeyError(f"unknown scheduler {self.scheduler!r}; "
+                           f"known: {sorted(SCHEDULER_KINDS)} or 'auto'")
+        if self.pipeline_k is not None and self.pipeline_k < 1:
+            raise ValueError(f"pipeline_k must be >= 1, got {self.pipeline_k}")
+        if self.far is not None and (self.latency_us is not None
+                                     or self.max_inflight):
+            # an explicit FarMemoryConfig replaces the whole operating
+            # point; rejecting the combination means a sweep's
+            # derive(latency_us=...) can never be silently discarded
+            raise ValueError(
+                "far= replaces the whole far-memory model; don't also set "
+                "latency_us/max_inflight (derive a new far_config instead)")
+        if self.latency_us is not None and not self.latency_us > 0:
+            raise ValueError(f"latency_us must be > 0, got {self.latency_us}")
+        if self.max_inflight < 0:
+            raise ValueError(
+                f"max_inflight must be >= 0, got {self.max_inflight}")
+        if self.spm_bytes is not None and self.spm_bytes <= 0:
+            raise ValueError(f"spm_bytes must be > 0, got {self.spm_bytes}")
+        if self.seed < 0:
+            raise ValueError(f"seed must be >= 0, got {self.seed}")
+
+    # ------------------------------------------------------------ derive
+    def derive(self, **changes) -> "AmuConfig":
+        """``dataclasses.replace`` with re-validation: the one sanctioned
+        way to vary a knob (sweeps derive per-latency configs from one
+        base instead of re-threading positional arguments)."""
+        return replace(self, **changes)
+
+    # ------------------------------------------------- resolved properties
+    @property
+    def scheduler_kind(self) -> str:
+        """The runtime loop actually used (``"auto"`` follows the engine)."""
+        return self.engine if self.scheduler == "auto" else self.scheduler
+
+    def resolve_engine_config(self, port_config: EngineConfig) -> EngineConfig:
+        """The :class:`EngineConfig` for a run: explicit override, else the
+        port's own sizing; then the SPM budget and DMA-mode ablation."""
+        ecfg = self.engine_config or port_config
+        if self.spm_bytes is not None:
+            ecfg = dataclasses.replace(ecfg, spm_bytes=self.spm_bytes)
+        if self.dma_mode:
+            ecfg = dataclasses.replace(ecfg, batch_ids=1)
+        return ecfg
+
+    def resolve_far_config(self) -> FarMemoryConfig:
+        if self.far is not None:
+            return self.far
+        lat = 1.0 if self.latency_us is None else self.latency_us
+        return far_config(lat, max_inflight=self.max_inflight)
+
+    def cost_model(self) -> CostModel:
+        if not self.llvm_mode:
+            return CostModel()
+        # compiler-lowered loop: no coroutine frame save/restore, fewer
+        # framework instructions per op (Table 4: AMU-LLVM beats hand-ported)
+        return replace(CostModel(), switch_insts=20, switch_stall_cycles=55.0,
+                       ami_issue_insts=6, getfin_insts=6)

@@ -1,0 +1,23 @@
+"""Deprecation plumbing for the legacy (pre-session) AMU surface.
+
+The old entry points (``simulator.run_amu``, the ``WORKLOADS`` /
+``VECTOR_WORKLOADS`` module dicts) keep working as thin shims over
+:class:`repro.amu.AmuSession`, but every use emits
+:class:`AmuDeprecationWarning`. CI runs a job with this warning promoted to
+an error (``-W error::repro.amu.deprecation.AmuDeprecationWarning``) so no
+in-repo caller can silently depend on the shimmed surface; the dedicated
+shim tests opt back in with ``pytest.warns``.
+"""
+from __future__ import annotations
+
+import warnings
+
+
+class AmuDeprecationWarning(DeprecationWarning):
+    """A deprecated pre-``AmuSession`` AMU entry point was used."""
+
+
+def warn_deprecated(old: str, new: str, stacklevel: int = 3) -> None:
+    warnings.warn(f"{old} is deprecated; use {new} instead "
+                  f"(see TESTING.md's migration table)",
+                  AmuDeprecationWarning, stacklevel=stacklevel)

@@ -1,0 +1,180 @@
+"""`AmuSession` — one object owning engine + scheduler + far-memory
+lifecycle, with ``session.run(port) -> RunStats``.
+
+The session replaces the ad-hoc build-engine-build-scheduler-run-drain
+choreography that used to be copy-pasted between ``run_amu``, the benchmark
+drivers and the test suites::
+
+    from repro.amu import AmuConfig, AmuSession
+
+    with AmuSession(AmuConfig(engine="batched", vector=True)) as s:
+        stats = s.run("GUPS")            # registered workload by name
+        assert stats.verified
+        mem = s.engine.mem               # engine/far/instance stay inspectable
+
+``run`` accepts a registered workload name or any prebuilt
+:class:`~repro.amu.registry.Port` (e.g. a ``WorkloadInstance`` built with
+custom knobs). Frontier-parallel ports (BFS) are driven level-
+synchronously; everything else runs straight through the scheduler. After
+each run the engine is drained and its ID-conservation invariants checked.
+``run`` = :meth:`AmuSession.prepare` (build the stack) +
+:meth:`AmuSession.execute` (drive it) — benchmarks use the split form to
+keep construction out of their timed region.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional, Union
+
+from dataclasses import dataclass, fields
+
+from repro.amu.config import FREQ_GHZ, AmuConfig
+from repro.amu.registry import REGISTRY, Port, WorkloadRegistry
+from repro.core.coroutines import SCHEDULER_KINDS
+from repro.core.disambiguation import CuckooAddressSet
+from repro.core.engine import make_engine
+from repro.core.farmem import FarMemoryModel
+
+
+@dataclass(frozen=True)
+class RunStats:
+    """Typed result of one :meth:`AmuSession.run` (plus dict-style reads
+    for the pre-session callers that indexed the old stats dict)."""
+    cycles: float
+    insts: float
+    ipc: float
+    mlp: float
+    requests: int
+    bytes: int
+    disamb_cycles: float
+    disamb_frac: float
+    us: float
+    units: int
+    vector: bool
+    verified: Optional[bool]
+    workload: str = ""
+
+    # mapping-style access keeps old dict-consumer code working unchanged;
+    # only FIELD names are keys (method names like "keys" stay invisible,
+    # exactly as on the old plain dict)
+    def __getitem__(self, key: str):
+        if key in self.keys():
+            return getattr(self, key)
+        raise KeyError(key)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.keys()
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self.keys())
+
+    def keys(self):
+        return [f.name for f in fields(self)]
+
+    def get(self, key: str, default=None):
+        return getattr(self, key) if key in self.keys() else default
+
+    def to_dict(self) -> Dict[str, object]:
+        return {f.name: getattr(self, f.name) for f in fields(self)}
+
+
+class AmuSession:
+    """Context manager owning one AMU execution stack.
+
+    Holds the :class:`AmuConfig`; each :meth:`run` builds the far-memory
+    model, engine, cost model, disambiguator and scheduler from it, runs the
+    port to completion, drains + invariant-checks the engine, and leaves
+    ``engine`` / ``far`` / ``scheduler`` / ``instance`` on the session for
+    inspection (traces, SPM bytes, far-memory contents).
+    """
+
+    def __init__(self, config: AmuConfig = AmuConfig(),
+                 registry: WorkloadRegistry = REGISTRY):
+        self.config = config
+        self.registry = registry
+        self.engine = None
+        self.far: Optional[FarMemoryModel] = None
+        self.scheduler = None
+        self.instance: Optional[Port] = None
+        self._use_vector = False
+
+    # ------------------------------------------------------------ lifecycle
+    def __enter__(self) -> "AmuSession":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    def close(self) -> None:
+        """Drop the execution stack (runs already drain + check the engine;
+        closing only releases the references)."""
+        self.engine = self.far = self.scheduler = self.instance = None
+
+    # ----------------------------------------------------------------- run
+    def _build(self, port: Union[str, Port], **build_kw) -> Port:
+        if not isinstance(port, str):
+            return port
+        cfg = self.config
+        return self.registry.build(port, cfg.seed, vector=cfg.vector,
+                                   llvm_mode=cfg.llvm_mode,
+                                   pipeline_k=cfg.pipeline_k, **build_kw)
+
+    def prepare(self, port: Union[str, Port], *,
+                record_trace: bool = False, **build_kw) -> Port:
+        """Build the execution stack for `port` without running it: far
+        memory, engine, disambiguator, scheduler — all from the config.
+        Callers that time the run (benchmarks) call this first, then
+        :meth:`execute`; :meth:`run` is the two fused."""
+        cfg = self.config
+        inst = self._build(port, **build_kw)
+        # which port actually runs: registry builds are stamped; raw
+        # prebuilt ports without the stamp fall back to the config's intent
+        self._use_vector = bool(getattr(inst, "vector", cfg.vector))
+        ecfg = cfg.resolve_engine_config(inst.engine_config)
+        far = FarMemoryModel(cfg.resolve_far_config())
+        eng = make_engine(cfg.engine, ecfg, far, inst.mem,
+                          record_trace=record_trace)
+        disamb = CuckooAddressSet() if inst.disambiguation else None
+        sched = SCHEDULER_KINDS[cfg.scheduler_kind](
+            eng, cost=cfg.cost_model(), disambiguator=disamb,
+            dma_mode=cfg.dma_mode)
+        self.engine, self.far, self.scheduler, self.instance = \
+            eng, far, sched, inst
+        return inst
+
+    def execute(self) -> RunStats:
+        """Run the :meth:`prepare`-d port to completion, drain the engine,
+        check ID-conservation invariants, and return the stats."""
+        cfg = self.config
+        inst, eng, sched = self.instance, self.engine, self.scheduler
+        if inst is None:
+            raise RuntimeError("no port prepared; call prepare() first")
+        if hasattr(inst, "make_round_tasks"):        # frontier parallelism
+            frontier = [inst.root]                   # type: ignore[union-attr]
+            while frontier:
+                sched.run(inst.make_round_tasks(frontier))  # type: ignore
+                frontier = sorted(inst.next_frontier)       # type: ignore
+        else:
+            sched.run(inst.tasks)
+        eng.drain()
+        eng.check_invariants()
+        stats = sched.summary()
+        return RunStats(
+            cycles=stats["cycles"], insts=stats["insts"], ipc=stats["ipc"],
+            mlp=stats["mlp"], requests=stats["requests"],
+            bytes=stats["bytes"], disamb_cycles=stats["disamb_cycles"],
+            disamb_frac=stats["disamb_frac"],
+            us=stats["cycles"] / (FREQ_GHZ * 1e3),
+            units=inst.units, vector=self._use_vector,
+            verified=bool(inst.verify(eng.mem)) if cfg.verify else None,
+            workload=inst.name)
+
+    def run(self, port: Union[str, Port], *,
+            record_trace: bool = False, **build_kw) -> RunStats:
+        """Run `port` (a registered name, or a prebuilt Port) to completion.
+
+        ``build_kw`` reaches the builder for name lookups (sizes and other
+        workload knobs); ``record_trace=True`` keeps the engine's
+        issue/fin trace for differential comparisons.
+        """
+        self.prepare(port, record_trace=record_trace, **build_kw)
+        return self.execute()

@@ -1,8 +1,12 @@
 """The paper's contribution: AMI semantics, AMU engine, coroutine framework,
-software memory disambiguation, and the calibrated performance model."""
-from repro.core.coroutines import (Acquire, Aload, AloadNoWait, Astore,
-                                   AstoreNoWait, AwaitRid, BatchScheduler,
-                                   Cost, CostModel, Release, Scheduler,
+software memory disambiguation, and the calibrated performance model.
+
+The public programming surface (config + session + registry + command
+facade) lives in :mod:`repro.amu`; this package holds the mechanism."""
+from repro.core.coroutines import (Acquire, AcquireVec, Aload, AloadNoWait,
+                                   AloadVec, Astore, AstoreNoWait, AstoreVec,
+                                   AwaitRid, AwaitRids, BatchScheduler, Cost,
+                                   CostModel, Release, ReleaseVec, Scheduler,
                                    SpmRead, SpmWrite)
 from repro.core.disambiguation import CuckooAddressSet
 from repro.core.engine import (AsyncMemoryEngine, BatchedAsyncMemoryEngine,

@@ -163,6 +163,28 @@ class Release:     # software disambiguation: end_access
 
 
 @dataclass(frozen=True, eq=False)
+class AcquireVec:
+    """Vectorized ``start_access`` (§5.1 applied to a pipeline batch):
+    acquire EVERY block address in `addrs` in one generator hop — the
+    counterpart of :class:`AloadVec` for the lock plane. `addrs` must be
+    distinct and ascending (block-deduped total-order locking, see
+    ``workloads._lock_set``): acquisition is sequential and on a conflict
+    the task suspends in that block's FIFO, resuming acquisition from the
+    next address when ownership is handed off. A K-chase batch therefore
+    pays ONE coroutine round trip for its whole lock set instead of K
+    per-op Acquire hops; the per-block cuckoo probe/insert work is still
+    charged per element."""
+    addrs: object
+
+
+@dataclass(frozen=True, eq=False)
+class ReleaseVec:
+    """Vectorized ``end_access``: release every block in `addrs` (and hand
+    each one's ownership to its head waiter) in one generator hop."""
+    addrs: object
+
+
+@dataclass(frozen=True, eq=False)
 class SpmWrite:
     """Synchronous register->SPM store. `data` may be bytes or any
     C-contiguous ndarray (ports hand back computed arrays without a
@@ -225,6 +247,18 @@ class Scheduler:
         # (id(task) -> list), and AwaitRids countdowns (id(task) -> remaining)
         self._vec_acc: Dict[int, list] = {}
         self._wait_count: Dict[int, int] = {}
+        # AcquireVec continuations: id(task) -> (addrs, index suspended at)
+        self._acq_state: Dict[int, tuple] = {}
+        # wake planning (scalar oracle): token -> done time, a heap of
+        # group-ready times (each waiting task resumes exactly when the
+        # LAST of its tokens completes), and exact heap deletion via
+        # dead-mark counts — a live group's wake may sit at or below the
+        # clock when the finished backlog lags, so popping by `<= t` (the
+        # BatchScheduler shortcut) would mistake it for dispatched here.
+        self._tok_time: Dict[int, float] = {}
+        self._wake_heap: list = []
+        self._wake_dead: Dict[float, int] = {}
+        self._wait_wake: Dict[int, float] = {}   # id(task) -> its group wake
         self._live = 0
 
     # --------------------------------------------------------------- helpers
@@ -237,6 +271,7 @@ class Scheduler:
     def _new_token(self, rid: int) -> int:
         self._tok += 1
         self._rid_tok[rid] = self._tok
+        self._tok_time[self._tok] = self.engine.done_time(rid)
         return self._tok
 
     def _new_tokens(self, rids) -> list:
@@ -250,14 +285,18 @@ class Scheduler:
         """Suspend `task` until every token in `toks` completes (tokens that
         already completed unclaimed are consumed immediately)."""
         remaining = 0
+        wake = 0.0
         for tok in toks:
             if tok in self._unclaimed:
                 self._unclaimed.discard(tok)
             else:
                 self._waiting_tok[tok] = task
+                wake = max(wake, self._tok_time[tok])
                 remaining += 1
         if remaining:
             self._wait_count[id(task)] = remaining
+            self._wait_wake[id(task)] = wake
+            heapq.heappush(self._wake_heap, wake)
         else:
             self._ready.append(task)
 
@@ -378,16 +417,63 @@ class Scheduler:
             waiter = self.disamb.end_access(cmd.addr)
             self.disamb_cycles += self.t - t0
             if waiter is not None:
-                self._ready.append(waiter)
+                self._grant(waiter)
+            self._ready.append(task)
+        elif isinstance(cmd, AcquireVec):
+            assert self.disamb is not None, "no disambiguator configured"
+            addrs = [int(a) for a in cmd.addrs]
+            t0 = self.t
+            # one hop for the whole lock set; the per-block probe/insert
+            # work is still paid per element
+            self._tick_insts(c.acquire_insts * len(addrs))
+            self.t += c.acquire_stall_cycles * len(addrs)
+            self.disamb_cycles += self.t - t0
+            self._acquire_from(task, addrs, 0)
+        elif isinstance(cmd, ReleaseVec):
+            assert self.disamb is not None
+            addrs = [int(a) for a in cmd.addrs]
+            t0 = self.t
+            self._tick_insts(c.release_insts * len(addrs))
+            self.t += c.release_stall_cycles * len(addrs)
+            self.disamb_cycles += self.t - t0
+            for a in addrs:
+                waiter = self.disamb.end_access(a)
+                if waiter is not None:
+                    self._grant(waiter)
             self._ready.append(task)
         else:
             raise TypeError(f"unknown command {cmd!r}")
+
+    def _acquire_from(self, task: Task, addrs, i: int) -> None:
+        """Acquire ``addrs[i:]`` in order for `task`. On a conflict the task
+        is already enqueued in that block's waiter FIFO; remember where it
+        stopped so the Release hand-off can continue the acquisition."""
+        n = len(addrs)
+        while i < n:
+            if not self.disamb.start_access(addrs[i], waiter=task):
+                self._acq_state[id(task)] = (addrs, i)
+                return
+            i += 1
+        self._ready.append(task)
+
+    def _grant(self, waiter: Task) -> None:
+        """A Release handed `waiter` ownership of the released block: resume
+        it — or, if it was suspended mid-:class:`AcquireVec`, continue
+        acquiring its remaining addresses (the block it waited on is now
+        owned via the hand-off)."""
+        st = self._acq_state.pop(id(waiter), None)
+        if st is None:
+            self._ready.append(waiter)
+        else:
+            addrs, i = st
+            self._acquire_from(waiter, addrs, i + 1)
 
     def _dispatch_fin(self, rid: int) -> None:
         """Route a completed request ID to its awaiting task (if any). A task
         suspended on AwaitRids only resumes — and only pays the coroutine
         switch once — when its LAST outstanding token completes."""
         tok = self._rid_tok.pop(rid)
+        self._tok_time.pop(tok, None)
         task = self._waiting_tok.pop(tok, None)
         if task is None:
             self._unclaimed.add(tok)
@@ -398,15 +484,53 @@ class Scheduler:
                 self._wait_count[id(task)] = cnt - 1
                 return                       # still waiting on more tokens
             del self._wait_count[id(task)]
+        wake = self._wait_wake.pop(id(task), None)
+        if wake is not None:                 # exact heap deletion (see init)
+            self._wake_dead[wake] = self._wake_dead.get(wake, 0) + 1
         self._tick_insts(self.cost.switch_insts)  # resume the awaiter
         self.t += self.cost.switch_stall_cycles
         self._ready.append(task)
 
     def _idle_until_completion(self) -> None:
         """Nothing runnable: validate liveness and advance to the next
-        completion (shared deadlock detection for both runtime loops)."""
+        completion, with exact-wake planning (the BatchScheduler idea,
+        scalar-loop-exact): any completion that retires strictly before the
+        earliest group-ready time cannot resume a task, so its poll turn is
+        replayed here in a tight loop — same per-turn accounting (advance to
+        the completion, one getfin charge, dispatch) as the runtime loop,
+        bit-for-bit — instead of paying a full loop turn per completion.
+        Parked tasks can be unblocked by ANY completion (a freed ID), so
+        they force single-stepping; the readying completion itself is left
+        to the runtime loop, which polls it and runs the awakened task in
+        the same turn, exactly as before."""
         if not (self._waiting_count() or self._alloc_parked):
             raise DeadlockError("live tasks but none ready/waiting")
+        c = self.cost
+        heap = self._wake_heap
+        dead = self._wake_dead
+        while heap and dead.get(heap[0]):  # exact lazy deletion
+            if dead[heap[0]] == 1:
+                del dead[heap[0]]
+            else:
+                dead[heap[0]] -= 1
+            heapq.heappop(heap)
+        # heap[0] (if any) is now a LIVE group's wake; when it already sits
+        # at/below the clock its final token waits in the finished backlog,
+        # so only a strictly-future wake opens the drain window
+        if heap and heap[0] > self.t and not self._alloc_parked:
+            wake = heap[0]
+            while True:
+                next_done = self.engine.next_completion_time
+                # retirement happens at max(t, next_done): only provably
+                # pre-wake turns (every retired token non-final) drain here
+                if next_done is None or max(self.t, next_done) >= wake:
+                    break
+                self.t = max(self.t, next_done)
+                self.engine.advance(self.t)
+                self._tick_insts(c.getfin_insts)
+                rid = self.engine.getfin()
+                if rid:
+                    self._dispatch_fin(rid)
         next_done = self.engine.next_completion_time
         if next_done is None:
             if self.engine.finished_pending:

@@ -14,15 +14,16 @@ The paper evaluates on Gem5 (Table 2: 3 GHz 6-wide OoO, 512 ROB, 192 LSQ,
   that covers a fraction of loads for `sequential=True` workloads.
 
 * **AMU / AMU (DMA-mode)** — not a model at all: the *actual* coroutine
-  ports of the benchmarks execute against the timed engine (`run_amu`).
-  Execution time, IPC, and MLP fall out of the run. DMA-mode sets
-  `batch_ids=1` and the per-request descriptor/doorbell cost, reproducing
-  the external-engine ablation. The `engine=` knob picks the scalar
-  per-event oracle (:class:`~repro.core.engine.AsyncMemoryEngine`) or the
-  vectorized batched path
-  (:class:`~repro.core.engine.BatchedAsyncMemoryEngine` +
+  ports of the benchmarks execute against the timed engine through a
+  :class:`repro.amu.AmuSession`. Execution time, IPC, and MLP fall out of
+  the run. DMA-mode sets `batch_ids=1` and the per-request
+  descriptor/doorbell cost, reproducing the external-engine ablation. The
+  session's :class:`repro.amu.AmuConfig` picks the scalar per-event oracle
+  (:class:`~repro.core.engine.AsyncMemoryEngine`) or the vectorized batched
+  path (:class:`~repro.core.engine.BatchedAsyncMemoryEngine` +
   :class:`~repro.core.coroutines.BatchScheduler`), which are proven
-  trace-equivalent by tests/test_batched_engine.py.
+  trace-equivalent by tests/test_batched_engine.py. The old positional-knob
+  `run_amu` survives as a deprecated shim.
 
 Calibration: the free constants (instruction counts per iteration, coroutine
 switch cost, store-buffer depth) were tuned once against the paper's headline
@@ -31,23 +32,18 @@ EXPERIMENTS.md reports the residuals.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.amu import REGISTRY, AmuConfig, AmuSession
+from repro.amu.config import FREQ_GHZ, LINE, far_config
+from repro.amu.deprecation import warn_deprecated
 from repro.configs.base import EngineConfig
-from repro.core.coroutines import SCHEDULER_KINDS, CostModel, Scheduler
-from repro.core.disambiguation import CuckooAddressSet
-from repro.core.engine import AsyncMemoryEngine, make_engine
-from repro.core.farmem import FarMemoryConfig, FarMemoryModel
-from repro.core.workloads import (VECTOR_WORKLOADS, WORKLOADS,
-                                  IterationProfile, WorkloadInstance,
-                                  WorkloadSpec)
-
-FREQ_GHZ = 3.0
-LINE = 64
+from repro.core.farmem import FarMemoryModel
+from repro.core.workloads import IterationProfile  # noqa: F401 (re-export +
+#                                                    registry population)
 
 
 @dataclass(frozen=True)
@@ -66,14 +62,6 @@ class CoreConfig:
 
 BASELINE_CORE = CoreConfig()
 CXL_IDEAL_CORE = CoreConfig(mshr=256, pf_coverage=0.8)
-
-
-def far_config(latency_us: float, granularity: int = LINE,
-               bandwidth_gbs: float = 64.0,
-               max_inflight: int = 0) -> FarMemoryConfig:
-    return FarMemoryConfig.from_latency_us(
-        latency_us, freq_ghz=FREQ_GHZ, bandwidth_gbs=bandwidth_gbs,
-        max_inflight=max_inflight)
 
 
 # =========================================================================
@@ -202,79 +190,40 @@ def simulate_window(profile: IterationProfile, iters: int, latency_us: float,
 # =========================================================================
 # AMU execution (real coroutine run against the timed engine)
 # =========================================================================
-def run_amu(spec: WorkloadSpec, latency_us: float, dma_mode: bool = False,
+def run_amu(spec, latency_us: float, dma_mode: bool = False,
             seed: int = 0, llvm_mode: bool = False,
             engine_config: Optional[EngineConfig] = None,
             verify: bool = True, engine: str = "scalar",
             vector: bool = False) -> Dict[str, float]:
-    """Run the real coroutine port of `spec` against the timed engine.
-
-    `engine=` selects the execution path: ``"scalar"`` is the per-event
-    heapq oracle (`AsyncMemoryEngine` + `Scheduler`), ``"batched"`` the
-    vectorized SoA engine with the batch-stepped runtime loop
-    (`BatchedAsyncMemoryEngine` + `BatchScheduler`), fast enough for the
-    full latency x queue-depth paper sweeps on CPU. The engines are
-    trace-identical under a fixed scheduler (tests/test_batched_engine.py);
-    the batch-stepped scheduler's coarser interleaving shifts timing stats
-    by ~1%, so results are equivalent, not bit-identical, across the knob.
-
-    `vector=True` runs the workload's vector-command port (AloadVec/
-    AstoreVec batches — or software-pipelined chases — per generator hop;
-    every workload has one, see `VECTOR_WORKLOADS`). The returned
-    ``stats["vector"]`` records which port ran. Vector ports are
-    trace-equivalent to the scalar ports in *memory effects* (same
-    far-memory bytes, same verify(); tests/test_batched_engine.py and
-    tests/test_pipelined_ports.py), but they model the vector-AMI software
-    configuration — one amortized issue cost per request vector — so their
-    *timing* is a different (faster) machine point than the paper's scalar
-    coroutine port. Paper-figure residuals are recorded from scalar-port
-    sweeps; `--vector` sweeps are archived separately as the vector-AMI
-    variant.
-    """
-    if engine not in SCHEDULER_KINDS:
-        raise KeyError(f"unknown engine {engine!r}; "
-                       f"known: {sorted(SCHEDULER_KINDS)}")
-    use_vector = vector and spec.name in VECTOR_WORKLOADS
+    """DEPRECATED positional-knob entry point; use
+    ``AmuSession(AmuConfig(...)).run(name)`` (see TESTING.md's migration
+    table). Kept as a thin shim: it builds the equivalent
+    :class:`~repro.amu.AmuConfig` and returns the session's stats as the
+    old dict — byte-identical to the pre-session behaviour for every
+    REGISTERED workload (pinned by tests/test_session_api.py across all
+    11). Custom unregistered WorkloadSpecs still run (built via their own
+    ``build`` and handed to the session as prebuilt ports), with one
+    deliberate divergence: the old code's ``llvm_mode`` special case
+    rebuilt the BUILT-IN STREAM even when handed a custom spec named
+    "STREAM" — the shim respects the custom builder instead."""
+    warn_deprecated("simulator.run_amu(...)",
+                    "repro.amu.AmuSession(AmuConfig(...)).run(name)")
+    name = spec if isinstance(spec, str) else spec.name
+    base = AmuConfig(engine=engine, dma_mode=dma_mode, llvm_mode=llvm_mode,
+                     latency_us=latency_us, engine_config=engine_config,
+                     seed=seed, verify=verify)
+    wd = REGISTRY[name] if name in REGISTRY else None
+    if isinstance(spec, str) or (wd is not None and wd.build is spec.build):
+        with AmuSession(base.derive(vector=vector)) as session:
+            return session.run(name).to_dict()
+    # a CUSTOM WorkloadSpec (the old extension point, possibly shadowing a
+    # registered name): replicate the old signature's build — vector only
+    # where the old VECTOR_WORKLOADS set (now the registry capability) said
+    # so — and hand the prebuilt port to the session
+    use_vector = vector and wd is not None and wd.vector
     inst = spec.build(seed, vector=True) if use_vector else spec.build(seed)
-    ecfg = engine_config or inst.engine_config
-    if dma_mode:
-        ecfg = replace(ecfg, batch_ids=1)
-    if llvm_mode and spec.name == "STREAM":
-        # the current LLVM pass only emits 8B-granularity AMIs (Table 4):
-        # rebuild STREAM with one-double blocks
-        from repro.core.workloads import build_stream
-        inst = build_stream(seed, block_doubles=1)
-        ecfg = inst.engine_config
-        if dma_mode:
-            ecfg = replace(ecfg, batch_ids=1)
-    far = FarMemoryModel(far_config(latency_us,
-                                    granularity=ecfg.granularity))
-    eng = make_engine(engine, ecfg, far, inst.mem)
-    cost = CostModel()
-    if llvm_mode:
-        # compiler-lowered loop: no coroutine frame save/restore, fewer
-        # framework instructions per op (Table 4: AMU-LLVM beats hand-ported)
-        cost = replace(cost, switch_insts=20, switch_stall_cycles=55.0,
-                       ami_issue_insts=6, getfin_insts=6)
-    disamb = CuckooAddressSet() if inst.disambiguation else None
-    sched = SCHEDULER_KINDS[engine](eng, cost=cost, disambiguator=disamb,
-                                    dma_mode=dma_mode)
-
-    if hasattr(inst, "make_round_tasks"):            # BFS: level-synchronous
-        frontier = [inst.root]                       # type: ignore[attr-defined]
-        while frontier:
-            tasks = inst.make_round_tasks(frontier)  # type: ignore
-            sched.run(tasks)
-            frontier = sorted(inst.next_frontier)    # type: ignore
-    else:
-        sched.run(inst.tasks)
-    eng.drain()
-    eng.check_invariants()
-    stats = sched.summary()
-    stats["verified"] = bool(inst.verify(eng.mem)) if verify else None
-    stats["units"] = inst.units
-    stats["vector"] = use_vector
-    return stats
+    with AmuSession(base.derive(vector=use_vector)) as session:
+        return session.run(inst).to_dict()
 
 
 # =========================================================================
@@ -325,22 +274,33 @@ CONFIG_NAMES = ("baseline", "cxl-ideal", "amu", "amu-dma")
 
 
 def run(workload: str, config: str, latency_us: float,
-        seed: int = 0, **kw) -> Dict[str, float]:
-    spec = WORKLOADS[workload]
+        seed: int = 0, amu: Optional[AmuConfig] = None,
+        **kw) -> Dict[str, float]:
+    """One (workload, config, latency) data point.
+
+    ``baseline``/``cxl-ideal`` drive the OoO window model; the ``amu*``
+    configs run the real coroutine port through an :class:`AmuSession`.
+    `amu` is the base :class:`AmuConfig` for those runs (defaults to the
+    scalar per-event oracle); remaining ``kw`` are derived onto it
+    (``engine=``, ``vector=``, ``verify=``, ``engine_config=``, ...), so
+    existing keyword call sites keep working unchanged.
+    """
+    wd = REGISTRY[workload]
     if config == "baseline":
-        inst_units = spec.build(seed).units
-        out = simulate_window(spec.profile, inst_units, latency_us,
+        inst_units = wd.build(seed).units
+        out = simulate_window(wd.profile, inst_units, latency_us,
                               BASELINE_CORE, seed=seed)
     elif config == "cxl-ideal":
-        inst_units = spec.build(seed).units
-        out = simulate_window(spec.profile, inst_units, latency_us,
+        inst_units = wd.build(seed).units
+        out = simulate_window(wd.profile, inst_units, latency_us,
                               CXL_IDEAL_CORE, seed=seed)
-    elif config == "amu":
-        out = run_amu(spec, latency_us, dma_mode=False, seed=seed, **kw)
-    elif config == "amu-dma":
-        out = run_amu(spec, latency_us, dma_mode=True, seed=seed, **kw)
-    elif config == "amu-llvm":
-        out = run_amu(spec, latency_us, llvm_mode=True, seed=seed, **kw)
+    elif config in ("amu", "amu-dma", "amu-llvm"):
+        cfg = (amu or AmuConfig(engine="scalar")).derive(
+            latency_us=latency_us, seed=seed,
+            dma_mode=config == "amu-dma",
+            llvm_mode=config == "amu-llvm", **kw)
+        with AmuSession(cfg) as session:
+            out = session.run(workload).to_dict()
     else:
         raise KeyError(config)
     out["config"] = config
@@ -364,3 +324,18 @@ class PowerModel:
         dyn = (stats["insts"] * self.epi_nj + stats["requests"] * self.epr_nj
                + spm_touches * self.spm_nj) * 1e-9
         return self.static_w + dyn / max(t_s, 1e-12)
+
+
+# ------------------------------------------------------- deprecated shims
+def __getattr__(name: str):
+    """`sim.WORKLOADS` / `sim.VECTOR_WORKLOADS` used to re-export the
+    workloads module dicts; both now warn and materialize from the
+    registry (in-repo code iterates `repro.amu.REGISTRY`)."""
+    if name in ("WORKLOADS", "VECTOR_WORKLOADS"):
+        warn_deprecated(f"simulator.{name}", "repro.amu.REGISTRY")
+        import repro.core.workloads as _w
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")      # one warning, not two
+            return getattr(_w, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -8,9 +8,15 @@ Each workload provides:
   parallelism for BS/HT/LL/SL/Redis, frontier parallelism for BFS), and a
   ``verify()`` that checks the far-memory contents / collected results
   against a serial numpy oracle.
-* ``profile`` -> an :class:`IterationProfile` describing one logical work
-  unit for the baseline out-of-order window model (64-byte line granularity,
-  dependence structure, compute instruction count).
+* an :class:`IterationProfile` describing one logical work unit for the
+  baseline out-of-order window model (64-byte line granularity, dependence
+  structure, compute instruction count), declared on the builder's
+  ``@workload`` registration.
+
+Every builder registers itself into :data:`repro.amu.REGISTRY` via the
+``@workload`` decorator (capabilities: vector/pipelined/locked/distinct/
+frontier); port bodies yield commands through the typed facade
+:data:`repro.amu.ctx` rather than constructing command objects by hand.
 
 Sizes are scaled down from the paper (as the paper itself scales down for
 simulation time) but keep the structural character: random vs sequential,
@@ -23,16 +29,16 @@ from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.amu.commands import ctx
+from repro.amu.deprecation import warn_deprecated
+from repro.amu.registry import REGISTRY
+from repro.amu.registry import workload as _workload
 from repro.configs.base import EngineConfig
-from repro.core.coroutines import (Acquire, Aload, AloadNoWait, AloadVec,
-                                   Astore, AstoreNoWait, AstoreVec, AwaitRid,
-                                   AwaitRids, Cost, Release, SpmRead,
-                                   SpmWrite)
 from repro.core.engine import AMART_ENTRY_BYTES
 
 LINE = 64  # baseline cache-line granularity
 
-# Every workload now has a vector (AloadVec/AstoreVec) port behind a
+# Every workload has a vector (AloadVec/AstoreVec) port behind a
 # `vector=True` builder knob; the scalar ports stay the default (and the
 # differential oracle — tests pin vector execution to the scalar port's
 # results). Loop-level-parallel benchmarks batch independent requests per
@@ -40,9 +46,10 @@ LINE = 64  # baseline cache-line granularity
 # LL, SL, Redis) use software-pipelined ports instead: K concurrent chases
 # per coroutine advance in lockstep, one AloadVec per round over the live
 # set (the BS probe-batch pattern generalized — arXiv 2112.13306's software
-# pipelining); BFS batches the per-chunk parent fetch/claim.
-VECTOR_WORKLOADS = frozenset({"GUPS", "STREAM", "IS", "HPCG", "BS",
-                              "HJ", "HT", "LL", "SL", "Redis", "BFS"})
+# pipelining); BFS batches the per-chunk parent fetch/claim. Which port a
+# workload carries is declared on its @workload registration (the `vector`/
+# `pipelined` capabilities in repro.amu.REGISTRY); the old VECTOR_WORKLOADS
+# frozenset survives only as a deprecated shim (module __getattr__ below).
 
 # Zero-copy port idiom: SpmRead yields a read-only view aliasing live SPM.
 # Ports do view arithmetic directly (`data.view(dt)`), hand computed arrays
@@ -103,6 +110,7 @@ class WorkloadInstance:
     engine_config: EngineConfig
     verify: Callable[[np.ndarray], bool]
     disambiguation: bool = False
+    vector: bool = False                  # which port was built (stats label)
 
 
 @dataclass(frozen=True)
@@ -133,6 +141,10 @@ def _vec_cfg(granularity: int, coroutines: int, pipeline_k: int,
 # =========================================================================
 # GUPS — HPCC RandomAccess: read-modify-write random 8B words (LLP)
 # =========================================================================
+@_workload("GUPS", profile=IterationProfile(insts=8, indep_loads=1, stores=1,
+                                            mlp_cap=6, local_cycles=165),
+           vector=True, distinct=True,
+           description="HPCC RandomAccess, 8B RMW updates")
 def build_gups(seed: int = 0, table_words: int = 8192, updates: int = 4096,
                coroutines: int = 256, vector: bool = False,
                vec_chunk: int = 32, distinct: bool = False) -> WorkloadInstance:
@@ -154,12 +166,12 @@ def build_gups(seed: int = 0, table_words: int = 8192, updates: int = 4096,
         spm = c * 8
         for k in range(lo, hi):
             addr = int(idx[k]) * 8
-            yield Aload(spm, addr, 8)
-            data = yield SpmRead(spm, 8)
+            yield ctx.aload(spm, addr, 8)
+            data = yield ctx.spm_read(spm, 8)
             new = data.view(np.uint64) ^ vals[k]
-            yield SpmWrite(spm, new)
-            yield Astore(spm, addr, 8)
-            yield Cost(insts=6)
+            yield ctx.spm_write(spm, new)
+            yield ctx.astore(spm, addr, 8)
+            yield ctx.cost(insts=6)
 
     def vtask(c: int, lo: int, hi: int):
         base = c * vec_chunk * 8           # vec_chunk 8B slots per coroutine
@@ -167,12 +179,12 @@ def build_gups(seed: int = 0, table_words: int = 8192, updates: int = 4096,
             cnt = min(vec_chunk, hi - k0)
             addrs = idx[k0:k0 + cnt] * 8
             slots = base + np.arange(cnt) * 8
-            yield AloadVec(slots, addrs, 8, wait=True)
-            data = yield SpmRead(base, cnt * 8)
+            yield ctx.aload_vec(slots, addrs, 8, wait=True)
+            data = yield ctx.spm_read(base, cnt * 8)
             new = data.view(np.uint64) ^ vals[k0:k0 + cnt]
-            yield SpmWrite(base, new)
-            yield AstoreVec(slots, addrs, 8, wait=True)
-            yield Cost(insts=6 * cnt)
+            yield ctx.spm_write(base, new)
+            yield ctx.astore_vec(slots, addrs, 8, wait=True)
+            yield ctx.cost(insts=6 * cnt)
 
     if vector:
         coroutines = min(coroutines, 32)
@@ -194,12 +206,18 @@ def build_gups(seed: int = 0, table_words: int = 8192, updates: int = 4096,
     # queue to the aggregate vector demand (parking stays correct but slow)
     cfg = _cfg(8, queue_length=min(2048, max(256, coroutines * vec_chunk))) \
         if vector else _cfg(8)
-    return WorkloadInstance("GUPS", mem, tasks, updates, cfg, verify)
+    return WorkloadInstance("GUPS", mem, tasks, updates, cfg, verify,
+                            vector=vector)
 
 
 # =========================================================================
 # STREAM — triad a = b + s*c with large-granularity (512B) aload/astore (LLP)
 # =========================================================================
+@_workload("STREAM", profile=IterationProfile(insts=160, indep_loads=16,
+                                              stores=8, sequential=True,
+                                              mlp_cap=64, local_cycles=226),
+           vector=True, llvm_defaults={"block_doubles": 1},
+           description="triad over 512B blocks (64 doubles/unit)")
 def build_stream(seed: int = 0, n: int = 65536, block_doubles: int = 64,
                  coroutines: int = 32, vector: bool = False,
                  vec_chunk: int = 4) -> WorkloadInstance:
@@ -217,16 +235,16 @@ def build_stream(seed: int = 0, n: int = 65536, block_doubles: int = 64,
         sb = coro * 2 * gran          # two input slots per coroutine
         for blk in range(lo, hi):
             off = blk * gran
-            rb = yield AloadNoWait(sb, b_off + off, gran)
-            rc = yield AloadNoWait(sb + gran, c_off + off, gran)
-            yield AwaitRid(rb)
-            yield AwaitRid(rc)
-            db = yield SpmRead(sb, gran)
-            dc = yield SpmRead(sb + gran, gran)
+            rb = yield ctx.aload(sb, b_off + off, gran, wait=False)
+            rc = yield ctx.aload(sb + gran, c_off + off, gran, wait=False)
+            yield ctx.await_rid(rb)
+            yield ctx.await_rid(rc)
+            db = yield ctx.spm_read(sb, gran)
+            dc = yield ctx.spm_read(sb + gran, gran)
             out = db.view(np.float64) + s * dc.view(np.float64)
-            yield Cost(insts=2 * block_doubles)
-            yield SpmWrite(sb, out)
-            yield Astore(sb, a_off + off, gran)
+            yield ctx.cost(insts=2 * block_doubles)
+            yield ctx.spm_write(sb, out)
+            yield ctx.astore(sb, a_off + off, gran)
 
     def vtask(coro: int, lo: int, hi: int):
         # vec_chunk b-slots then vec_chunk c-slots, contiguous per coroutine
@@ -237,15 +255,15 @@ def build_stream(seed: int = 0, n: int = 65536, block_doubles: int = 64,
             offs = np.arange(b0, b0 + cnt) * gran
             bslots = sb + np.arange(cnt) * gran
             cslots = sc + np.arange(cnt) * gran
-            yield AloadVec(np.concatenate([bslots, cslots]),
-                                  np.concatenate([b_off + offs, c_off + offs]),
-                                  gran, wait=True)
-            db = yield SpmRead(sb, cnt * gran)
-            dc = yield SpmRead(sc, cnt * gran)
+            yield ctx.aload_vec(np.concatenate([bslots, cslots]),
+                                np.concatenate([b_off + offs, c_off + offs]),
+                                gran, wait=True)
+            db = yield ctx.spm_read(sb, cnt * gran)
+            dc = yield ctx.spm_read(sc, cnt * gran)
             out = db.view(np.float64) + s * dc.view(np.float64)
-            yield Cost(insts=2 * block_doubles * cnt)
-            yield SpmWrite(sb, out)
-            yield AstoreVec(bslots, a_off + offs, gran, wait=True)
+            yield ctx.cost(insts=2 * block_doubles * cnt)
+            yield ctx.spm_write(sb, out)
+            yield ctx.astore_vec(bslots, a_off + offs, gran, wait=True)
 
     if vector:
         coroutines = min(coroutines, 8)
@@ -266,12 +284,17 @@ def build_stream(seed: int = 0, n: int = 65536, block_doubles: int = 64,
         cfg = _cfg(gran, queue_length=qlen,
                    spm_bytes=_fit_spm(coroutines * 2 * vec_chunk * gran,
                                       qlen))
-    return WorkloadInstance("STREAM", mem, tasks, blocks, cfg, verify)
+    return WorkloadInstance("STREAM", mem, tasks, blocks, cfg, verify,
+                            vector=vector)
 
 
 # =========================================================================
 # BS — binary search over sorted 16B elements (RLP, dependent chase)
 # =========================================================================
+@_workload("BS", profile=IterationProfile(insts=120, chase=14,
+                                          local_frac=0.5, local_cycles=60),
+           vector=True,
+           description="binary search, 16B elements, 14-deep chase")
 def build_bs(seed: int = 0, n_elems: int = 16384, searches: int = 512,
              coroutines: int = 256, vector: bool = False) -> WorkloadInstance:
     rng = np.random.default_rng(seed)
@@ -290,10 +313,10 @@ def build_bs(seed: int = 0, n_elems: int = 16384, searches: int = 512,
             lo, hi = 0, n_elems - 1
             while lo <= hi:
                 mid = (lo + hi) // 2
-                yield Aload(spm, mid * 16, 16)
-                data = yield SpmRead(spm, 16)
+                yield ctx.aload(spm, mid * 16, 16)
+                data = yield ctx.spm_read(spm, 16)
                 k, v = data.view(np.uint64)
-                yield Cost(insts=8)
+                yield ctx.cost(insts=8)
                 if k == target:
                     found_payload[qi] = v
                     break
@@ -310,10 +333,10 @@ def build_bs(seed: int = 0, n_elems: int = 16384, searches: int = 512,
         while live.any():
             act = np.nonzero(live)[0]
             mid = (lo[act] + hi[act]) // 2
-            yield AloadVec(base + act * 16, mid * 16, 16, wait=True)
-            yield Cost(insts=8 * len(act))
+            yield ctx.aload_vec(base + act * 16, mid * 16, 16, wait=True)
+            yield ctx.cost(insts=8 * len(act))
             for pos, ai in enumerate(act):
-                data = yield SpmRead(int(base + ai * 16), 16)
+                data = yield ctx.spm_read(int(base + ai * 16), 16)
                 k, v = data.view(np.uint64)
                 target = queries[qs[ai]]
                 if k == target:
@@ -340,7 +363,8 @@ def build_bs(seed: int = 0, n_elems: int = 16384, searches: int = 512,
 
     cfg = _cfg(16, queue_length=min(1024, max(256, searches))) if vector \
         else _cfg(16)
-    return WorkloadInstance("BS", mem, tasks, searches, cfg, verify)
+    return WorkloadInstance("BS", mem, tasks, searches, cfg, verify,
+                            vector=vector)
 
 
 # =========================================================================
@@ -374,10 +398,10 @@ def _chase_chain(spm: int, head_off: int, target: int):
     Yields AMI commands; returns (node_off, value) via StopIteration value."""
     off = head_off
     while off != -1:
-        yield Aload(spm, off, _NODE)
-        data = yield SpmRead(spm, _NODE)
+        yield ctx.aload(spm, off, _NODE)
+        data = yield ctx.spm_read(spm, _NODE)
         k, v, nxt, _ = data.view(np.uint64)
-        yield Cost(insts=8)
+        yield ctx.cost(insts=8)
         if k == target:
             return off, int(v)
         off = -1 if nxt == _NIL64 else int(nxt)
@@ -400,10 +424,10 @@ def _chase_chain_vec(base: int, heads, targets):
     live = cur >= 0
     while live.any():
         act = np.nonzero(live)[0]
-        yield AloadVec(base + act * _NODE, cur[act], _NODE, wait=True)
-        data = yield SpmRead(base, nb * _NODE)
+        yield ctx.aload_vec(base + act * _NODE, cur[act], _NODE, wait=True)
+        data = yield ctx.spm_read(base, nb * _NODE)
         nodes = data.view(np.uint64).reshape(nb, 4)
-        yield Cost(insts=8 * act.size)
+        yield ctx.cost(insts=8 * act.size)
         k, v, nxt = nodes[act, 0], nodes[act, 1], nodes[act, 2]
         hit = k == targets[act]
         offs[act[hit]] = cur[act[hit]]
@@ -449,6 +473,10 @@ def _distinct_key_batches(op_order, op_keys, k: int):
 # =========================================================================
 # HJ — hash join probe (LLP) with software disambiguation (Table 5)
 # =========================================================================
+@_workload("HJ", profile=IterationProfile(insts=24, chase=1.5, mlp_cap=11,
+                                          local_cycles=57),
+           vector=True, pipelined=True, locked=True,
+           description="hash join probe, 32B nodes, load factor 1")
 def build_hj(seed: int = 0, build_keys: int = 4096, buckets: int = 4096,
              probes: int = 2048, coroutines: int = 256, vector: bool = False,
              pipeline_k: int = 16) -> WorkloadInstance:
@@ -464,29 +492,27 @@ def build_hj(seed: int = 0, build_keys: int = 4096, buckets: int = 4096,
         for pi in ps:
             target = int(probe_keys[pi])
             head = int(heads[target % buckets])   # bucket array is local
-            yield Cost(insts=6)                   # hash + bucket index
-            yield Acquire(head if head >= 0 else 0)
+            yield ctx.cost(insts=6)                   # hash + bucket index
+            yield ctx.acquire(head if head >= 0 else 0)
             if head >= 0:
                 _, v = yield from _chase_chain(spm, head, target)
                 joined[pi] = np.uint64(v) ^ probe_payload[pi]
                 # materialize the output tuple (partition buffer write)
-                yield Cost(insts=20, cycles=35)
-            yield Release(head if head >= 0 else 0)
+                yield ctx.cost(insts=20, cycles=35)
+            yield ctx.release(head if head >= 0 else 0)
 
     def vtask(c: int, ps: "np.ndarray"):
         base = c * pipeline_k * _NODE          # one node slot per chase
         for batch in _distinct_key_batches(ps, probe_keys, pipeline_k):
             targets = probe_keys[batch]
             locks = _lock_set(np.maximum(heads[targets % buckets], 0))
-            yield Cost(insts=6 * batch.size)
-            for lock in locks:                 # ascending = deadlock-free
-                yield Acquire(int(lock))
+            yield ctx.cost(insts=6 * batch.size)
+            yield ctx.acquire_vec(locks)       # one hop, ascending order
             _, v = yield from _chase_chain_vec(
                 base, heads[targets % buckets], targets)
             joined[batch] = v ^ probe_payload[batch]
-            yield Cost(insts=20 * batch.size, cycles=35 * batch.size)
-            for lock in locks:
-                yield Release(int(lock))
+            yield ctx.cost(insts=20 * batch.size, cycles=35 * batch.size)
+            yield ctx.release_vec(locks)
 
     if vector:
         coroutines = min(coroutines, 32)
@@ -503,7 +529,8 @@ def build_hj(seed: int = 0, build_keys: int = 4096, buckets: int = 4096,
         return bool(np.array_equal(joined, expect))
 
     cfg = _vec_cfg(_NODE, coroutines, pipeline_k) if vector else _cfg(_NODE)
-    inst = WorkloadInstance("HJ", mem, tasks, probes, cfg, verify)
+    inst = WorkloadInstance("HJ", mem, tasks, probes, cfg, verify,
+                            vector=vector)
     inst.disambiguation = True
     return inst
 
@@ -511,6 +538,11 @@ def build_hj(seed: int = 0, build_keys: int = 4096, buckets: int = 4096,
 # =========================================================================
 # HT — ASCYLIB-style chained hash table, 50/50 lookup/update (RLP, disamb)
 # =========================================================================
+@_workload("HT", profile=IterationProfile(insts=26, chase=2, stores=1,
+                                          local_frac=0.1, mlp_cap=14,
+                                          local_cycles=57),
+           vector=True, pipelined=True, locked=True,
+           description="chained hash table 50/50 lookup/update")
 def build_ht(seed: int = 0, n_keys: int = 4096, buckets: int = 2048,
              ops: int = 2048, coroutines: int = 256,
              hot_frac: float = 0.04, vector: bool = False,
@@ -533,16 +565,16 @@ def build_ht(seed: int = 0, n_keys: int = 4096, buckets: int = 2048,
         for oi in os_:
             target = int(op_keys[oi])
             head = int(heads[target % buckets])
-            yield Cost(insts=6)
-            yield Acquire(target)                 # key-granular conflict set
+            yield ctx.cost(insts=6)
+            yield ctx.acquire(target)             # key-granular conflict set
             off, v = yield from _chase_chain(spm, head, target)
             if op_upd[oi]:
                 newv = np.uint64(v) + op_delta[oi]
-                yield SpmWrite(spm + 8, newv.tobytes())
-                yield Astore(spm + 8, off + 8, 8)  # value field RMW
+                yield ctx.spm_write(spm + 8, newv.tobytes())
+                yield ctx.astore(spm + 8, off + 8, 8)  # value field RMW
             else:
                 lookups[oi] = v
-            yield Release(target)
+            yield ctx.release(target)
 
     def vtask(c: int, os_: "np.ndarray"):
         base = c * pipeline_k * _NODE
@@ -551,23 +583,21 @@ def build_ht(seed: int = 0, n_keys: int = 4096, buckets: int = 2048,
         for batch in _distinct_key_batches(os_, op_keys, pipeline_k):
             targets = op_keys[batch]
             locks = _lock_set(targets)
-            yield Cost(insts=6 * batch.size)
-            for lock in locks:                     # ascending: deadlock-free
-                yield Acquire(int(lock))
+            yield ctx.cost(insts=6 * batch.size)
+            yield ctx.acquire_vec(locks)           # one hop, ascending order
             offs, v = yield from _chase_chain_vec(
                 base, heads[targets % buckets], targets)
             upd = op_upd[batch]
             ui = np.nonzero(upd)[0]
             for i in ui:                           # value-field RMW per slot
                 newv = v[i] + op_delta[batch[i]]
-                yield SpmWrite(int(base + i * _NODE + 8),
-                               np.uint64(newv).tobytes())
+                yield ctx.spm_write(int(base + i * _NODE + 8),
+                                    np.uint64(newv).tobytes())
             if ui.size:
-                yield AstoreVec(base + ui * _NODE + 8,
-                                       offs[ui] + 8, 8, wait=True)
+                yield ctx.astore_vec(base + ui * _NODE + 8,
+                                     offs[ui] + 8, 8, wait=True)
             lookups[batch[~upd]] = v[~upd]
-            for lock in locks:
-                yield Release(int(lock))
+            yield ctx.release_vec(locks)
 
     if vector:
         coroutines = min(coroutines, 32)
@@ -602,7 +632,8 @@ def build_ht(seed: int = 0, n_keys: int = 4096, buckets: int = 2048,
         return True
 
     cfg = _vec_cfg(_NODE, coroutines, pipeline_k) if vector else _cfg(_NODE)
-    inst = WorkloadInstance("HT", mem, tasks, ops, cfg, verify)
+    inst = WorkloadInstance("HT", mem, tasks, ops, cfg, verify,
+                            vector=vector)
     inst.disambiguation = True
     return inst
 
@@ -610,6 +641,10 @@ def build_ht(seed: int = 0, n_keys: int = 4096, buckets: int = 2048,
 # =========================================================================
 # LL — hand-over-hand linked list lookup (RLP, deep dependent chase)
 # =========================================================================
+@_workload("LL", profile=IterationProfile(insts=2200, chase=200,
+                                          local_cycles=40),
+           vector=True, pipelined=True,
+           description="hand-over-hand list lookup (~200-node chase)")
 def build_ll(seed: int = 0, list_len: int = 400, lookups: int = 96,
              coroutines: int = 96, vector: bool = False,
              pipeline_k: int = 16) -> WorkloadInstance:
@@ -637,10 +672,10 @@ def build_ll(seed: int = 0, list_len: int = 400, lookups: int = 96,
             target = int(keys[q_idx[qi]])
             off = head
             while off != -1:
-                yield Aload(spm, off, _NODE)
-                data = yield SpmRead(spm, _NODE)
+                yield ctx.aload(spm, off, _NODE)
+                data = yield ctx.spm_read(spm, _NODE)
                 k, v, nxt, _ = data.view(np.uint64)
-                yield Cost(insts=10)
+                yield ctx.cost(insts=10)
                 if k == target:
                     found[qi] = v
                     break
@@ -665,10 +700,10 @@ def build_ll(seed: int = 0, list_len: int = 400, lookups: int = 96,
         nexti = prime
         act = np.arange(prime)                 # active slots, kept up to date
         while act.size:
-            yield AloadVec(base + act * _NODE, cur[act], _NODE, wait=True)
-            data = yield SpmRead(base, pipeline_k * _NODE)
+            yield ctx.aload_vec(base + act * _NODE, cur[act], _NODE, wait=True)
+            data = yield ctx.spm_read(base, pipeline_k * _NODE)
             nodes = data.view(np.uint64).reshape(pipeline_k, 4)
-            yield Cost(insts=10 * act.size)
+            yield ctx.cost(insts=10 * act.size)
             sub = nodes[act]                   # one gather for k/v/nxt cols
             k, v, nxt = sub[:, 0], sub[:, 1], sub[:, 2]
             t = tq[slot_q[act]]
@@ -704,7 +739,8 @@ def build_ll(seed: int = 0, list_len: int = 400, lookups: int = 96,
         return bool(np.array_equal(found, expect))
 
     cfg = _vec_cfg(_NODE, coroutines, pipeline_k) if vector else _cfg(_NODE)
-    return WorkloadInstance("LL", mem, tasks, lookups, cfg, verify)
+    return WorkloadInstance("LL", mem, tasks, lookups, cfg, verify,
+                            vector=vector)
 
 
 # =========================================================================
@@ -714,6 +750,10 @@ _SL_LEVELS = 15
 _SL_NODE = 160  # 32B payload (key,val,meta) + 15 * 8B forward pointers
 
 
+@_workload("SL", profile=IterationProfile(insts=200, chase=22,
+                                          local_frac=0.3, local_cycles=60),
+           vector=True, pipelined=True,
+           description="skip-list lookup, 160B nodes")
 def build_sl(seed: int = 0, n_keys: int = 2048, lookups: int = 512,
              coroutines: int = 128, vector: bool = False,
              pipeline_k: int = 16) -> WorkloadInstance:
@@ -746,8 +786,8 @@ def build_sl(seed: int = 0, n_keys: int = 2048, lookups: int = 512,
     found = np.zeros(lookups, np.uint64)
 
     def read_node(spm, off):
-        yield Aload(spm, off, _SL_NODE)
-        data = yield SpmRead(spm, _SL_NODE)
+        yield ctx.aload(spm, off, _SL_NODE)
+        data = yield ctx.spm_read(spm, _SL_NODE)
         return data.view(np.uint64)
 
     def task(c: int, qs: Iterable[int]):
@@ -760,7 +800,7 @@ def build_sl(seed: int = 0, n_keys: int = 2048, lookups: int = 512,
             target = keys[q_idx[qi]]
             cur = 0
             node = yield from read_node(base, 0)    # sentinel into slot 0
-            yield Cost(insts=6)
+            yield ctx.cost(insts=6)
             for lv in range(_SL_LEVELS - 1, -1, -1):
                 while True:
                     nxt = node[4 + lv]
@@ -768,7 +808,7 @@ def build_sl(seed: int = 0, n_keys: int = 2048, lookups: int = 512,
                         break
                     nxt_node = yield from read_node(
                         base + (1 - cur) * _SL_NODE, int(nxt))
-                    yield Cost(insts=8)
+                    yield ctx.cost(insts=8)
                     if nxt_node[0] <= target:
                         node = nxt_node
                         cur = 1 - cur
@@ -819,12 +859,12 @@ def build_sl(seed: int = 0, n_keys: int = 2048, lookups: int = 512,
 
         while live.any():
             act = np.nonzero(live)[0]
-            yield AloadVec(base + act * _SL_NODE, fetch[act],
-                                  _SL_NODE, wait=True)
-            data = yield SpmRead(base, pipeline_k * _SL_NODE)
+            yield ctx.aload_vec(base + act * _SL_NODE, fetch[act],
+                                _SL_NODE, wait=True)
+            data = yield ctx.spm_read(base, pipeline_k * _SL_NODE)
             rows = data.view(np.uint64).reshape(pipeline_k, _ROW)
             n_sent = int(sentinel[act].sum())
-            yield Cost(insts=6 * n_sent + 8 * (act.size - n_sent))
+            yield ctx.cost(insts=6 * n_sent + 8 * (act.size - n_sent))
             for si in act:
                 got = rows[si]
                 target = tq[slot_q[si]]
@@ -874,12 +914,18 @@ def build_sl(seed: int = 0, n_keys: int = 2048, lookups: int = 512,
     else:
         cfg = _cfg(_SL_NODE,
                    spm_bytes=_fit_spm(coroutines * 2 * _SL_NODE, 256))
-    return WorkloadInstance("SL", mem, tasks, lookups, cfg, verify)
+    return WorkloadInstance("SL", mem, tasks, lookups, cfg, verify,
+                            vector=vector)
 
 
 # =========================================================================
 # BFS — Graph500-style level-synchronous BFS (frontier parallelism)
 # =========================================================================
+@_workload("BFS", profile=IterationProfile(insts=12, chase=1, indep_loads=1,
+                                           stores=0.4, local_frac=0.2,
+                                           mlp_cap=10, local_cycles=30),
+           vector=True, frontier=True,
+           description="level-synchronous BFS per-edge unit")
 def build_bfs(seed: int = 0, n_vertices: int = 2048, n_edges: int = 32768,
               coroutines: int = 224, vector: bool = False) -> WorkloadInstance:
     rng = np.random.default_rng(seed)
@@ -911,22 +957,22 @@ def build_bfs(seed: int = 0, n_vertices: int = 2048, n_edges: int = 32768,
         pslot = spm + 248
         for uu in vertices:
             lo, hi = int(offs[uu]), int(offs[uu + 1])
-            yield Cost(insts=8)
+            yield ctx.cost(insts=8)
             for base in range(lo, hi, CHUNK):
                 cnt = min(CHUNK, hi - base)
-                yield Aload(spm, base * 4, cnt * 4)
-                data = yield SpmRead(spm, cnt * 4)
+                yield ctx.aload(spm, base * 4, cnt * 4)
+                data = yield ctx.spm_read(spm, cnt * 4)
                 neigh = data.view(np.int32)
-                yield Cost(insts=4 * cnt)
+                yield ctx.cost(insts=4 * cnt)
                 for vv in neigh:
                     vv = int(vv)
-                    yield Aload(pslot, par_off + vv * 8, 8)
-                    pdata = yield SpmRead(pslot, 8)
+                    yield ctx.aload(pslot, par_off + vv * 8, 8)
+                    pdata = yield ctx.spm_read(pslot, 8)
                     if pdata.view(np.int64)[0] == -1:
-                        yield SpmWrite(pslot, np.int64(uu).tobytes())
-                        yield Astore(pslot, par_off + vv * 8, 8)
+                        yield ctx.spm_write(pslot, np.int64(uu).tobytes())
+                        yield ctx.astore(pslot, par_off + vv * 8, 8)
                         next_frontier.add(vv)
-                    yield Cost(insts=6)
+                    yield ctx.cost(insts=6)
 
     # vector port SPM layout per coroutine: 240B neighbor chunk | 8B parent
     # staging slot (holds uu for the AstoreVec scatter) | CHUNK parent slots
@@ -938,26 +984,26 @@ def build_bfs(seed: int = 0, n_vertices: int = 2048, n_edges: int = 32768,
         pbase = nbase + 248
         for uu in vertices:
             lo, hi = int(offs[uu]), int(offs[uu + 1])
-            yield Cost(insts=8)
+            yield ctx.cost(insts=8)
             for base in range(lo, hi, CHUNK):
                 cnt = min(CHUNK, hi - base)
-                yield Aload(nbase, base * 4, cnt * 4)
-                data = yield SpmRead(nbase, cnt * 4)
+                yield ctx.aload(nbase, base * 4, cnt * 4)
+                data = yield ctx.spm_read(nbase, cnt * 4)
                 neigh = data.view(np.int32).astype(np.int64)
-                yield Cost(insts=4 * cnt)
+                yield ctx.cost(insts=4 * cnt)
                 # one vector fetch of every neighbor's parent word
-                yield AloadVec(pbase + np.arange(cnt) * 8,
-                                      par_off + neigh * 8, 8, wait=True)
-                pdata = yield SpmRead(pbase, cnt * 8)
+                yield ctx.aload_vec(pbase + np.arange(cnt) * 8,
+                                    par_off + neigh * 8, 8, wait=True)
+                pdata = yield ctx.spm_read(pbase, cnt * 8)
                 parents = pdata.view(np.int64)
-                yield Cost(insts=6 * cnt)
+                yield ctx.cost(insts=6 * cnt)
                 claim = np.unique(neigh[parents == -1])
                 if claim.size:
                     # scatter `uu` from one staging slot to every claimed
                     # parent word (repeated SPM source, vector of targets)
-                    yield SpmWrite(stage, np.int64(uu).tobytes())
-                    yield AstoreVec(np.full(claim.size, stage),
-                                           par_off + claim * 8, 8, wait=True)
+                    yield ctx.spm_write(stage, np.int64(uu).tobytes())
+                    yield ctx.astore_vec(np.full(claim.size, stage),
+                                         par_off + claim * 8, 8, wait=True)
                     next_frontier.update(int(vv) for vv in claim)
 
     if vector:
@@ -988,7 +1034,8 @@ def build_bfs(seed: int = 0, n_vertices: int = 2048, n_edges: int = 32768,
         d += 1
 
     cfg = _cfg(256, queue_length=1024) if vector else _cfg(256)
-    inst = WorkloadInstance("BFS", mem, [], 2 * n_edges, cfg, lambda m: True)
+    inst = WorkloadInstance("BFS", mem, [], 2 * n_edges, cfg, lambda m: True,
+                            vector=vector)
     inst.make_round_tasks = make_round_tasks            # type: ignore
     inst.next_frontier = next_frontier                  # type: ignore
     inst.root = root                                    # type: ignore
@@ -1012,6 +1059,11 @@ def build_bfs(seed: int = 0, n_vertices: int = 2048, n_edges: int = 32768,
 # =========================================================================
 # IS — NAS integer sort (bucket counting): sequential key blocks (LLP)
 # =========================================================================
+@_workload("IS", profile=IterationProfile(insts=400, indep_loads=8,
+                                          sequential=True, mlp_cap=48,
+                                          local_cycles=320),
+           vector=True,
+           description="bucket counting over sequential 512B key blocks")
 def build_is(seed: int = 0, n_keys: int = 65536, block: int = 128,
              coroutines: int = 32, n_buckets: int = 1024,
              vector: bool = False, vec_chunk: int = 8) -> WorkloadInstance:
@@ -1025,20 +1077,21 @@ def build_is(seed: int = 0, n_keys: int = 65536, block: int = 128,
     def task(c: int, lo: int, hi: int):
         spm = c * gran
         for blk in range(lo, hi):
-            yield Aload(spm, blk * gran, gran)
-            data = yield SpmRead(spm, gran)
+            yield ctx.aload(spm, blk * gran, gran)
+            data = yield ctx.spm_read(spm, gran)
             np.add.at(hist, data.view(np.int32), 1)
-            yield Cost(insts=3 * block)
+            yield ctx.cost(insts=3 * block)
 
     def vtask(c: int, lo: int, hi: int):
         base = c * vec_chunk * gran
         for b0 in range(lo, hi, vec_chunk):
             cnt = min(vec_chunk, hi - b0)
-            yield AloadVec(base + np.arange(cnt) * gran,
-                                  np.arange(b0, b0 + cnt) * gran, gran, wait=True)
-            data = yield SpmRead(base, cnt * gran)
+            yield ctx.aload_vec(base + np.arange(cnt) * gran,
+                                np.arange(b0, b0 + cnt) * gran, gran,
+                                wait=True)
+            data = yield ctx.spm_read(base, cnt * gran)
             np.add.at(hist, data.view(np.int32), 1)
-            yield Cost(insts=3 * block * cnt)
+            yield ctx.cost(insts=3 * block * cnt)
 
     if vector:
         coroutines = min(coroutines, 8)
@@ -1053,12 +1106,18 @@ def build_is(seed: int = 0, n_keys: int = 65536, block: int = 128,
     cfg = _vec_cfg(gran, coroutines, vec_chunk,
                    data_bytes=coroutines * vec_chunk * gran) if vector \
         else _cfg(gran)
-    return WorkloadInstance("IS", mem, tasks, blocks, cfg, verify)
+    return WorkloadInstance("IS", mem, tasks, blocks, cfg, verify,
+                            vector=vector)
 
 
 # =========================================================================
 # HPCG — sparse matrix-vector product y = A x (LLP; mixed granularity)
 # =========================================================================
+@_workload("HPCG", profile=IterationProfile(insts=140, indep_loads=33,
+                                            local_frac=0.15, mlp_cap=40,
+                                            local_cycles=120),
+           vector=True,
+           description="SpMV row: 352B row data + 27 x-gathers")
 def build_hpcg(seed: int = 0, rows: int = 2048, nnz_per_row: int = 27,
                coroutines: int = 64, vector: bool = False,
                vec_rows: int = 4) -> WorkloadInstance:
@@ -1084,8 +1143,8 @@ def build_hpcg(seed: int = 0, rows: int = 2048, nnz_per_row: int = 27,
         spm = c * 512
         xs = spm + 352
         for r in range(lo, hi):
-            yield Aload(spm, r * row_pad, row_pad)
-            data = yield SpmRead(spm, row_pad)
+            yield ctx.aload(spm, r * row_pad, row_pad)
+            data = yield ctx.spm_read(spm, row_pad)
             rc = data[:nnz_per_row * 4].view(np.int32)
             rv = data[nnz_per_row * 4:
                       nnz_per_row * 4 + nnz_per_row * 8].view(np.float64)
@@ -1093,19 +1152,21 @@ def build_hpcg(seed: int = 0, rows: int = 2048, nnz_per_row: int = 27,
             # gather x entries: independent 8B aloads, 16 slots in flight
             rids = []
             for j in range(min(16, len(rc))):
-                rid = yield AloadNoWait(xs + j * 8, x_off + int(rc[j]) * 8, 8)
+                rid = yield ctx.aload(xs + j * 8, x_off + int(rc[j]) * 8,
+                                      8, wait=False)
                 rids.append(rid)
             for j in range(len(rc)):
-                yield AwaitRid(rids[j])
-                xd = yield SpmRead(xs + (j % 16) * 8, 8)
+                yield ctx.await_rid(rids[j])
+                xd = yield ctx.spm_read(xs + (j % 16) * 8, 8)
                 acc += rv[j] * xd.view(np.float64)[0]
-                yield Cost(insts=4)
+                yield ctx.cost(insts=4)
                 if j + 16 < len(rc):   # refill the freed slot
-                    rid = yield AloadNoWait(xs + (j % 16) * 8,
-                                            x_off + int(rc[j + 16]) * 8, 8)
+                    rid = yield ctx.aload(xs + (j % 16) * 8,
+                                          x_off + int(rc[j + 16]) * 8, 8,
+                                          wait=False)
                     rids.append(rid)
-            yield SpmWrite(spm, np.float64(acc).tobytes())
-            yield Astore(spm, y_off + r * 8, 8)
+            yield ctx.spm_write(spm, np.float64(acc).tobytes())
+            yield ctx.astore(spm, y_off + r * 8, 8)
 
     def vtask(c: int, lo: int, hi: int):
         # per-coroutine SPM layout: vec_rows row slots | vec_rows*27 x-slots
@@ -1116,19 +1177,20 @@ def build_hpcg(seed: int = 0, rows: int = 2048, nnz_per_row: int = 27,
         ybase = xbase + vec_rows * nnz_per_row * 8
         for r0 in range(lo, hi, vec_rows):
             cnt = min(vec_rows, hi - r0)
-            yield AloadVec(rbase + np.arange(cnt) * row_pad,
-                                  (r0 + np.arange(cnt)) * row_pad, row_pad, wait=True)
+            yield ctx.aload_vec(rbase + np.arange(cnt) * row_pad,
+                                (r0 + np.arange(cnt)) * row_pad, row_pad,
+                                wait=True)
             rcs, rvs = [], []
             for i in range(cnt):
-                data = yield SpmRead(rbase + i * row_pad, row_pad)
+                data = yield ctx.spm_read(rbase + i * row_pad, row_pad)
                 rcs.append(data[:nnz_per_row * 4].view(np.int32))
                 rvs.append(data[nnz_per_row * 4:
                                 nnz_per_row * 4 + nnz_per_row * 8]
                            .view(np.float64))
             cols_flat = np.concatenate(rcs).astype(np.int64)
-            yield AloadVec(xbase + np.arange(cnt * nnz_per_row) * 8,
-                                  x_off + cols_flat * 8, 8, wait=True)
-            xdata = yield SpmRead(xbase, cnt * nnz_per_row * 8)
+            yield ctx.aload_vec(xbase + np.arange(cnt * nnz_per_row) * 8,
+                                x_off + cols_flat * 8, 8, wait=True)
+            xdata = yield ctx.spm_read(xbase, cnt * nnz_per_row * 8)
             xv = xdata.view(np.float64)
             accs = np.empty(cnt)
             for i in range(cnt):
@@ -1136,10 +1198,11 @@ def build_hpcg(seed: int = 0, rows: int = 2048, nnz_per_row: int = 27,
                 for j in range(nnz_per_row):   # scalar-port accumulation order
                     acc += rvs[i][j] * xv[i * nnz_per_row + j]
                 accs[i] = acc
-                yield Cost(insts=4 * nnz_per_row)
-            yield SpmWrite(ybase, accs)
-            yield AstoreVec(ybase + np.arange(cnt) * 8,
-                                   y_off + (r0 + np.arange(cnt)) * 8, 8, wait=True)
+                yield ctx.cost(insts=4 * nnz_per_row)
+            yield ctx.spm_write(ybase, accs)
+            yield ctx.astore_vec(ybase + np.arange(cnt) * 8,
+                                 y_off + (r0 + np.arange(cnt)) * 8, 8,
+                                 wait=True)
 
     if vector:
         coroutines = min(coroutines, 8)
@@ -1153,12 +1216,18 @@ def build_hpcg(seed: int = 0, rows: int = 2048, nnz_per_row: int = 27,
         return bool(np.allclose(got, expect))
 
     cfg = _cfg(512, queue_length=1024) if vector else _cfg(512)
-    return WorkloadInstance("HPCG", mem, tasks, rows, cfg, verify)
+    return WorkloadInstance("HPCG", mem, tasks, rows, cfg, verify,
+                            vector=vector)
 
 
 # =========================================================================
 # Redis — YCSB-B-style KV service: local buckets, far collision lists (RLP)
 # =========================================================================
+@_workload("Redis", profile=IterationProfile(insts=40, chase=1.5,
+                                             stores=0.05, mlp_cap=11,
+                                             local_cycles=70),
+           vector=True, pipelined=True, locked=True, distinct=True,
+           description="YCSB-B KV: local buckets, far collision lists")
 def build_redis(seed: int = 0, n_keys: int = 4096, buckets: int = 4096,
                 ops: int = 2048, coroutines: int = 256,
                 update_frac: float = 0.05, vector: bool = False,
@@ -1188,39 +1257,37 @@ def build_redis(seed: int = 0, n_keys: int = 4096, buckets: int = 4096,
         for oi in os_:
             target = int(op_keys[oi])
             head = int(heads[target % buckets])    # bucket array local
-            yield Cost(insts=10)                   # parse request + hash
-            yield Acquire(target)
+            yield ctx.cost(insts=10)                   # parse request + hash
+            yield ctx.acquire(target)
             off, v = yield from _chase_chain(spm, head, target)
             if op_upd[oi]:
-                yield SpmWrite(spm + 8, op_newval[oi].tobytes())
-                yield Astore(spm + 8, off + 8, 8)
+                yield ctx.spm_write(spm + 8, op_newval[oi].tobytes())
+                yield ctx.astore(spm + 8, off + 8, 8)
             else:
                 got_vals[oi] = v
-            yield Release(target)
-            yield Cost(insts=8)                    # format reply
+            yield ctx.release(target)
+            yield ctx.cost(insts=8)                    # format reply
 
     def vtask(c: int, os_: "np.ndarray"):
         base = c * pipeline_k * _NODE
         for batch in _distinct_key_batches(os_, op_keys, pipeline_k):
             targets = op_keys[batch]
             locks = _lock_set(targets)
-            yield Cost(insts=10 * batch.size)
-            for lock in locks:                     # ascending: deadlock-free
-                yield Acquire(int(lock))
+            yield ctx.cost(insts=10 * batch.size)
+            yield ctx.acquire_vec(locks)           # one hop, ascending order
             offs, v = yield from _chase_chain_vec(
                 base, heads[targets % buckets], targets)
             upd = op_upd[batch]
             ui = np.nonzero(upd)[0]
             for i in ui:
-                yield SpmWrite(int(base + i * _NODE + 8),
-                               op_newval[batch[i]].tobytes())
+                yield ctx.spm_write(int(base + i * _NODE + 8),
+                                    op_newval[batch[i]].tobytes())
             if ui.size:
-                yield AstoreVec(base + ui * _NODE + 8,
-                                       offs[ui] + 8, 8, wait=True)
+                yield ctx.astore_vec(base + ui * _NODE + 8,
+                                     offs[ui] + 8, 8, wait=True)
             got_vals[batch[~upd]] = v[~upd]
-            for lock in locks:
-                yield Release(int(lock))
-            yield Cost(insts=8 * batch.size)
+            yield ctx.release_vec(locks)
+            yield ctx.cost(insts=8 * batch.size)
 
     if vector:
         coroutines = min(coroutines, 32)
@@ -1250,61 +1317,40 @@ def build_redis(seed: int = 0, n_keys: int = 4096, buckets: int = 4096,
         return True
 
     cfg = _vec_cfg(_NODE, coroutines, pipeline_k) if vector else _cfg(_NODE)
-    inst = WorkloadInstance("Redis", mem, tasks, ops, cfg, verify)
+    inst = WorkloadInstance("Redis", mem, tasks, ops, cfg, verify,
+                            vector=vector)
     inst.disambiguation = True
     return inst
 
 
 # =========================================================================
-# Registry: name -> (builder, baseline iteration profile)
-# =========================================================================
+# Registration lives on the builders (@_workload above each): one entry per
+# workload in repro.amu.REGISTRY, carrying the builder, the baseline
+# IterationProfile, and declared capabilities (vector/pipelined/locked/
+# distinct/frontier, LLVM rebuild kwargs).
+#
 # Profiles: `mlp_cap`/`local_cycles` pairs for the additive (Little's-law)
 # baseline mode are FITTED against the paper's Table 4 curves (GUPS, HJ,
 # STREAM) and transferred to structurally similar workloads; window-mode
 # profiles (chase-dominated) derive concurrency from ROB/LSQ occupancy.
-WORKLOADS: Dict[str, WorkloadSpec] = {
-    "GUPS": WorkloadSpec(
-        "GUPS", IterationProfile(insts=8, indep_loads=1, stores=1,
-                                 mlp_cap=6, local_cycles=165),
-        build_gups, "HPCC RandomAccess, 8B RMW updates"),
-    "STREAM": WorkloadSpec(
-        "STREAM", IterationProfile(insts=160, indep_loads=16, stores=8,
-                                   sequential=True, mlp_cap=64,
-                                   local_cycles=226),
-        build_stream, "triad over 512B blocks (64 doubles/unit)"),
-    "BS": WorkloadSpec(
-        "BS", IterationProfile(insts=120, chase=14, local_frac=0.5,
-                               local_cycles=60),
-        build_bs, "binary search, 16B elements, 14-deep chase"),
-    "HJ": WorkloadSpec(
-        "HJ", IterationProfile(insts=24, chase=1.5, mlp_cap=11,
-                               local_cycles=57),
-        build_hj, "hash join probe, 32B nodes, load factor 1"),
-    "HT": WorkloadSpec(
-        "HT", IterationProfile(insts=26, chase=2, stores=1, local_frac=0.1,
-                               mlp_cap=14, local_cycles=57),
-        build_ht, "chained hash table 50/50 lookup/update"),
-    "LL": WorkloadSpec(
-        "LL", IterationProfile(insts=2200, chase=200, local_cycles=40),
-        build_ll, "hand-over-hand list lookup (~200-node chase)"),
-    "SL": WorkloadSpec(
-        "SL", IterationProfile(insts=200, chase=22, local_frac=0.3,
-                               local_cycles=60),
-        build_sl, "skip-list lookup, 160B nodes"),
-    "BFS": WorkloadSpec(
-        "BFS", IterationProfile(insts=12, chase=1, indep_loads=1, stores=0.4,
-                                local_frac=0.2, mlp_cap=10, local_cycles=30),
-        build_bfs, "level-synchronous BFS per-edge unit"),
-    "IS": WorkloadSpec(
-        "IS", IterationProfile(insts=400, indep_loads=8, sequential=True,
-                               mlp_cap=48, local_cycles=320),
-        build_is, "bucket counting over sequential 512B key blocks"),
-    "HPCG": WorkloadSpec(
-        "HPCG", IterationProfile(insts=140, indep_loads=33, local_frac=0.15,
-                                 mlp_cap=40, local_cycles=120),
-        build_hpcg, "SpMV row: 352B row data + 27 x-gathers"),
-    "Redis": WorkloadSpec(
-        "Redis", IterationProfile(insts=40, chase=1.5, stores=0.05,
-                                  mlp_cap=11, local_cycles=70),
-        build_redis, "YCSB-B KV: local buckets, far collision lists"),
-}
+# =========================================================================
+
+# ------------------------------------------------------- deprecated shims
+# The pre-registry module surface: a `WORKLOADS` name->WorkloadSpec dict and
+# a `VECTOR_WORKLOADS` frozenset. Both are materialized on demand from the
+# registry (PEP 562 module __getattr__) and warn — in-repo code must use
+# repro.amu.REGISTRY; CI promotes the warning to an error.
+def _workloads_dict() -> Dict[str, WorkloadSpec]:
+    return {name: WorkloadSpec(wd.name, wd.profile, wd.build, wd.description)
+            for name, wd in REGISTRY.items()}
+
+
+def __getattr__(name: str):
+    if name == "WORKLOADS":
+        warn_deprecated("the workloads.WORKLOADS dict", "repro.amu.REGISTRY")
+        return _workloads_dict()
+    if name == "VECTOR_WORKLOADS":
+        warn_deprecated("the workloads.VECTOR_WORKLOADS set",
+                        "repro.amu.REGISTRY[name].vector")
+        return frozenset(REGISTRY.vector_names())
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -25,7 +25,8 @@ from repro.core.disambiguation import CuckooAddressSet
 from repro.core.engine import (AsyncMemoryEngine, BatchedAsyncMemoryEngine,
                                SpmOverflow, make_engine)
 from repro.core.farmem import FarMemoryConfig, FarMemoryModel, InstantMemory
-from repro.core.workloads import VECTOR_WORKLOADS, WORKLOADS
+
+from repro.amu import REGISTRY
 
 
 def _far(kind: str, latency_us: float = 1.0, max_inflight: int = 0):
@@ -198,14 +199,14 @@ def test_id_conservation_under_batch_ops(qlen, extra):
 # =========================================================================
 # Workload-level equivalence: every port, both memory models
 # =========================================================================
-@pytest.mark.parametrize("wl", list(WORKLOADS))
+@pytest.mark.parametrize("wl", REGISTRY.names())
 @pytest.mark.parametrize("mem_kind", ["instant", "timed"])
 def test_workload_trace_identical(wl, mem_kind):
     """Running the same scheduler + workload against the scalar vs batched
     engine yields identical request traces, SPM and far-memory contents."""
     results = []
     for kind in ("scalar", "batched"):
-        inst = WORKLOADS[wl].build(0)
+        inst = REGISTRY[wl].build(0)
         far = _far(mem_kind)
         eng = make_engine(kind, inst.engine_config, far, inst.mem,
                           record_trace=True)
@@ -412,7 +413,7 @@ def _run_port(wl: str, vector: bool, mem_kind: str, engine="batched",
     kw = {"vector": True, **build_kw} if vector else dict(build_kw)
     if wl in ("GUPS", "Redis"):
         kw["distinct"] = True          # conflict-free -> deterministic bytes
-    inst = WORKLOADS[wl].build(0, **kw)
+    inst = REGISTRY[wl].build(0, **kw)
     far = _far(mem_kind, max_inflight=max_inflight)
     eng = make_engine(engine, inst.engine_config, far, inst.mem)
     disamb = CuckooAddressSet() if inst.disambiguation else None
@@ -442,7 +443,7 @@ def _scalar_port_mem(wl: str, mem_kind: str):
     return _scalar_port_cache[key]
 
 
-@pytest.mark.parametrize("wl", sorted(VECTOR_WORKLOADS))
+@pytest.mark.parametrize("wl", sorted(REGISTRY.vector_names()))
 @pytest.mark.parametrize("mem_kind", ["instant", "timed"])
 def test_vector_port_matches_scalar_port(wl, mem_kind):
     """Every vector port must be trace-equivalent to its scalar port: same

@@ -19,11 +19,7 @@ tests/test_batched_engine.py, not pinned here.
 import numpy as np
 import pytest
 
-from repro.core.coroutines import BatchScheduler
-from repro.core.disambiguation import CuckooAddressSet
-from repro.core.engine import make_engine
-from repro.core.farmem import FarMemoryConfig, FarMemoryModel
-
+from repro.amu import AmuConfig, AmuSession
 from repro.core.workloads import (build_hj, build_ht, build_ll, build_redis,
                                   build_sl)
 
@@ -43,16 +39,13 @@ CHASE_BUILDERS = {
 
 def _run(wl: str, max_inflight: int = 0, **kw):
     inst = CHASE_BUILDERS[wl](**kw)
-    far = FarMemoryModel(FarMemoryConfig.from_latency_us(
-        1.0, max_inflight=max_inflight))
-    eng = make_engine("batched", inst.engine_config, far, inst.mem)
-    disamb = CuckooAddressSet() if inst.disambiguation else None
-    sched = BatchScheduler(eng, disambiguator=disamb)
-    sched.run(inst.tasks)
-    eng.drain()
-    eng.getfin_all()
-    eng.check_invariants()
-    return eng, far, inst
+    session = AmuSession(AmuConfig(engine="batched", verify=False,
+                                   latency_us=1.0,
+                                   max_inflight=max_inflight))
+    session.run(inst)
+    session.engine.getfin_all()
+    session.engine.check_invariants()
+    return session.engine, session.far, inst
 
 
 _ref_cache = {}
@@ -98,9 +91,5 @@ def test_pipelined_port_distinct_keys_per_batch():
     chain must serialize per key, so the final value is the exact sum of
     deltas even when one hot key dominates (hot_frac stresses this)."""
     inst = CHASE_BUILDERS["HT"](vector=True, pipeline_k=16)
-    far = FarMemoryModel(FarMemoryConfig.from_latency_us(2.0))
-    eng = make_engine("batched", inst.engine_config, far, inst.mem)
-    sched = BatchScheduler(eng, disambiguator=CuckooAddressSet())
-    sched.run(inst.tasks)
-    eng.drain()
-    assert inst.verify(eng.mem)
+    with AmuSession(AmuConfig(engine="batched", latency_us=2.0)) as s:
+        assert s.run(inst).verified

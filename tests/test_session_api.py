@@ -1,0 +1,563 @@
+"""The unified `repro.amu` session API.
+
+Covers the four redesign pieces plus their compatibility story:
+
+* `AmuConfig` — validation, `derive`, knob resolution (scheduler "auto",
+  SPM budget, DMA-mode batch_ids).
+* `AmuSession` — lifecycle (engine/far/scheduler/instance exposure, context
+  manager), `RunStats` mapping protocol, and choreography identity: the
+  session must produce exactly the trace the old hand-rolled
+  build-engine-build-scheduler-run-drain sequence produced.
+* the `@workload` registry — capabilities, custom registration, the Port
+  protocol.
+* `AcquireVec`/`ReleaseVec` — one-hop vector locking: mutual exclusion, FIFO
+  hand-off, mid-vector continuation, no lost waiters (both schedulers).
+* the scalar `Scheduler`'s exact-wake idle drain — pinned bit-identical
+  (summary + engine trace + engine stats) to the old single-step idle path.
+* the deprecation shims — `run_amu`, `workloads.WORKLOADS`,
+  `VECTOR_WORKLOADS`: warn, and stay byte-identical to the session path
+  across all 11 workloads.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.amu import (REGISTRY, AmuConfig, AmuDeprecationWarning, AmuSession,
+                       Port, WorkloadRegistry, ctx, far_config, workload)
+from repro.configs.base import EngineConfig
+from repro.core import simulator as sim
+from repro.core.coroutines import (Acquire, AcquireVec, Aload, AloadVec,
+                                   AwaitRid, BatchScheduler, Cost,
+                                   DeadlockError, Release, ReleaseVec,
+                                   Scheduler, SpmRead, SpmWrite)
+from repro.core.disambiguation import CuckooAddressSet
+from repro.core.engine import (AsyncMemoryEngine, BatchedAsyncMemoryEngine,
+                               make_engine)
+from repro.core.farmem import FarMemoryConfig, FarMemoryModel
+from repro.core.workloads import WorkloadInstance, build_gups
+
+
+# =========================================================================
+# AmuConfig
+# =========================================================================
+def test_config_validation():
+    with pytest.raises(KeyError):
+        AmuConfig(engine="warp")
+    with pytest.raises(KeyError):
+        AmuConfig(scheduler="warp")
+    with pytest.raises(ValueError):
+        AmuConfig(pipeline_k=0)
+    with pytest.raises(ValueError):
+        AmuConfig(latency_us=0.0)
+    with pytest.raises(ValueError):
+        AmuConfig(spm_bytes=-1)
+    with pytest.raises(ValueError):
+        AmuConfig(seed=-1)
+
+
+def test_config_derive_revalidates_and_is_frozen():
+    cfg = AmuConfig(engine="batched", latency_us=0.5)
+    hot = cfg.derive(latency_us=5.0, vector=True)
+    assert (hot.latency_us, hot.vector) == (5.0, True)
+    assert (cfg.latency_us, cfg.vector) == (0.5, False)   # original intact
+    with pytest.raises(KeyError):
+        cfg.derive(engine="warp")
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.engine = "scalar"
+
+
+def test_config_resolution():
+    port_cfg = EngineConfig(queue_length=64, granularity=8)
+    cfg = AmuConfig(engine="scalar", spm_bytes=1 << 17, dma_mode=True)
+    ecfg = cfg.resolve_engine_config(port_cfg)
+    assert ecfg.spm_bytes == 1 << 17
+    assert ecfg.batch_ids == 1                 # DMA-mode ablation
+    assert ecfg.queue_length == 64             # port sizing preserved
+    assert AmuConfig(scheduler="auto", engine="batched").scheduler_kind \
+        == "batched"
+    assert AmuConfig(engine="batched",
+                     scheduler="scalar").scheduler_kind == "scalar"
+    # explicit FarMemoryConfig replaces the whole operating point
+    far = far_config(2.0, max_inflight=7)
+    assert AmuConfig(far=far).resolve_far_config() is far
+    assert AmuConfig(max_inflight=9).resolve_far_config().max_inflight == 9
+    assert AmuConfig(llvm_mode=True).cost_model().switch_insts == 20
+
+
+def test_config_far_rejects_shadowed_latency_knobs():
+    """far= replaces the operating point wholesale: deriving latency_us (or
+    max_inflight) on a far-bearing config must ERROR, never be silently
+    ignored — a sweep built that way would record mislabeled points."""
+    far = far_config(1.0, max_inflight=8)
+    cfg = AmuConfig(far=far)
+    with pytest.raises(ValueError):
+        cfg.derive(latency_us=5.0)
+    with pytest.raises(ValueError):
+        AmuConfig(far=far, max_inflight=8)
+    with pytest.raises(ValueError):
+        AmuConfig(max_inflight=-1)
+
+
+# =========================================================================
+# AmuSession lifecycle + RunStats
+# =========================================================================
+def test_session_runs_named_workload_and_exposes_stack():
+    with AmuSession(AmuConfig(engine="batched", latency_us=1.0)) as s:
+        stats = s.run("GUPS")
+        assert stats.verified and stats.workload == "GUPS"
+        assert isinstance(s.engine, BatchedAsyncMemoryEngine)
+        assert isinstance(s.scheduler, BatchScheduler)
+        assert s.far.requests == stats.requests
+        assert s.instance.name == "GUPS"
+    assert s.engine is None                    # closed on exit
+
+
+def test_session_scheduler_override():
+    with AmuSession(AmuConfig(engine="batched", scheduler="scalar")) as s:
+        assert s.run("GUPS").verified
+        assert isinstance(s.engine, BatchedAsyncMemoryEngine)
+        assert type(s.scheduler) is Scheduler
+
+
+def test_run_stats_mapping_protocol():
+    stats = AmuSession(AmuConfig(engine="scalar")).run("GUPS")
+    assert stats["us"] == stats.us and stats["mlp"] == stats.mlp
+    assert "requests" in stats and "nonsense" not in stats
+    assert dict(stats) == stats.to_dict()
+    assert stats.get("nonsense", 42) == 42
+    with pytest.raises(KeyError):
+        stats["nonsense"]
+    # method names are NOT keys (old plain-dict semantics)
+    assert "keys" not in stats and stats.get("to_dict") is None
+    with pytest.raises(KeyError):
+        stats["keys"]
+
+
+def test_session_build_kwargs_reach_builder():
+    with AmuSession(AmuConfig(engine="batched")) as s:
+        stats = s.run("GUPS", table_words=1024, updates=256, coroutines=16)
+        assert stats.units == 256 and stats.verified
+
+
+def test_prepare_execute_split_and_vector_stamp():
+    """prepare() builds the stack without running (benchmarks time execute()
+    alone), and registry-built instances carry which port was selected —
+    the stamp, not the session config, labels the stats."""
+    inst = REGISTRY.build("GUPS", 0, vector=True, table_words=1024,
+                          updates=256, coroutines=8)
+    assert inst.vector is True
+    assert REGISTRY.build("GUPS", 0).vector is False
+    with AmuSession(AmuConfig(engine="batched")) as s:   # cfg.vector=False
+        s.prepare(inst)
+        assert s.engine is not None and s.far.requests == 0   # not yet run
+        stats = s.execute()
+        assert stats.vector is True          # the built port wins over config
+        assert stats.verified and stats.requests == s.far.requests
+    # raw builder output (no registry involved) is labeled truthfully too:
+    # WorkloadInstance itself records which port was built
+    raw = build_gups(0, table_words=1024, updates=256, coroutines=8,
+                     vector=True)
+    assert AmuSession(AmuConfig(engine="batched")).run(raw).vector is True
+    with pytest.raises(RuntimeError):
+        AmuSession(AmuConfig()).execute()    # nothing prepared
+
+
+def test_session_runs_prebuilt_port():
+    inst = build_gups(0, table_words=1024, updates=256, coroutines=16)
+    with AmuSession(AmuConfig(engine="scalar")) as s:
+        assert s.run(inst).verified
+        assert s.instance is inst
+
+
+def test_session_choreography_identical_to_manual_stack():
+    """The session must reproduce the old hand-rolled choreography exactly:
+    same engine trace, same far-memory bytes, same timing."""
+    for wl, vector in (("GUPS", False), ("HJ", True)):
+        kw = {"vector": True} if vector else {}
+        inst = REGISTRY[wl].build(0, **kw)
+        far = FarMemoryModel(far_config(1.0))
+        eng = make_engine("scalar", inst.engine_config, far, inst.mem,
+                          record_trace=True)
+        disamb = CuckooAddressSet() if inst.disambiguation else None
+        sched = Scheduler(eng, disambiguator=disamb)
+        sched.run(inst.tasks)
+        eng.drain()
+        manual = sched.summary()
+
+        with AmuSession(AmuConfig(engine="scalar", vector=vector)) as s:
+            stats = s.run(wl, record_trace=True)
+            assert s.engine.trace == eng.trace, wl
+            assert np.array_equal(s.engine.mem, eng.mem), wl
+        assert stats.cycles == manual["cycles"], wl
+        assert stats.insts == manual["insts"], wl
+
+
+# =========================================================================
+# Registry + Port protocol
+# =========================================================================
+def test_registry_capabilities_cover_builtin_workloads():
+    assert sorted(REGISTRY.names()) == ["BFS", "BS", "GUPS", "HJ", "HPCG",
+                                        "HT", "IS", "LL", "Redis", "SL",
+                                        "STREAM"]
+    assert sorted(REGISTRY.vector_names()) == sorted(REGISTRY.names())
+    for name in ("HJ", "HT", "Redis"):
+        assert REGISTRY[name].pipelined and REGISTRY[name].locked
+    assert REGISTRY["STREAM"].llvm_defaults == {"block_doubles": 1}
+    assert REGISTRY["BFS"].frontier
+    assert REGISTRY["GUPS"].distinct and REGISTRY["Redis"].distinct
+    with pytest.raises(KeyError):
+        REGISTRY["nope"]
+
+
+def test_registry_build_honours_capabilities():
+    # vector=True on a vector-capable workload picks the vector port
+    # (fewer, wider coroutines); pipeline_k reaches only pipelined ports
+    scalar = REGISTRY.build("LL")
+    vec = REGISTRY.build("LL", vector=True, pipeline_k=4)
+    assert len(vec.tasks) < len(scalar.tasks)
+    # llvm_mode rebuilds STREAM at 8B granularity (scalar port)
+    llvm = REGISTRY.build("STREAM", llvm_mode=True, vector=True)
+    assert llvm.engine_config.granularity == 8
+    # pipeline_k silently skips non-pipelined ports instead of TypeError
+    assert REGISTRY.build("GUPS", vector=True, pipeline_k=4).name == "GUPS"
+
+
+def test_custom_workload_registration_end_to_end():
+    reg = WorkloadRegistry()
+
+    @workload("COPY8", registry=reg, description="8B far-to-far copies")
+    def build_copy(seed: int = 0, words: int = 64):
+        rng = np.random.default_rng(seed)
+        src = rng.integers(0, 1 << 62, size=words, dtype=np.uint64)
+        mem = np.concatenate([src, np.zeros(words, np.uint64)]) \
+            .view(np.uint8).copy()
+
+        def task(lo, hi):
+            for i in range(lo, hi):
+                yield ctx.aload(0, i * 8, 8)
+                yield ctx.astore(0, (words + i) * 8, 8)
+
+        def verify(m):
+            return bool(np.array_equal(m.view(np.uint64)[words:], src))
+
+        return WorkloadInstance("COPY8", mem, [task(0, words)], words,
+                                EngineConfig(queue_length=32, granularity=8),
+                                verify)
+
+    assert isinstance(build_copy(0), Port)       # structural protocol
+    with pytest.raises(ValueError):              # duplicate name rejected
+        reg.register(reg["COPY8"])
+    for engine in ("scalar", "batched"):
+        with AmuSession(AmuConfig(engine=engine), registry=reg) as s:
+            assert s.run("COPY8").verified
+
+
+# =========================================================================
+# AcquireVec / ReleaseVec
+# =========================================================================
+@pytest.mark.parametrize("sched_cls", [Scheduler, BatchScheduler])
+def test_acquire_vec_mutual_exclusion_no_lost_waiters(sched_cls):
+    """Overlapping ascending lock sets across many tasks: every task
+    completes, and no two tasks ever hold a block concurrently."""
+    rng = np.random.default_rng(7)
+    far = FarMemoryModel(FarMemoryConfig.from_latency_us(1.0))
+    eng = BatchedAsyncMemoryEngine(
+        EngineConfig(queue_length=64, granularity=8), far)
+    held, done = set(), []
+
+    def task(i, blocks):
+        addrs = sorted(b * 0x1000 for b in blocks)
+        yield AcquireVec(addrs)
+        for a in addrs:
+            assert a not in held, (i, a)
+            held.add(a)
+        yield Aload(0, 8 * (i % 64), 8)          # hold across a far access
+        for a in addrs:
+            held.remove(a)
+        yield ReleaseVec(addrs)
+        done.append(i)
+
+    tasks = [task(i, set(rng.choice(4, size=rng.integers(1, 4) + 0,
+                                    replace=False).tolist()))
+             for i in range(24)]
+    sched_cls(eng, disambiguator=CuckooAddressSet()).run(tasks)
+    assert sorted(done) == list(range(24))
+    assert not held
+
+
+@pytest.mark.parametrize("sched_cls", [Scheduler, BatchScheduler])
+def test_acquire_vec_mid_vector_continuation(sched_cls):
+    """A holder of the MIDDLE block of a vector set: the vector task
+    acquires a prefix, suspends, and continues from the hand-off without
+    re-acquiring what it already holds."""
+    far = FarMemoryModel(FarMemoryConfig.from_latency_us(1.0))
+    eng = BatchedAsyncMemoryEngine(
+        EngineConfig(queue_length=16, granularity=8), far)
+    events = []
+
+    def holder():
+        yield Acquire(0x2000)
+        events.append("holder-acquired")
+        yield Aload(0, 0, 8)
+        events.append("holder-releasing")
+        yield Release(0x2000)
+
+    def vec_task():
+        yield Cost(insts=1000)                   # let the holder go first
+        yield AcquireVec([0x1000, 0x2000, 0x3000])
+        events.append("vec-acquired")
+        yield ReleaseVec([0x1000, 0x2000, 0x3000])
+
+    sched_cls(eng, disambiguator=CuckooAddressSet()).run(
+        [holder(), vec_task()])
+    assert events == ["holder-acquired", "holder-releasing", "vec-acquired"]
+
+
+@pytest.mark.parametrize("sched_cls", [Scheduler, BatchScheduler])
+def test_release_vec_wakes_scalar_acquire_waiter(sched_cls):
+    """FIFO hand-off works across the scalar/vector lock command boundary."""
+    far = FarMemoryModel(FarMemoryConfig.from_latency_us(0.5))
+    eng = BatchedAsyncMemoryEngine(
+        EngineConfig(queue_length=16, granularity=8), far)
+    order = []
+
+    def vec_task():
+        yield AcquireVec([0x1000, 0x2000])
+        order.append("vec")
+        yield Aload(0, 0, 8)
+        yield ReleaseVec([0x1000, 0x2000])
+
+    def scalar_task():
+        yield Cost(insts=500)                    # arrive second
+        yield Acquire(0x2000)
+        order.append("scalar")
+        yield Release(0x2000)
+
+    sched_cls(eng, disambiguator=CuckooAddressSet()).run(
+        [vec_task(), scalar_task()])
+    assert order == ["vec", "scalar"]
+
+
+def test_acquire_vec_is_one_generator_hop():
+    """The whole lock set costs one coroutine round trip: a K-lock batch
+    yields exactly once for AcquireVec and once for ReleaseVec."""
+    eng = BatchedAsyncMemoryEngine(
+        EngineConfig(queue_length=16, granularity=8),
+        FarMemoryModel(FarMemoryConfig.from_latency_us(0.1)))
+    hops = []
+
+    def counted(gen):
+        for cmd in gen:
+            hops.append(type(cmd).__name__)
+            yield cmd
+
+    def task():
+        yield AcquireVec([0x1000, 0x2000, 0x3000, 0x4000])
+        yield ReleaseVec([0x1000, 0x2000, 0x3000, 0x4000])
+
+    BatchScheduler(eng, disambiguator=CuckooAddressSet()).run(
+        [counted(task())])
+    assert hops == ["AcquireVec", "ReleaseVec"]
+
+
+def test_acquire_vec_charges_per_block_disamb_work():
+    """Cost model: one hop, but cuckoo probe/insert work scales with the
+    lock-set size (disamb_cycles grows with K)."""
+    def run_locks(k):
+        eng = BatchedAsyncMemoryEngine(
+            EngineConfig(queue_length=16, granularity=8),
+            FarMemoryModel(FarMemoryConfig.from_latency_us(0.1)))
+
+        def task():
+            addrs = [0x1000 * (i + 1) for i in range(k)]
+            yield AcquireVec(addrs)
+            yield ReleaseVec(addrs)
+
+        sched = Scheduler(eng, disambiguator=CuckooAddressSet())
+        sched.run([task()])
+        return sched.disamb_cycles
+
+    assert run_locks(8) > 3 * run_locks(2)
+
+
+# =========================================================================
+# Scalar Scheduler exact-wake idle drain: pinned to single-stepping
+# =========================================================================
+class _SingleStepScheduler(Scheduler):
+    """The pre-planning idle path (regression oracle): advance to the next
+    completion, one full runtime-loop turn per completion."""
+
+    def _idle_until_completion(self):
+        if not (self._waiting_count() or self._alloc_parked):
+            raise DeadlockError("live tasks but none ready/waiting")
+        next_done = self.engine.next_completion_time
+        if next_done is None:
+            if self.engine.finished_pending:
+                return
+            raise DeadlockError("waiting but nothing outstanding")
+        self.t = max(self.t, next_done)
+        self.engine.advance(self.t)
+
+
+_SMALL = {
+    "GUPS": dict(table_words=2048, updates=512, coroutines=64),
+    "STREAM": dict(n=8192, coroutines=8),
+    "BS": dict(n_elems=2048, searches=96, coroutines=48),
+    "HJ": dict(build_keys=512, buckets=512, probes=192, coroutines=48),
+    "SL": dict(n_keys=256, lookups=96, coroutines=24),
+}
+
+
+def _scalar_run(sched_cls, wl, *, vector=False, max_inflight=0, qlen=None,
+                latency_us=1.0):
+    kw = dict(_SMALL.get(wl, {}))
+    if vector:
+        kw["vector"] = True
+    inst = REGISTRY[wl].build(0, **kw)
+    ecfg = inst.engine_config
+    if qlen:
+        ecfg = dataclasses.replace(ecfg, queue_length=qlen)
+    far = FarMemoryModel(FarMemoryConfig.from_latency_us(
+        latency_us, max_inflight=max_inflight))
+    eng = make_engine("scalar", ecfg, far, inst.mem, record_trace=True)
+    disamb = CuckooAddressSet() if inst.disambiguation else None
+    sched = sched_cls(eng, disambiguator=disamb)
+    sched.run(inst.tasks)
+    eng.drain()
+    assert inst.verify(eng.mem)
+    return sched.summary(), eng
+
+
+@pytest.mark.parametrize("wl", ["GUPS", "STREAM", "BS", "HJ", "SL"])
+def test_wake_planned_idle_bit_identical(wl):
+    new_sum, new_eng = _scalar_run(Scheduler, wl)
+    old_sum, old_eng = _scalar_run(_SingleStepScheduler, wl)
+    assert new_sum == old_sum, wl
+    assert new_eng.trace == old_eng.trace, wl
+    assert new_eng.stats == old_eng.stats, wl
+    assert np.array_equal(new_eng.mem, old_eng.mem)
+
+
+@pytest.mark.parametrize(
+    "kw", [dict(vector=True), dict(max_inflight=8), dict(latency_us=5.0),
+           dict(vector=True, qlen=16)],         # qlen=16: parked-retry path
+    ids=["vector", "backpressure", "high-latency", "id-exhaustion"])
+def test_wake_planned_idle_bit_identical_hard_modes(kw):
+    new_sum, new_eng = _scalar_run(Scheduler, "GUPS", **kw)
+    old_sum, old_eng = _scalar_run(_SingleStepScheduler, "GUPS", **kw)
+    assert new_sum == old_sum
+    assert new_eng.trace == old_eng.trace
+    assert new_eng.stats == old_eng.stats
+
+
+# =========================================================================
+# Deprecation shims: warn, and stay byte-identical to the session path
+# =========================================================================
+@pytest.mark.parametrize("wl", sorted(REGISTRY.names()))
+def test_run_amu_shim_byte_identical(wl):
+    with AmuSession(AmuConfig(engine="batched", latency_us=0.5)) as s:
+        new = s.run(wl).to_dict()
+    with pytest.warns(AmuDeprecationWarning):
+        old = sim.run_amu(REGISTRY[wl], 0.5,     # old spec-object signature
+                          engine="batched")
+    assert old == new, wl                        # bit-equal cycles/insts/...
+
+
+def test_run_amu_shim_byte_identical_default_engine():
+    """The shim's default engine stays the scalar oracle (the old
+    signature's default), not AmuConfig's batched default."""
+    with AmuSession(AmuConfig(engine="scalar", latency_us=0.5)) as s:
+        new = s.run("GUPS").to_dict()
+    with pytest.warns(AmuDeprecationWarning):
+        old = sim.run_amu(REGISTRY["GUPS"], 0.5)
+    assert old == new
+
+
+@pytest.mark.parametrize("kw", [dict(vector=True), dict(dma_mode=True),
+                                dict(llvm_mode=True)],
+                         ids=["vector", "dma", "llvm"])
+def test_run_amu_shim_byte_identical_modes(kw):
+    cfg = AmuConfig(engine="batched", vector=kw.get("vector", False),
+                    dma_mode=kw.get("dma_mode", False),
+                    llvm_mode=kw.get("llvm_mode", False), latency_us=1.0)
+    with AmuSession(cfg) as s:
+        new = s.run("STREAM").to_dict()
+    with pytest.warns(AmuDeprecationWarning):
+        old = sim.run_amu("STREAM", 1.0, engine="batched", **kw)
+    assert old == new
+
+
+def test_workloads_dict_shim_matches_registry():
+    import repro.core.workloads as w
+    with pytest.warns(AmuDeprecationWarning):
+        wl = w.WORKLOADS
+    assert sorted(wl) == sorted(REGISTRY.names())
+    for name, spec in wl.items():
+        assert spec.build is REGISTRY[name].build
+        assert spec.profile == REGISTRY[name].profile
+    with pytest.warns(AmuDeprecationWarning):
+        vw = w.VECTOR_WORKLOADS
+    assert vw == frozenset(REGISTRY.vector_names())
+    with pytest.warns(AmuDeprecationWarning):
+        assert sorted(sim.WORKLOADS) == sorted(REGISTRY.names())
+    with pytest.raises(AttributeError):
+        w.NOPE
+
+
+def test_run_amu_shim_accepts_custom_workload_spec():
+    """The old extension point — a hand-made WorkloadSpec never registered
+    anywhere — must still run through the shim (built via spec.build and
+    handed to the session as a prebuilt port)."""
+    from repro.core.workloads import WorkloadSpec
+
+    def build_tiny(seed: int = 0):
+        return build_gups(seed, table_words=512, updates=128, coroutines=8)
+
+    spec = WorkloadSpec("CUSTOM-GUPS", None, build_tiny, "unregistered")
+    with pytest.warns(AmuDeprecationWarning):
+        out = sim.run_amu(spec, 0.5, engine="batched", vector=True)
+    assert out["verified"]
+    assert out["vector"] is False       # old rule: not in VECTOR_WORKLOADS
+    assert out["units"] == 128
+
+
+def test_builder_knob_signature_byte_identical():
+    """Old-style direct builder calls (positional seed + knobs) run through
+    the session identically to a registry build with the same knobs."""
+    old_inst = build_gups(0, table_words=1024, updates=256, coroutines=16,
+                          vector=True, distinct=True)
+    new_inst = REGISTRY.build("GUPS", 0, vector=True, table_words=1024,
+                              updates=256, coroutines=16, distinct=True)
+    runs = []
+    for inst in (old_inst, new_inst):
+        with AmuSession(AmuConfig(engine="batched",
+                                  vector=True)) as s:
+            stats = s.run(inst, record_trace=True)
+            runs.append((stats.to_dict(), s.engine.trace,
+                         s.engine.mem.copy()))
+    (st_a, tr_a, mem_a), (st_b, tr_b, mem_b) = runs
+    assert st_a == st_b and tr_a == tr_b
+    assert np.array_equal(mem_a, mem_b)
+
+
+# =========================================================================
+# Command facade lowers 1:1
+# =========================================================================
+def test_ctx_facade_lowers_to_command_objects():
+    assert ctx.aload(8, 64, 16) == Aload(8, 64, 16)
+    assert type(ctx.aload(8, 64, 16, wait=False)).__name__ == "AloadNoWait"
+    assert type(ctx.astore(0, 0)).__name__ == "Astore"
+    assert type(ctx.astore(0, 0, wait=False)).__name__ == "AstoreNoWait"
+    v = ctx.aload_vec([0, 8], [64, 128], 8)
+    assert isinstance(v, AloadVec) and v.wait is True
+    assert ctx.astore_vec([0], [8], 8, wait=False).wait is False
+    assert ctx.await_rid(3) == AwaitRid(3)
+    assert ctx.await_rids([1, 2]).rids == (1, 2)
+    assert ctx.acquire(64) == Acquire(64)
+    assert ctx.release(64) == Release(64)
+    assert isinstance(ctx.acquire_vec([0, 64]), AcquireVec)
+    assert isinstance(ctx.release_vec([0, 64]), ReleaseVec)
+    assert ctx.spm_read(0, 8) == SpmRead(0, 8)
+    assert isinstance(ctx.spm_write(0, b"x"), SpmWrite)
+    assert ctx.cost(insts=3, cycles=1.5) == Cost(3, 1.5)

@@ -8,9 +8,10 @@ scalar oracle, so the claims hold for both."""
 import numpy as np
 import pytest
 
+from repro.amu import REGISTRY
 from repro.core import simulator as sim
 
-WORKLOADS = list(sim.WORKLOADS)
+WORKLOADS = REGISTRY.names()
 ENGINE = "batched"
 
 

@@ -1,0 +1,39 @@
+"""CI deprecation gate: no in-repo caller may touch the shimmed
+pre-AmuSession surface (`run_amu`, the WORKLOADS/VECTOR_WORKLOADS dicts).
+
+Installs an error filter for AmuDeprecationWarning, then imports every
+driver module and exercises the benchmark/sim entry paths — any shim use at
+import time or in the exercised paths raises. (An interpreter-level
+``-W error::repro.amu...`` cannot express this: resolving the dotted
+category at startup imports numpy before the interpreter is ready for it.
+The test suite enforces the same filter via tests/conftest.py.)
+
+Usage: PYTHONPATH=src python tools/check_deprecation_gate.py
+"""
+import os
+import sys
+import warnings
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path[:0] = [_ROOT, os.path.join(_ROOT, "src")]
+
+from repro.amu.deprecation import AmuDeprecationWarning  # noqa: E402
+
+warnings.simplefilter("error", AmuDeprecationWarning)
+
+import benchmarks.kernel_micro            # noqa: E402,F401
+import benchmarks.paper_figures as pf     # noqa: E402
+import benchmarks.roofline                # noqa: E402,F401
+import benchmarks.run                     # noqa: E402,F401
+import examples.amu_workload              # noqa: E402,F401
+import repro.core.simulator as sim        # noqa: E402
+import repro.core.workloads               # noqa: E402,F401
+import tools.calibrate                    # noqa: E402,F401
+
+# exercise the figure-driver AMU path end to end (shim-free by construction)
+out = pf._run("GUPS", "amu", 0.5, verify=True)
+assert out["verified"], out
+out = sim.run("GUPS", "baseline", 0.5)
+assert out["cycles"] > 0
+
+print("deprecation gate: all drivers clean of the shimmed surface")
