@@ -7,7 +7,8 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.amu import REGISTRY, AmuConfig
+from repro.amu import (REGISTRY, AmuConfig, AmuSession, BimodalTail,
+                       LognormalLatency, far_config, far_region)
 from repro.core import simulator as sim
 from repro.core.simulator import PowerModel
 
@@ -149,6 +150,72 @@ def fig3_group_sensitivity() -> List[Row]:
     return rows
 
 
+def tail_latency() -> List[Row]:
+    """Tail-latency sweep (heterogeneous far-memory scenarios): GUPS + LL
+    at a fixed 1 µs *base* far latency across increasing p99/p50 tail
+    ratios — lognormal (network-path variability; mean-preserving, so the
+    base is the mean multiplier and the median sits at exp(-σ²/2)) and
+    bimodal (retransmit / congestion spikes; the base is the p50) draws —
+    plus a mixed-tier GUPS run (local-DRAM + 1 µs CXL + 5 µs cross-switch
+    regions, bimodal tail on the switch tier) with per-region request/MLP
+    stats. The paper's latency-adaptation claim, on the variability axis:
+    AMU throughput should degrade with the *mean* of the draw, not its
+    tail ratio, because done-times are known at issue and completions
+    dispatch out of order."""
+    rows: List[Row] = []
+    dists = [
+        ("det", None),
+        ("lognormal_s0.5", LognormalLatency(0.5)),
+        ("lognormal_s1.0", LognormalLatency(1.0)),
+        ("bimodal_p5_x8", BimodalTail(0.05, 8.0)),
+        ("bimodal_p5_x32", BimodalTail(0.05, 32.0)),
+    ]
+    # characterize each distribution ONCE, from its own fresh stream, so
+    # identical distributions report identical stats across workloads
+    shape: Dict[str, Tuple[float, float]] = {"det": (1.0, 1.0)}
+    for name, dist in dists:
+        if dist is not None:
+            draws = dist.draw(np.random.default_rng(0), 200_000)
+            shape[name] = (float(np.quantile(draws, 0.99)
+                                 / np.quantile(draws, 0.5)),
+                           float(np.mean(draws)))
+    for wl in ("GUPS", "LL"):
+        det_us = None
+        for name, dist in dists:
+            cfg = AMU.derive(far=far_config(1.0, distribution=dist))
+            with AmuSession(cfg.derive(verify=False)) as s:
+                out = s.run(wl)
+            ratio, mean = shape[name]
+            det_us = det_us if det_us is not None else out.us
+            rows.append((f"tail/{wl}/{name}", out.us,
+                         f"p99_over_p50={ratio:.1f},mean_mult={mean:.2f},"
+                         f"mlp={out.mlp:.1f},"
+                         f"slowdown_vs_det={out.us / det_us:.2f}x"))
+    # mixed-tier GUPS: a third of the table in each of local-DRAM / CXL /
+    # cross-switch (the switch tier with a bimodal congestion tail), the
+    # two far tiers contending on one shared channel
+    table_words = 8192
+    third = (table_words * 8 // 3) // 8 * 8
+    regions = [
+        far_region("local", 0, third, 0.08),
+        far_region("cxl", third, third, 1.0, link="switch"),
+        far_region("xswitch", 2 * third, table_words * 8 - 2 * third, 5.0,
+                   distribution=BimodalTail(0.05, 8.0), link="switch"),
+    ]
+    with AmuSession(AMU.derive(far=regions)) as s:
+        out = s.run("GUPS", table_words=table_words, distinct=True)
+    assert out.verified
+    rows.append(("tail/GUPS/mixed_tier", out.us,
+                 f"mlp={out.mlp:.1f},requests={out.requests}"))
+    for rname, rstats in out.regions.items():
+        rows.append((f"tail/GUPS/mixed_tier/{rname}", out.us,
+                     f"requests={rstats['requests']},"
+                     f"mlp={rstats['mlp']:.1f},"
+                     f"lat_cycles={rstats['latency_cycles']:.0f},"
+                     f"link={rstats['link']}"))
+    return rows
+
+
 def table5_disambiguation() -> List[Row]:
     """Table 5: fraction of execution time in software disambiguation."""
     rows = []
@@ -189,5 +256,6 @@ ALL_FIGURES = {
     "fig11": fig11_power,
     "table4": table4_prefetch,
     "table5": table5_disambiguation,
+    "tail": tail_latency,
     "headline": headline_claims,
 }

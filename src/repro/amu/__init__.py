@@ -16,11 +16,14 @@ Port bodies use the typed command facade :data:`ctx`
 (``yield ctx.aload(...)`` etc.) instead of hand-rolling command objects.
 """
 from repro.amu.commands import CommandFacade, ctx
-from repro.amu.config import FREQ_GHZ, LINE, AmuConfig, far_config
-from repro.amu.deprecation import AmuDeprecationWarning
+from repro.amu.config import (FREQ_GHZ, LINE, AmuConfig, far_config,
+                              far_region)
 from repro.amu.registry import (REGISTRY, Port, WorkloadDef,
                                 WorkloadRegistry, workload)
 from repro.amu.session import AmuSession, RunStats
+from repro.core.farmem import (BimodalTail, FarMemoryConfig, FarMemoryRegion,
+                               LatencyDistribution, LognormalLatency,
+                               UniformJitter)
 
 # Populate REGISTRY with the built-in Table 3 workloads. Deliberately last:
 # the port module imports the facade/registry submodules above, which are
@@ -31,5 +34,7 @@ import repro.core.workloads  # noqa: E402,F401  (registration side-effect)
 __all__ = [
     "AmuConfig", "AmuSession", "RunStats", "ctx", "CommandFacade",
     "workload", "Port", "WorkloadDef", "WorkloadRegistry", "REGISTRY",
-    "AmuDeprecationWarning", "far_config", "FREQ_GHZ", "LINE",
+    "far_config", "far_region", "FREQ_GHZ", "LINE",
+    "FarMemoryConfig", "FarMemoryRegion", "LatencyDistribution",
+    "UniformJitter", "LognormalLatency", "BimodalTail",
 ]

@@ -12,12 +12,13 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, replace
-from typing import Optional
+from typing import Optional, Sequence, Union
 
 from repro.configs.base import EngineConfig
 from repro.core.coroutines import SCHEDULER_KINDS, CostModel
 from repro.core.engine import ENGINE_KINDS
-from repro.core.farmem import FarMemoryConfig
+from repro.core.farmem import (FarMemoryConfig, FarMemoryRegion,
+                               LatencyDistribution)
 
 #: Simulated core clock (Table 2: 3 GHz, 6-wide OoO).
 FREQ_GHZ = 3.0
@@ -26,13 +27,30 @@ LINE = 64
 
 
 def far_config(latency_us: float, bandwidth_gbs: float = 64.0,
-               max_inflight: int = 0) -> FarMemoryConfig:
+               max_inflight: int = 0, **kw) -> FarMemoryConfig:
     """The paper's far-memory operating point at `latency_us` (Fig 1/7).
-    (Transfer granularity is a property of each request, not of the
-    device — set it on the :class:`EngineConfig` instead.)"""
+    Extra keywords reach :class:`FarMemoryConfig` (e.g. ``distribution=``
+    for a tail-latency draw). (Transfer granularity is a property of each
+    request, not of the device — set it on the :class:`EngineConfig`
+    instead.)"""
     return FarMemoryConfig.from_latency_us(
         latency_us, freq_ghz=FREQ_GHZ, bandwidth_gbs=bandwidth_gbs,
-        max_inflight=max_inflight)
+        max_inflight=max_inflight, **kw)
+
+
+def far_region(name: str, start: int, size: int, latency_us: float,
+               bandwidth_gbs: float = 64.0, max_inflight: int = 0,
+               link: Optional[str] = None,
+               distribution: Optional[LatencyDistribution] = None,
+               jitter_frac: float = 0.0) -> FarMemoryRegion:
+    """One tier of a heterogeneous far memory, in the paper's µs / GB/s
+    units. Pass a list of these as ``AmuConfig(far=[...])`` to run a
+    workload against mixed local-DRAM / fast-CXL / cross-switch tiers;
+    regions naming the same ``link`` contend on one shared channel."""
+    return FarMemoryRegion.from_latency_us(
+        name, start, size, latency_us, freq_ghz=FREQ_GHZ,
+        bandwidth_gbs=bandwidth_gbs, max_inflight=max_inflight, link=link,
+        distribution=distribution, jitter_frac=jitter_frac)
 
 
 @dataclass(frozen=True)
@@ -55,9 +73,11 @@ class AmuConfig:
     * ``latency_us`` / ``max_inflight`` — far-memory operating point
       (``max_inflight`` models device-side queue backpressure, 0 =
       unlimited); ``far`` replaces both with a fully custom
-      :class:`FarMemoryConfig` — setting ``far`` together with a
-      non-default latency/backpressure knob is rejected, so a sweep's
-      ``derive(latency_us=...)`` can never be silently ignored.
+      :class:`FarMemoryConfig` *or a sequence of*
+      :class:`~repro.core.farmem.FarMemoryRegion` (heterogeneous tiers,
+      validated and normalized into one config) — setting ``far`` together
+      with a non-default latency/backpressure knob is rejected, so a
+      sweep's ``derive(latency_us=...)`` can never be silently ignored.
     * ``engine_config`` — overrides the workload's sized
       :class:`EngineConfig` wholesale; ``spm_bytes`` overrides just the
       SPM budget of whichever config is in effect.
@@ -72,7 +92,8 @@ class AmuConfig:
     llvm_mode: bool = False
     latency_us: Optional[float] = None     # None -> 1.0 (unless far= given)
     max_inflight: int = 0
-    far: Optional[FarMemoryConfig] = None
+    far: Optional[Union[FarMemoryConfig,
+                        Sequence[FarMemoryRegion]]] = None
     engine_config: Optional[EngineConfig] = None
     spm_bytes: Optional[int] = None
     seed: int = 0
@@ -87,6 +108,20 @@ class AmuConfig:
                            f"known: {sorted(SCHEDULER_KINDS)} or 'auto'")
         if self.pipeline_k is not None and self.pipeline_k < 1:
             raise ValueError(f"pipeline_k must be >= 1, got {self.pipeline_k}")
+        if self.far is not None and not isinstance(self.far, FarMemoryConfig):
+            # a sequence of regions: validate and normalize into one
+            # FarMemoryConfig (FarMemoryConfig.__post_init__ checks range
+            # ordering, name uniqueness, per-region knob sanity)
+            regions = tuple(self.far)
+            if not regions or not all(isinstance(r, FarMemoryRegion)
+                                      for r in regions):
+                raise TypeError(
+                    "far= takes a FarMemoryConfig or a non-empty sequence "
+                    f"of FarMemoryRegion, got {self.far!r}")
+            # seed stays FarMemoryConfig's default, matching the flat
+            # resolve path; a custom far-memory seed is spelled as an
+            # explicit FarMemoryConfig(regions=..., seed=...)
+            object.__setattr__(self, "far", FarMemoryConfig(regions=regions))
         if self.far is not None and (self.latency_us is not None
                                      or self.max_inflight):
             # an explicit FarMemoryConfig replaces the whole operating

@@ -38,7 +38,12 @@ from repro.core.farmem import FarMemoryModel
 @dataclass(frozen=True)
 class RunStats:
     """Typed result of one :meth:`AmuSession.run` (plus dict-style reads
-    for the pre-session callers that indexed the old stats dict)."""
+    for the pre-session callers that indexed the old stats dict).
+
+    ``regions`` carries per-tier request/byte/MLP stats when the config's
+    far memory is heterogeneous (``AmuConfig(far=[...regions...])``), and
+    is ``None`` for the flat model.
+    """
     cycles: float
     insts: float
     ipc: float
@@ -52,6 +57,7 @@ class RunStats:
     vector: bool
     verified: Optional[bool]
     workload: str = ""
+    regions: Optional[Dict[str, Dict[str, float]]] = None
 
     # mapping-style access keeps old dict-consumer code working unchanged;
     # only FIELD names are keys (method names like "keys" stay invisible,
@@ -166,7 +172,8 @@ class AmuSession:
             us=stats["cycles"] / (FREQ_GHZ * 1e3),
             units=inst.units, vector=self._use_vector,
             verified=bool(inst.verify(eng.mem)) if cfg.verify else None,
-            workload=inst.name)
+            workload=inst.name,
+            regions=self.far.region_stats(stats["cycles"]))
 
     def run(self, port: Union[str, Port], *,
             record_trace: bool = False, **build_kw) -> RunStats:

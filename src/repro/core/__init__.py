@@ -11,4 +11,7 @@ from repro.core.coroutines import (Acquire, AcquireVec, Aload, AloadNoWait,
 from repro.core.disambiguation import CuckooAddressSet
 from repro.core.engine import (AsyncMemoryEngine, BatchedAsyncMemoryEngine,
                                make_engine)
-from repro.core.farmem import FarMemoryConfig, FarMemoryModel, InstantMemory
+from repro.core.farmem import (BimodalTail, FarMemoryConfig, FarMemoryModel,
+                               FarMemoryRegion, InstantMemory,
+                               LatencyDistribution, LognormalLatency,
+                               UniformJitter)

@@ -172,8 +172,10 @@ class AcquireVec:
     the task suspends in that block's FIFO, resuming acquisition from the
     next address when ownership is handed off. A K-chase batch therefore
     pays ONE coroutine round trip for its whole lock set instead of K
-    per-op Acquire hops; the per-block cuckoo probe/insert work is still
-    charged per element."""
+    per-op Acquire hops; the per-block cuckoo probe/insert work is charged
+    per element AS each block is attempted — a vector suspended mid-set
+    charges its remaining blocks at the hand-off continuation, not upfront
+    at the hop (so disambiguation fractions stay comparable to Table 5)."""
     addrs: object
 
 
@@ -422,12 +424,12 @@ class Scheduler:
         elif isinstance(cmd, AcquireVec):
             assert self.disamb is not None, "no disambiguator configured"
             addrs = [int(a) for a in cmd.addrs]
-            t0 = self.t
-            # one hop for the whole lock set; the per-block probe/insert
-            # work is still paid per element
-            self._tick_insts(c.acquire_insts * len(addrs))
-            self.t += c.acquire_stall_cycles * len(addrs)
-            self.disamb_cycles += self.t - t0
+            # one hop for the whole lock set; the per-block cuckoo
+            # probe/insert work is charged inside _acquire_from as each
+            # block is actually attempted — the prefix up to a conflict
+            # now, the remainder on the hand-off continuation — so
+            # disambiguation fractions attribute the work to the moment
+            # it happens (Table 5 comparability for vector ports)
             self._acquire_from(task, addrs, 0)
         elif isinstance(cmd, ReleaseVec):
             assert self.disamb is not None
@@ -445,11 +447,19 @@ class Scheduler:
             raise TypeError(f"unknown command {cmd!r}")
 
     def _acquire_from(self, task: Task, addrs, i: int) -> None:
-        """Acquire ``addrs[i:]`` in order for `task`. On a conflict the task
-        is already enqueued in that block's waiter FIFO; remember where it
-        stopped so the Release hand-off can continue the acquisition."""
+        """Acquire ``addrs[i:]`` in order for `task`, charging each block's
+        cuckoo probe/insert as it is attempted (a failed probe is still a
+        probe). On a conflict the task is already enqueued in that block's
+        waiter FIFO; remember where it stopped so the Release hand-off can
+        continue the acquisition — the remaining blocks' charges then land
+        at continuation time, not upfront at the AcquireVec hop."""
+        c = self.cost
         n = len(addrs)
         while i < n:
+            t0 = self.t
+            self._tick_insts(c.acquire_insts)
+            self.t += c.acquire_stall_cycles
+            self.disamb_cycles += self.t - t0
             if not self.disamb.start_access(addrs[i], waiter=task):
                 self._acq_state[id(task)] = (addrs, i)
                 return

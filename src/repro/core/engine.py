@@ -348,7 +348,7 @@ class AsyncMemoryEngine(AsyncEngineBase):
         req = Request(rid, kind, spm_addr, mem_addr, size, self.now)
         if kind == STORE:
             req.data = self.spm[spm_addr:spm_addr + size].tobytes()
-        req.done_time = self.far.issue(self.now, size)
+        req.done_time = self.far.issue(self.now, size, mem_addr)
         self.amart[rid] = req
         heapq.heappush(self._pending, (req.done_time, rid))
         self.stats["aload" if kind == LOAD else "astore"] += 1
@@ -696,7 +696,7 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
             return 0
         if kind == STORE:
             self._store_data[rid] = self.spm[spm_addr:spm_addr + size].copy()
-        done = self.far.issue(self.now, size)
+        done = self.far.issue(self.now, size, mem_addr)
         self._set_request(rid, kind, spm_addr, mem_addr, size, done)
         self.stats["aload" if kind == LOAD else "astore"] += 1
         if self.trace is not None:
@@ -772,7 +772,7 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
                 for i in range(k):
                     a, s = int(spm_addrs[i]), int(sizes[i])
                     self._store_data[int(ok[i])] = self.spm[a:a + s].copy()
-        done = self.far.issue_batch(self.now, sizes[:k])
+        done = self.far.issue_batch(self.now, sizes[:k], mem_addrs[:k])
         self._kind[ok] = kind
         self._spm_a[ok] = spm_addrs[:k]
         self._mem_a[ok] = mem_addrs[:k]

@@ -1,16 +1,18 @@
-"""Far-memory device model: latency + bandwidth + queueing.
+"""Far-memory device model: latency + bandwidth + queueing, heterogeneous.
 
 Models the paper's Figure 1/7 memory path: requests leave the core through a
 link with finite bandwidth and a base latency that ranges from 0.1 µs (fast
 CXL) to 5 µs (cross-switch disaggregated memory). Completion time for a
 request issued at `t` is::
 
-    t_done = max(t, link_free) + base_latency + size / bandwidth (+ jitter)
+    t_done = max(t, link_free) + base_latency * mult + size / bandwidth
 
 where `link_free` enforces serialization of request injection on the link
 (packets inject back-to-back at `size / bandwidth` spacing), giving Little's
 law behaviour: sustained MLP on the device cannot exceed
-`bandwidth * latency / granularity`.
+`bandwidth * latency / granularity`; `mult` is a per-request draw from the
+configured :class:`LatencyDistribution` (1.0 when none — the paper's point
+that far latencies are "longer *and more variable* than local DRAM").
 
 MLP accounting is closed-form rather than event-driven: since a request is
 in flight on [issue, done), the integral of the in-flight count over [0, T]
@@ -19,6 +21,23 @@ ledger of completion times instead of an event heap. A heap exists only in
 ``max_inflight`` mode, where injection is coupled to completions
 (device-side queue backpressure).
 
+**Heterogeneous mode** (``FarMemoryConfig.regions``): the address space
+splits into per-range :class:`FarMemoryRegion` tiers — e.g. local-DRAM /
+fast-CXL / cross-switch — each with its own latency, bandwidth,
+``max_inflight``, latency distribution, and *link*. Requests route by
+address in :meth:`issue`/:meth:`issue_batch`; regions naming the same
+``link`` contend on one serialization point (shared channel) while keeping
+their own closed-form MLP ledgers, request/byte counters, RNG streams and
+backpressure queues (:meth:`region_stats`). A single region covering the
+whole address space is bit-identical to the flat model.
+
+Determinism contract (pinned by tests/test_batched_engine.py and
+tests/test_farmem_regions.py): every latency distribution draws through a
+seeded ``np.random.Generator`` whose array fills consume the bitstream
+exactly like sequential scalar draws, so ``issue_batch`` is bit-identical
+to the equivalent ``issue()`` loop — per region, and across regions via
+consecutive same-region run segmentation.
+
 The same model backs the functional engine (zero-latency mode), the
 cycle-approximate simulator, and the runtime's host-offload tier.
 """
@@ -26,11 +45,145 @@ from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass
-from typing import List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 GHZ = 1e9  # cycles are expressed at the simulated core clock (paper: 3 GHz)
+
+
+# =========================================================================
+# Latency distributions
+# =========================================================================
+class LatencyDistribution:
+    """A per-request latency *multiplier* draw (1.0 == the base latency).
+
+    Implementations must be seeded-deterministic AND batch/scalar
+    bit-identical: ``draw(rng, n)`` consumes the RNG bitstream exactly like
+    ``n`` successive ``draw(rng)`` calls (numpy ``Generator`` array fills
+    guarantee this for the primitives used here), so the vectorized
+    ``issue_batch`` path reproduces the scalar ``issue()`` loop bit-for-bit.
+    """
+
+    kind = "none"
+
+    def draw(self, rng: np.random.Generator, n: Optional[int] = None):
+        """One multiplier (``n is None``) or a length-``n`` vector."""
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class UniformJitter(LatencyDistribution):
+    """Uniform ±``frac`` of the base latency — the typed spelling of the
+    legacy ``jitter_frac`` knob (identical draws for the same seed)."""
+
+    frac: float = 0.1
+    kind = "uniform"
+
+    def draw(self, rng: np.random.Generator, n: Optional[int] = None):
+        if n is None:
+            return 1.0 + self.frac * float(rng.uniform(-1.0, 1.0))
+        return 1.0 + self.frac * rng.uniform(-1.0, 1.0, size=n)
+
+
+@dataclass(frozen=True)
+class LognormalLatency(LatencyDistribution):
+    """Mean-preserving lognormal multiplier (``mu = -sigma^2/2``): the
+    heavy-ish right tail of real network/far-memory paths with the mean
+    latency pinned to the base, so tail sweeps isolate *variability* from
+    operating-point shifts."""
+
+    sigma: float = 0.5
+    kind = "lognormal"
+
+    def draw(self, rng: np.random.Generator, n: Optional[int] = None):
+        mu = -0.5 * self.sigma * self.sigma
+        if n is None:
+            return float(rng.lognormal(mu, self.sigma))
+        return rng.lognormal(mu, self.sigma, size=n)
+
+
+@dataclass(frozen=True)
+class BimodalTail(LatencyDistribution):
+    """Bimodal tail: with probability ``tail_prob`` a request pays
+    ``tail_mult``× the base latency (retransmits, switch congestion, remote
+    NUMA hops); otherwise exactly the base. p50 stays the base latency, p99
+    is controlled by (``tail_prob``, ``tail_mult``) — the knob pair behind
+    the tail-latency sweep in benchmarks/paper_figures.py."""
+
+    tail_prob: float = 0.05
+    tail_mult: float = 8.0
+    kind = "bimodal"
+
+    def draw(self, rng: np.random.Generator, n: Optional[int] = None):
+        if n is None:
+            return self.tail_mult if float(rng.random()) < self.tail_prob \
+                else 1.0
+        u = rng.random(size=n)
+        return np.where(u < self.tail_prob, self.tail_mult, 1.0)
+
+
+# =========================================================================
+# Regions
+# =========================================================================
+@dataclass(frozen=True)
+class FarMemoryRegion:
+    """One address-range tier of a heterogeneous far memory.
+
+    ``[start, start + size)`` is the far-memory address range served at this
+    operating point. ``link`` names the injection channel: regions sharing a
+    link name contend on one serialization point (shared channel);
+    ``link=None`` gives the region a private link named after it. Requests
+    must not straddle a region boundary (routed by start address, validated
+    against the end — a straddle raises rather than silently misroutes).
+    """
+
+    name: str
+    start: int
+    size: int
+    base_latency_cycles: float
+    bandwidth_bytes_per_cycle: float = 21.3
+    max_inflight: int = 0                 # 0 -> unlimited (link BW still caps)
+    jitter_frac: float = 0.0              # legacy uniform ± fraction
+    distribution: Optional[LatencyDistribution] = None
+    link: Optional[str] = None
+
+    @property
+    def end(self) -> int:
+        return self.start + self.size
+
+    @classmethod
+    def from_latency_us(cls, name: str, start: int, size: int,
+                        lat_us: float, freq_ghz: float = 3.0,
+                        bandwidth_gbs: float = 64.0, **kw) -> "FarMemoryRegion":
+        return cls(name, start, size,
+                   base_latency_cycles=lat_us * 1e3 * freq_ghz,
+                   bandwidth_bytes_per_cycle=bandwidth_gbs / freq_ghz, **kw)
+
+
+def _validate_regions(regions: Tuple[FarMemoryRegion, ...]) -> None:
+    names = [r.name for r in regions]
+    if len(set(names)) != len(names) or not all(names):
+        raise ValueError(f"region names must be unique and non-empty: {names}")
+    prev_end = None
+    for r in regions:
+        if r.size <= 0 or r.start < 0:
+            raise ValueError(f"region {r.name!r}: need start >= 0 and "
+                             f"size > 0, got [{r.start}, {r.end})")
+        if r.base_latency_cycles < 0 or r.bandwidth_bytes_per_cycle <= 0:
+            raise ValueError(f"region {r.name!r}: latency must be >= 0 and "
+                             f"bandwidth > 0")
+        if r.max_inflight < 0:
+            raise ValueError(f"region {r.name!r}: max_inflight must be >= 0")
+        if r.jitter_frac and r.distribution is not None:
+            raise ValueError(f"region {r.name!r}: jitter_frac and "
+                             f"distribution are two spellings of the same "
+                             f"knob; set one")
+        if prev_end is not None and r.start < prev_end:
+            raise ValueError(f"regions must be ascending and non-overlapping;"
+                             f" {r.name!r} starts at {r.start} before the "
+                             f"previous region ends at {prev_end}")
+        prev_end = r.end
 
 
 @dataclass
@@ -40,12 +193,109 @@ class FarMemoryConfig:
     jitter_frac: float = 0.0              # uniform +- fraction of base latency
     max_inflight: int = 0                 # 0 -> unlimited (link BW still caps)
     seed: int = 0
+    distribution: Optional[LatencyDistribution] = None
+    #: heterogeneous mode: per-address-range tiers (empty -> flat model).
+    #: The flat operating-point fields above are ignored when regions are
+    #: set; each region carries its own. Region i draws from
+    #: ``default_rng(seed + i)``, so a single region covering the address
+    #: space reproduces the flat model bit-for-bit.
+    regions: Tuple[FarMemoryRegion, ...] = ()
+
+    def __post_init__(self) -> None:
+        self.regions = tuple(self.regions)
+        if self.regions:
+            _validate_regions(self.regions)
+        if self.jitter_frac and self.distribution is not None:
+            raise ValueError("jitter_frac and distribution are two spellings "
+                             "of the same knob; set one")
 
     @classmethod
     def from_latency_us(cls, lat_us: float, freq_ghz: float = 3.0,
                         bandwidth_gbs: float = 64.0, **kw) -> "FarMemoryConfig":
         return cls(base_latency_cycles=lat_us * 1e3 * freq_ghz,
                    bandwidth_bytes_per_cycle=bandwidth_gbs / freq_ghz, **kw)
+
+
+# =========================================================================
+# Internal state helpers
+# =========================================================================
+class _Ledger:
+    """Closed-form MLP ledger: completion times + sum of issue times."""
+
+    __slots__ = ("dones", "n", "sum_issue")
+
+    def __init__(self) -> None:
+        self.dones = np.empty(1024, np.float64)
+        self.n = 0
+        self.sum_issue = 0.0
+
+    def record(self, issue_t: float, done: float) -> None:
+        if self.n == self.dones.size:
+            self.dones = np.concatenate(
+                [self.dones, np.empty(self.dones.size, np.float64)])
+        self.dones[self.n] = done
+        self.n += 1
+        self.sum_issue += issue_t
+
+    def record_batch(self, issue_t, done: np.ndarray) -> None:
+        """Ledger-record a batch. `issue_t` is a scalar (all requests start
+        counting at the same instant) or a per-request array (backpressured
+        admission staggers the MSHR-occupancy start times)."""
+        need = self.n + done.size
+        if need > self.dones.size:
+            grow = max(self.dones.size * 2, need)
+            self.dones = np.concatenate(
+                [self.dones[:self.n], np.empty(grow - self.n, np.float64)])
+        self.dones[self.n:need] = done
+        self.n = need
+        if np.ndim(issue_t):
+            # sequential adds keep the ledger bit-identical to n scalar
+            # record() calls (np.sum's pairwise order differs in float)
+            for v in issue_t:
+                self.sum_issue += float(v)
+        else:
+            self.sum_issue += float(issue_t) * done.size
+
+    def area(self, total_time: float) -> float:
+        """Integral of the in-flight count over [0, total_time]."""
+        a = (float(np.minimum(self.dones[:self.n], total_time).sum())
+             - self.sum_issue)
+        return max(a, 0.0)
+
+    def inflight(self, now: float) -> int:
+        return int((self.dones[:self.n] > now).sum())
+
+    def clear(self) -> None:
+        self.n = 0
+        self.sum_issue = 0.0
+
+
+class _Link:
+    """A serialization point: the time the channel next becomes free.
+    Regions sharing a link share one of these (shared-channel contention)."""
+
+    __slots__ = ("free",)
+
+    def __init__(self) -> None:
+        self.free = 0.0
+
+
+class _RegionState:
+    """Mutable per-region runtime state (the flat model's fields, per tier)."""
+
+    __slots__ = ("region", "link", "rng", "token", "inflight", "ledger",
+                 "requests", "bytes_moved")
+
+    def __init__(self, region: FarMemoryRegion, link: _Link,
+                 rng: np.random.Generator) -> None:
+        self.region = region
+        self.link = link
+        self.rng = rng
+        self.token = 0
+        self.inflight: List[Tuple[float, int]] = []
+        self.ledger = _Ledger()
+        self.requests = 0
+        self.bytes_moved = 0
 
 
 class FarMemoryModel:
@@ -56,61 +306,65 @@ class FarMemoryModel:
         self._link_free = 0.0
         self._rng = np.random.default_rng(config.seed)
         self._token = 0
-        # completion-time ledger for closed-form MLP accounting
-        self._dones = np.empty(1024, np.float64)
-        self._n_done = 0
-        self._sum_issue = 0.0
+        self._ledger = _Ledger()
         # event heap, used only in max_inflight (backpressure) mode
         self._inflight: List[Tuple[float, int]] = []
         # stats
         self.requests = 0
         self.bytes_moved = 0
+        # heterogeneous mode: per-region state + address-routing arrays
+        self._regions: Optional[List[_RegionState]] = None
+        if config.regions:
+            links: Dict[str, _Link] = {}
+            self._regions = [
+                _RegionState(r, links.setdefault(r.link or r.name, _Link()),
+                             np.random.default_rng(config.seed + i))
+                for i, r in enumerate(config.regions)]
+            self._starts = np.array([r.start for r in config.regions],
+                                    np.int64)
+            self._ends = np.array([r.end for r in config.regions], np.int64)
 
     # -- accounting ---------------------------------------------------------
-    def _record(self, issue_t: float, done: float) -> None:
-        if self._n_done == self._dones.size:
-            self._dones = np.concatenate(
-                [self._dones, np.empty(self._dones.size, np.float64)])
-        self._dones[self._n_done] = done
-        self._n_done += 1
-        self._sum_issue += issue_t
-
-    def _record_batch(self, issue_t, done: np.ndarray) -> None:
-        """Ledger-record a batch. `issue_t` is a scalar (all requests start
-        counting at the same instant) or a per-request array (backpressured
-        admission staggers the MSHR-occupancy start times)."""
-        need = self._n_done + done.size
-        if need > self._dones.size:
-            grow = max(self._dones.size * 2, need)
-            self._dones = np.concatenate(
-                [self._dones[:self._n_done],
-                 np.empty(grow - self._n_done, np.float64)])
-        self._dones[self._n_done:need] = done
-        self._n_done = need
-        if np.ndim(issue_t):
-            # sequential adds keep the ledger bit-identical to n scalar
-            # _record() calls (np.sum's pairwise order differs in float)
-            for v in issue_t:
-                self._sum_issue += float(v)
-        else:
-            self._sum_issue += float(issue_t) * done.size
-
     def inflight_at(self, now: float) -> int:
         """Requests issued at or before `now` that have not completed."""
+        if self._regions is not None:
+            return sum(self._region_inflight_at(st, now)
+                       for st in self._regions)
         if self.config.max_inflight:
             while self._inflight and self._inflight[0][0] <= now:
                 heapq.heappop(self._inflight)
             return len(self._inflight)
-        return int((self._dones[:self._n_done] > now).sum())
+        return self._ledger.inflight(now)
 
     def avg_mlp(self, total_time: float) -> float:
-        area = (float(np.minimum(self._dones[:self._n_done],
-                                 total_time).sum()) - self._sum_issue)
-        return max(area, 0.0) / max(total_time, 1e-9)
+        if self._regions is not None:
+            area = sum(st.ledger.area(total_time) for st in self._regions)
+        else:
+            area = self._ledger.area(total_time)
+        return area / max(total_time, 1e-9)
+
+    def region_stats(self, total_time: float) -> Optional[Dict[str, Dict]]:
+        """Per-region request/byte/MLP stats (None for the flat model)."""
+        if self._regions is None:
+            return None
+        return {
+            st.region.name: {
+                "requests": st.requests,
+                "bytes": st.bytes_moved,
+                "mlp": st.ledger.area(total_time) / max(total_time, 1e-9),
+                "latency_cycles": st.region.base_latency_cycles,
+                "link": st.region.link or st.region.name,
+            } for st in self._regions}
 
     # -- request path -------------------------------------------------------
-    def issue(self, now: float, size_bytes: int) -> float:
-        """Issue a request at `now`; returns absolute completion time."""
+    def issue(self, now: float, size_bytes: int,
+              addr: Optional[int] = None) -> float:
+        """Issue a request at `now`; returns absolute completion time.
+        `addr` routes to the owning region in heterogeneous mode (ignored
+        by the flat model)."""
+        if self._regions is not None:
+            return self._region_issue(self._route(addr, size_bytes),
+                                      now, size_bytes)
         cfg = self.config
         inject_at = max(now, self._link_free)
         start = now          # when the request starts counting as in flight
@@ -124,29 +378,37 @@ class FarMemoryModel:
         serial = size_bytes / cfg.bandwidth_bytes_per_cycle
         self._link_free = inject_at + serial
         lat = cfg.base_latency_cycles
-        if cfg.jitter_frac:
+        if cfg.distribution is not None:
+            lat *= cfg.distribution.draw(self._rng)
+        elif cfg.jitter_frac:
             lat *= 1.0 + cfg.jitter_frac * float(self._rng.uniform(-1.0, 1.0))
         done = inject_at + serial + lat
         if cfg.max_inflight:
             self._token += 1
             heapq.heappush(self._inflight, (done, self._token))
-        self._record(start, done)
+        self._ledger.record(start, done)
         self.requests += 1
         self.bytes_moved += size_bytes
         return done
 
-    def issue_batch(self, now: float, sizes: "np.ndarray") -> "np.ndarray":
+    def issue_batch(self, now: float, sizes: "np.ndarray",
+                    addrs: Optional["np.ndarray"] = None) -> "np.ndarray":
         """Vectorized :meth:`issue`: n requests injected back-to-back at `now`.
 
-        Trace-identical to n sequential ``issue(now, size)`` calls — link
-        serialization is a prefix sum over the per-request injection spacing,
-        and jitter draws one length-n uniform vector, which consumes the RNG
-        bitstream exactly like n scalar draws.
+        Trace-identical to n sequential ``issue(now, size, addr)`` calls —
+        link serialization is a prefix sum over the per-request injection
+        spacing, and latency draws consume each RNG bitstream exactly like n
+        scalar draws. In heterogeneous mode the batch is processed as
+        consecutive same-region runs (each vectorized against its region's
+        link/RNG), which reproduces the scalar loop's cross-region link and
+        RNG interleaving bit-for-bit.
         """
         sizes = np.asarray(sizes, dtype=np.float64)
         n = sizes.size
         if n == 0:
             return np.empty(0, np.float64)
+        if self._regions is not None:
+            return self._region_issue_batch_routed(now, sizes, addrs)
         cfg = self.config
         if cfg.max_inflight:
             return self._issue_batch_backpressured(now, sizes)
@@ -158,7 +420,10 @@ class FarMemoryModel:
         injects[0] = inject0
         injects[1:] = serial[:-1]
         np.cumsum(injects, out=injects)
-        if cfg.jitter_frac:
+        if cfg.distribution is not None:
+            lat = cfg.base_latency_cycles * cfg.distribution.draw(self._rng, n)
+            done = injects + serial + lat
+        elif cfg.jitter_frac:
             lat = cfg.base_latency_cycles * (
                 1.0 + cfg.jitter_frac * self._rng.uniform(-1.0, 1.0, size=n))
             done = injects + serial + lat
@@ -166,8 +431,7 @@ class FarMemoryModel:
             # scalar broadcast == np.full(n, lat) elementwise, bit-for-bit
             done = injects + serial + cfg.base_latency_cycles
         self._link_free = float(injects[-1]) + float(serial[-1])
-        self._token += n
-        self._record_batch(now, done)
+        self._ledger.record_batch(now, done)
         self.requests += n
         self.bytes_moved += int(sizes.sum())
         return done
@@ -183,8 +447,8 @@ class FarMemoryModel:
         completion, and the pop at its injection time may retire *several*
         entries, opening room for another admission burst. We replay exactly
         that alternation, but each admission burst computes its
-        link-serialized injection times, jitter draws, and ledger records as
-        one vector chunk instead of one Python call per request.
+        link-serialized injection times, latency draws, and ledger records
+        as one vector chunk instead of one Python call per request.
         """
         cfg = self.config
         hp = self._inflight
@@ -207,7 +471,9 @@ class FarMemoryModel:
                 # same association as the scalar link_free chain (see above)
                 injects = np.cumsum(np.concatenate([[inject0], chunk[:-1]]))
                 lat = np.full(k, cfg.base_latency_cycles)
-                if cfg.jitter_frac:
+                if cfg.distribution is not None:
+                    lat = lat * cfg.distribution.draw(self._rng, k)
+                elif cfg.jitter_frac:
                     lat *= 1.0 + cfg.jitter_frac * self._rng.uniform(
                         -1.0, 1.0, size=k)
                 dk = injects + chunk + lat
@@ -226,7 +492,9 @@ class FarMemoryModel:
                 while hp and hp[0][0] <= inject_at:
                     heapq.heappop(hp)
                 lat = cfg.base_latency_cycles
-                if cfg.jitter_frac:
+                if cfg.distribution is not None:
+                    lat *= cfg.distribution.draw(self._rng)
+                elif cfg.jitter_frac:
                     lat *= 1.0 + cfg.jitter_frac * float(
                         self._rng.uniform(-1.0, 1.0))
                 d = inject_at + float(serial[i]) + lat
@@ -236,18 +504,187 @@ class FarMemoryModel:
                 dones[i] = d
                 starts[i] = inject_at
                 i += 1
-        self._record_batch(starts, dones)
+        self._ledger.record_batch(starts, dones)
+        self.requests += n
+        self.bytes_moved += int(sizes.sum())
+        return dones
+
+    # -- heterogeneous (regioned) request path ------------------------------
+    def _route(self, addr: Optional[int], size: int) -> _RegionState:
+        if addr is None:
+            raise ValueError("heterogeneous far memory routes by address; "
+                             "issue() needs addr")
+        i = int(np.searchsorted(self._starts, addr, side="right")) - 1
+        if i < 0 or addr >= self._ends[i]:
+            raise ValueError(f"address {addr} outside configured far-memory "
+                             f"regions")
+        if addr + size > self._ends[i]:
+            r = self._regions[i].region
+            raise ValueError(f"request [{addr}, {addr + size}) straddles "
+                             f"region {r.name!r} ending at {r.end}")
+        return self._regions[i]
+
+    def _region_inflight_at(self, st: _RegionState, now: float) -> int:
+        if st.region.max_inflight:
+            while st.inflight and st.inflight[0][0] <= now:
+                heapq.heappop(st.inflight)
+            return len(st.inflight)
+        return st.ledger.inflight(now)
+
+    def _region_lat(self, st: _RegionState, n: Optional[int] = None):
+        """Latency draw(s) for one region — scalar/batch bit-identical."""
+        r = st.region
+        lat = r.base_latency_cycles
+        if r.distribution is not None:
+            return lat * r.distribution.draw(st.rng, n)
+        if r.jitter_frac:
+            if n is None:
+                return lat * (1.0 + r.jitter_frac
+                              * float(st.rng.uniform(-1.0, 1.0)))
+            return lat * (1.0 + r.jitter_frac
+                          * st.rng.uniform(-1.0, 1.0, size=n))
+        return lat if n is None else np.full(n, lat)
+
+    def _region_issue(self, st: _RegionState, now: float, size: int) -> float:
+        r = st.region
+        inject_at = max(now, st.link.free)
+        start = now
+        if r.max_inflight and self._region_inflight_at(st, now) \
+                >= r.max_inflight:
+            oldest = st.inflight[0][0]
+            inject_at = max(inject_at, oldest)
+            self._region_inflight_at(st, inject_at)
+            start = inject_at
+        serial = size / r.bandwidth_bytes_per_cycle
+        st.link.free = inject_at + serial
+        done = inject_at + serial + self._region_lat(st)
+        if r.max_inflight:
+            st.token += 1
+            heapq.heappush(st.inflight, (done, st.token))
+        st.ledger.record(start, done)
+        st.requests += 1
+        st.bytes_moved += size
+        self.requests += 1
+        self.bytes_moved += size
+        return done
+
+    def _region_issue_batch_routed(self, now: float, sizes: np.ndarray,
+                                   addrs) -> np.ndarray:
+        if addrs is None:
+            raise ValueError("heterogeneous far memory routes by address; "
+                             "issue_batch() needs addrs")
+        addrs = np.asarray(addrs, np.int64)
+        n = sizes.size
+        idx = np.searchsorted(self._starts, addrs, side="right") - 1
+        safe = np.clip(idx, 0, len(self._regions) - 1)
+        bad = ((idx < 0) | (addrs >= self._ends[safe])
+               | (addrs + sizes.astype(np.int64) > self._ends[safe]))
+        if bad.any():
+            # re-raise through the scalar validator for the precise message
+            b = int(np.argmax(bad))
+            self._route(int(addrs[b]), int(sizes[b]))
+        dones = np.empty(n, np.float64)
+        i = 0
+        while i < n:                    # consecutive same-region runs
+            j = i + 1
+            while j < n and idx[j] == idx[i]:
+                j += 1
+            st = self._regions[int(idx[i])]
+            if st.region.max_inflight:
+                dones[i:j] = self._region_batch_backpressured(
+                    st, now, sizes[i:j])
+            else:
+                dones[i:j] = self._region_batch(st, now, sizes[i:j])
+            i = j
+        return dones
+
+    def _region_batch(self, st: _RegionState, now: float,
+                      sizes: np.ndarray) -> np.ndarray:
+        """Unlimited-mode vector issue against one region (flat-path math)."""
+        r = st.region
+        n = sizes.size
+        serial = sizes / r.bandwidth_bytes_per_cycle
+        injects = np.empty(n, np.float64)
+        injects[0] = max(now, st.link.free)
+        injects[1:] = serial[:-1]
+        np.cumsum(injects, out=injects)
+        done = injects + serial + self._region_lat(st, n)
+        st.link.free = float(injects[-1]) + float(serial[-1])
+        st.ledger.record_batch(now, done)
+        st.requests += n
+        st.bytes_moved += int(sizes.sum())
+        self.requests += n
+        self.bytes_moved += int(sizes.sum())
+        return done
+
+    def _region_batch_backpressured(self, st: _RegionState, now: float,
+                                    sizes: np.ndarray) -> np.ndarray:
+        """Backpressured vector issue against one region: the flat chunked
+        admission replayed against the region's heap/link/RNG."""
+        r = st.region
+        hp = st.inflight
+        n = sizes.size
+        serial = sizes / r.bandwidth_bytes_per_cycle
+        dones = np.empty(n, np.float64)
+        starts = np.empty(n, np.float64)
+        i = 0
+        while i < n:
+            while hp and hp[0][0] <= now:
+                heapq.heappop(hp)
+            room = r.max_inflight - len(hp)
+            if room > 0:
+                k = min(room, n - i)
+                chunk = serial[i:i + k]
+                inject0 = max(now, st.link.free)
+                injects = np.cumsum(np.concatenate([[inject0], chunk[:-1]]))
+                dk = injects + chunk + self._region_lat(st, k)
+                st.link.free = float(injects[-1]) + float(chunk[-1])
+                for d in dk:
+                    st.token += 1
+                    heapq.heappush(hp, (float(d), st.token))
+                dones[i:i + k] = dk
+                starts[i:i + k] = now
+                i += k
+            else:
+                inject_at = max(now, st.link.free, hp[0][0])
+                while hp and hp[0][0] <= inject_at:
+                    heapq.heappop(hp)
+                d = inject_at + float(serial[i]) + self._region_lat(st)
+                st.link.free = inject_at + float(serial[i])
+                st.token += 1
+                heapq.heappush(hp, (d, st.token))
+                dones[i] = d
+                starts[i] = inject_at
+                i += 1
+        st.ledger.record_batch(starts, dones)
+        st.requests += n
+        st.bytes_moved += int(sizes.sum())
         self.requests += n
         self.bytes_moved += int(sizes.sum())
         return dones
 
     def reset_stats(self) -> None:
-        """Zero the request/byte/MLP counters. Requests in flight at the
-        reset point stop contributing to MLP (the ledger is cleared)."""
+        """Zero the request/byte/MLP counters AND the queueing state: link
+        serialization points, backpressure heaps, and token counters all
+        clear, so a measured phase after a warmup starts from an idle device
+        instead of inheriting the warmup's link occupancy (requests in
+        flight at the reset stop contributing to MLP — the ledger is
+        cleared). The RNG streams deliberately continue (resetting them
+        would replay the warmup's latency draws)."""
         self.requests = 0
         self.bytes_moved = 0
-        self._n_done = 0
-        self._sum_issue = 0.0
+        self._ledger.clear()
+        self._link_free = 0.0
+        self._inflight.clear()
+        self._token = 0
+        if self._regions is not None:
+            for st in self._regions:
+                st.requests = 0
+                st.bytes_moved = 0
+                st.ledger.clear()
+                st.inflight.clear()
+                st.token = 0
+                st.link.free = 0.0
 
 
 class InstantMemory(FarMemoryModel):
@@ -257,12 +694,14 @@ class InstantMemory(FarMemoryModel):
         super().__init__(FarMemoryConfig(base_latency_cycles=0.0,
                                          bandwidth_bytes_per_cycle=float("inf")))
 
-    def issue(self, now: float, size_bytes: int) -> float:
+    def issue(self, now: float, size_bytes: int,
+              addr: Optional[int] = None) -> float:
         self.requests += 1
         self.bytes_moved += size_bytes
         return now
 
-    def issue_batch(self, now: float, sizes: "np.ndarray") -> "np.ndarray":
+    def issue_batch(self, now: float, sizes: "np.ndarray",
+                    addrs: Optional["np.ndarray"] = None) -> "np.ndarray":
         sizes = np.asarray(sizes)
         self.requests += sizes.size
         self.bytes_moved += int(sizes.sum()) if sizes.size else 0

@@ -22,8 +22,7 @@ The paper evaluates on Gem5 (Table 2: 3 GHz 6-wide OoO, 512 ROB, 192 LSQ,
   (:class:`~repro.core.engine.AsyncMemoryEngine`) or the vectorized batched
   path (:class:`~repro.core.engine.BatchedAsyncMemoryEngine` +
   :class:`~repro.core.coroutines.BatchScheduler`), which are proven
-  trace-equivalent by tests/test_batched_engine.py. The old positional-knob
-  `run_amu` survives as a deprecated shim.
+  trace-equivalent by tests/test_batched_engine.py.
 
 Calibration: the free constants (instruction counts per iteration, coroutine
 switch cost, store-buffer depth) were tuned once against the paper's headline
@@ -39,8 +38,6 @@ import numpy as np
 
 from repro.amu import REGISTRY, AmuConfig, AmuSession
 from repro.amu.config import FREQ_GHZ, LINE, far_config
-from repro.amu.deprecation import warn_deprecated
-from repro.configs.base import EngineConfig
 from repro.core.farmem import FarMemoryModel
 from repro.core.workloads import IterationProfile  # noqa: F401 (re-export +
 #                                                    registry population)
@@ -188,45 +185,6 @@ def simulate_window(profile: IterationProfile, iters: int, latency_us: float,
 
 
 # =========================================================================
-# AMU execution (real coroutine run against the timed engine)
-# =========================================================================
-def run_amu(spec, latency_us: float, dma_mode: bool = False,
-            seed: int = 0, llvm_mode: bool = False,
-            engine_config: Optional[EngineConfig] = None,
-            verify: bool = True, engine: str = "scalar",
-            vector: bool = False) -> Dict[str, float]:
-    """DEPRECATED positional-knob entry point; use
-    ``AmuSession(AmuConfig(...)).run(name)`` (see TESTING.md's migration
-    table). Kept as a thin shim: it builds the equivalent
-    :class:`~repro.amu.AmuConfig` and returns the session's stats as the
-    old dict — byte-identical to the pre-session behaviour for every
-    REGISTERED workload (pinned by tests/test_session_api.py across all
-    11). Custom unregistered WorkloadSpecs still run (built via their own
-    ``build`` and handed to the session as prebuilt ports), with one
-    deliberate divergence: the old code's ``llvm_mode`` special case
-    rebuilt the BUILT-IN STREAM even when handed a custom spec named
-    "STREAM" — the shim respects the custom builder instead."""
-    warn_deprecated("simulator.run_amu(...)",
-                    "repro.amu.AmuSession(AmuConfig(...)).run(name)")
-    name = spec if isinstance(spec, str) else spec.name
-    base = AmuConfig(engine=engine, dma_mode=dma_mode, llvm_mode=llvm_mode,
-                     latency_us=latency_us, engine_config=engine_config,
-                     seed=seed, verify=verify)
-    wd = REGISTRY[name] if name in REGISTRY else None
-    if isinstance(spec, str) or (wd is not None and wd.build is spec.build):
-        with AmuSession(base.derive(vector=vector)) as session:
-            return session.run(name).to_dict()
-    # a CUSTOM WorkloadSpec (the old extension point, possibly shadowing a
-    # registered name): replicate the old signature's build — vector only
-    # where the old VECTOR_WORKLOADS set (now the registry capability) said
-    # so — and hand the prebuilt port to the session
-    use_vector = vector and wd is not None and wd.vector
-    inst = spec.build(seed, vector=True) if use_vector else spec.build(seed)
-    with AmuSession(base.derive(vector=use_vector)) as session:
-        return session.run(inst).to_dict()
-
-
-# =========================================================================
 # Software (group) prefetching model — Table 4's PF columns
 # =========================================================================
 def simulate_group_prefetch(profile: IterationProfile, iters: int,
@@ -324,18 +282,3 @@ class PowerModel:
         dyn = (stats["insts"] * self.epi_nj + stats["requests"] * self.epr_nj
                + spm_touches * self.spm_nj) * 1e-9
         return self.static_w + dyn / max(t_s, 1e-12)
-
-
-# ------------------------------------------------------- deprecated shims
-def __getattr__(name: str):
-    """`sim.WORKLOADS` / `sim.VECTOR_WORKLOADS` used to re-export the
-    workloads module dicts; both now warn and materialize from the
-    registry (in-repo code iterates `repro.amu.REGISTRY`)."""
-    if name in ("WORKLOADS", "VECTOR_WORKLOADS"):
-        warn_deprecated(f"simulator.{name}", "repro.amu.REGISTRY")
-        import repro.core.workloads as _w
-        import warnings
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore")      # one warning, not two
-            return getattr(_w, name)
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -30,7 +30,6 @@ from typing import Callable, Dict, Iterable, List, Optional, Tuple
 import numpy as np
 
 from repro.amu.commands import ctx
-from repro.amu.deprecation import warn_deprecated
 from repro.amu.registry import REGISTRY
 from repro.amu.registry import workload as _workload
 from repro.configs.base import EngineConfig
@@ -48,8 +47,7 @@ LINE = 64  # baseline cache-line granularity
 # set (the BS probe-batch pattern generalized — arXiv 2112.13306's software
 # pipelining); BFS batches the per-chunk parent fetch/claim. Which port a
 # workload carries is declared on its @workload registration (the `vector`/
-# `pipelined` capabilities in repro.amu.REGISTRY); the old VECTOR_WORKLOADS
-# frozenset survives only as a deprecated shim (module __getattr__ below).
+# `pipelined` capabilities in repro.amu.REGISTRY).
 
 # Zero-copy port idiom: SpmRead yields a read-only view aliasing live SPM.
 # Ports do view arithmetic directly (`data.view(dt)`), hand computed arrays
@@ -111,14 +109,6 @@ class WorkloadInstance:
     verify: Callable[[np.ndarray], bool]
     disambiguation: bool = False
     vector: bool = False                  # which port was built (stats label)
-
-
-@dataclass(frozen=True)
-class WorkloadSpec:
-    name: str
-    profile: IterationProfile
-    build: Callable[[int], WorkloadInstance]   # seed -> instance
-    description: str = ""
 
 
 def _cfg(granularity: int, queue_length: int = 256,
@@ -1334,23 +1324,3 @@ def build_redis(seed: int = 0, n_keys: int = 4096, buckets: int = 4096,
 # STREAM) and transferred to structurally similar workloads; window-mode
 # profiles (chase-dominated) derive concurrency from ROB/LSQ occupancy.
 # =========================================================================
-
-# ------------------------------------------------------- deprecated shims
-# The pre-registry module surface: a `WORKLOADS` name->WorkloadSpec dict and
-# a `VECTOR_WORKLOADS` frozenset. Both are materialized on demand from the
-# registry (PEP 562 module __getattr__) and warn — in-repo code must use
-# repro.amu.REGISTRY; CI promotes the warning to an error.
-def _workloads_dict() -> Dict[str, WorkloadSpec]:
-    return {name: WorkloadSpec(wd.name, wd.profile, wd.build, wd.description)
-            for name, wd in REGISTRY.items()}
-
-
-def __getattr__(name: str):
-    if name == "WORKLOADS":
-        warn_deprecated("the workloads.WORKLOADS dict", "repro.amu.REGISTRY")
-        return _workloads_dict()
-    if name == "VECTOR_WORKLOADS":
-        warn_deprecated("the workloads.VECTOR_WORKLOADS set",
-                        "repro.amu.REGISTRY[name].vector")
-        return frozenset(REGISTRY.vector_names())
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

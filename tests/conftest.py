@@ -17,13 +17,3 @@ _flags = os.environ.get("XLA_FLAGS", "")
 if "xla_force_host_platform_device_count" not in _flags:
     os.environ["XLA_FLAGS"] = \
         (_flags + " --xla_force_host_platform_device_count=8").strip()
-
-
-def pytest_configure(config):
-    # Deprecated pre-AmuSession surface = ERROR inside the repo (the shim
-    # tests opt back in with pytest.warns). Registered here rather than in
-    # pytest.ini because the dotted category must be importable, which the
-    # sys.path insert above guarantees only from this point on.
-    config.addinivalue_line(
-        "filterwarnings",
-        "error::repro.amu.deprecation.AmuDeprecationWarning")

@@ -24,7 +24,8 @@ from repro.core.coroutines import (Acquire, Aload, AloadVec, AstoreVec,
 from repro.core.disambiguation import CuckooAddressSet
 from repro.core.engine import (AsyncMemoryEngine, BatchedAsyncMemoryEngine,
                                SpmOverflow, make_engine)
-from repro.core.farmem import FarMemoryConfig, FarMemoryModel, InstantMemory
+from repro.core.farmem import (BimodalTail, FarMemoryConfig, FarMemoryModel,
+                               InstantMemory, LognormalLatency, UniformJitter)
 
 from repro.amu import REGISTRY
 
@@ -290,6 +291,71 @@ def test_issue_batch_max_inflight_time_identical(n, max_inflight, jitter,
     t_end = float(dones_a.max()) + 1.0
     assert a.avg_mlp(t_end) == b.avg_mlp(t_end)
     assert a.inflight_at(now + 1.0) == b.inflight_at(now + 1.0)
+
+
+# =========================================================================
+# Latency-distribution determinism: every distribution draws through a
+# seeded RNG whose array fills consume the bitstream exactly like
+# sequential scalar draws, so scalar and batch paths stay bit-identical
+# =========================================================================
+_DISTS = {
+    "uniform": UniformJitter(0.2),
+    "lognormal": LognormalLatency(0.7),
+    "bimodal": BimodalTail(0.1, 16.0),
+}
+
+
+@pytest.mark.parametrize("dist", list(_DISTS.values()), ids=list(_DISTS))
+@given(n=st.integers(1, 80), max_inflight=st.sampled_from([0, 1, 6]),
+       seed=st.integers(0, 1 << 16))
+@settings(max_examples=20, deadline=None)
+def test_issue_batch_distribution_bitstream_identical(dist, n, max_inflight,
+                                                      seed):
+    """Scalar-vs-batch RNG bitstream identity for each latency
+    distribution, on both the unlimited and backpressured paths."""
+    rng = np.random.default_rng(seed)
+    sizes = rng.choice([8, 64, 512], size=n)
+    cfg = dict(base_latency_cycles=3000.0, bandwidth_bytes_per_cycle=21.3,
+               max_inflight=max_inflight, distribution=dist, seed=seed)
+    a = FarMemoryModel(FarMemoryConfig(**cfg))
+    b = FarMemoryModel(FarMemoryConfig(**cfg))
+    now = float(rng.uniform(0, 5000))
+    dones_a = np.array([a.issue(now, int(s)) for s in sizes])
+    dones_b = b.issue_batch(now, sizes)
+    assert np.array_equal(dones_a, dones_b)
+    assert a._link_free == b._link_free
+    assert a._token == b._token          # aligned on BOTH paths (S1 fix)
+    assert sorted(a._inflight) == sorted(b._inflight)
+
+
+def test_uniform_jitter_matches_legacy_jitter_frac():
+    """UniformJitter(f) is the typed spelling of jitter_frac=f: identical
+    draws for the same seed, scalar and batch."""
+    legacy = FarMemoryModel(FarMemoryConfig(jitter_frac=0.3, seed=9))
+    typed = FarMemoryModel(FarMemoryConfig(distribution=UniformJitter(0.3),
+                                           seed=9))
+    sizes = np.full(32, 64)
+    assert np.array_equal(
+        np.array([legacy.issue(0.0, 64) for _ in range(32)]),
+        np.array([typed.issue(0.0, 64) for _ in range(32)]))
+    legacy2 = FarMemoryModel(FarMemoryConfig(jitter_frac=0.3, seed=9))
+    typed2 = FarMemoryModel(FarMemoryConfig(distribution=UniformJitter(0.3),
+                                            seed=9))
+    assert np.array_equal(legacy2.issue_batch(0.0, sizes),
+                          typed2.issue_batch(0.0, sizes))
+
+
+def test_distribution_shapes():
+    """Qualitative shape checks: lognormal is mean-preserving with a right
+    tail; bimodal's p50 is the base latency and its p99 the tail mult."""
+    rng = np.random.default_rng(0)
+    ln = LognormalLatency(0.7).draw(rng, 200_000)
+    assert np.mean(ln) == pytest.approx(1.0, rel=0.02)
+    assert np.quantile(ln, 0.99) > 3 * np.quantile(ln, 0.5)
+    bi = BimodalTail(0.05, 16.0).draw(rng, 200_000)
+    assert np.quantile(bi, 0.5) == 1.0
+    assert np.quantile(bi, 0.99) == 16.0
+    assert np.mean(bi) == pytest.approx(1.0 + 0.05 * 15.0, rel=0.05)
 
 
 def test_issue_batch_max_inflight_across_calls():

@@ -1,0 +1,410 @@
+"""Heterogeneous far memory: regions, latency distributions, shared links.
+
+Pins the contracts the tiered model must keep:
+
+* a single region covering the address space is bit-identical to the flat
+  model (same RNG stream, same link math, same ledger);
+* ``issue_batch`` is bit-identical to the scalar ``issue()`` loop across
+  region boundaries, backpressure modes, and every latency distribution;
+* token streams stay aligned across the scalar and batch paths (the
+  unlimited-path ``_token`` drift bug), so regions can mix backpressured
+  and unlimited tiers in one model;
+* ``reset_stats`` clears the queueing state (link serialization points,
+  backpressure heaps) so a measured phase after a warmup starts idle;
+* shared links serialize across regions, private links don't;
+* the schedulers' exact-wake planning composes with regioned/bursty
+  done-times (done-times are computed at issue), pinned against the
+  single-step oracle;
+* a mixed-tier GUPS run (local + 1 µs + 5 µs, bimodal tail) completes on
+  both engines, trace-identical, with per-region request/MLP stats.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.amu import (REGISTRY, AmuConfig, AmuSession, BimodalTail,
+                       FarMemoryConfig, FarMemoryRegion, LognormalLatency,
+                       UniformJitter, far_region)
+from repro.core.coroutines import DeadlockError, Scheduler
+from repro.core.disambiguation import CuckooAddressSet
+from repro.core.engine import make_engine
+from repro.core.farmem import FarMemoryModel
+
+
+def _region(name, start, size, lat=3000.0, bw=21.3, **kw):
+    return FarMemoryRegion(name, start, size, base_latency_cycles=lat,
+                           bandwidth_bytes_per_cycle=bw, **kw)
+
+
+def _flat_kw(**kw):
+    return dict(base_latency_cycles=3000.0, bandwidth_bytes_per_cycle=21.3,
+                **kw)
+
+
+# =========================================================================
+# Validation
+# =========================================================================
+def test_region_validation_rejects_bad_layouts():
+    with pytest.raises(ValueError):       # overlap
+        FarMemoryConfig(regions=(_region("a", 0, 100), _region("b", 50, 100)))
+    with pytest.raises(ValueError):       # out of order
+        FarMemoryConfig(regions=(_region("a", 100, 50), _region("b", 0, 50)))
+    with pytest.raises(ValueError):       # duplicate name
+        FarMemoryConfig(regions=(_region("a", 0, 50), _region("a", 50, 50)))
+    with pytest.raises(ValueError):       # empty region
+        FarMemoryConfig(regions=(_region("a", 0, 0),))
+    with pytest.raises(ValueError):       # negative start
+        FarMemoryConfig(regions=(_region("a", -8, 64),))
+    with pytest.raises(ValueError):       # both randomness spellings
+        FarMemoryConfig(regions=(_region(
+            "a", 0, 64, jitter_frac=0.1, distribution=UniformJitter(0.1)),))
+    with pytest.raises(ValueError):       # flat config, both spellings
+        FarMemoryConfig(jitter_frac=0.1, distribution=UniformJitter(0.1))
+    # a gap between regions is fine (unmapped addresses just can't be used)
+    FarMemoryConfig(regions=(_region("a", 0, 64), _region("b", 128, 64)))
+
+
+def test_routing_errors():
+    cfg = FarMemoryConfig(regions=(_region("a", 0, 64), _region("b", 128, 64)))
+    far = FarMemoryModel(cfg)
+    with pytest.raises(ValueError):       # no address at all
+        far.issue(0.0, 8)
+    with pytest.raises(ValueError):       # in the gap
+        far.issue(0.0, 8, 100)
+    with pytest.raises(ValueError):       # past the end
+        far.issue(0.0, 8, 192)
+    with pytest.raises(ValueError):       # straddles a's end
+        far.issue(0.0, 16, 56)
+    with pytest.raises(ValueError):       # batch: one bad address poisons
+        far.issue_batch(0.0, np.full(3, 8), np.array([0, 100, 128]))
+    with pytest.raises(ValueError):
+        far.issue_batch(0.0, np.full(2, 8), None)
+    done = far.issue(0.0, 8, 128)         # valid addresses still route
+    assert done > 0
+
+
+def test_amu_config_accepts_region_list():
+    regions = [far_region("local", 0, 4096, 0.08),
+               far_region("cxl", 4096, 4096, 1.0)]
+    cfg = AmuConfig(far=regions)
+    assert isinstance(cfg.far, FarMemoryConfig)
+    assert [r.name for r in cfg.far.regions] == ["local", "cxl"]
+    assert cfg.resolve_far_config() is cfg.far
+    with pytest.raises(TypeError):
+        AmuConfig(far=[])
+    with pytest.raises(TypeError):
+        AmuConfig(far=["nope"])
+    with pytest.raises(ValueError):       # far= still shadows latency knobs
+        AmuConfig(far=regions, latency_us=5.0)
+    # derive() re-normalizes a fresh region list
+    hot = cfg.derive(far=[far_region("all", 0, 1 << 20, 5.0)])
+    assert [r.name for r in hot.far.regions] == ["all"]
+
+
+# =========================================================================
+# Single region == flat model, bit for bit
+# =========================================================================
+@pytest.mark.parametrize("dist", [
+    None, UniformJitter(0.2), LognormalLatency(0.7), BimodalTail(0.1, 16.0)],
+    ids=["none", "uniform", "lognormal", "bimodal"])
+@pytest.mark.parametrize("max_inflight", [0, 6], ids=["unlimited", "mshr6"])
+def test_single_region_bit_identical_to_flat(dist, max_inflight):
+    """One region covering the whole space: same seed, same draws, same
+    link math — every completion time equals the flat model's."""
+    flat = FarMemoryModel(FarMemoryConfig(
+        **_flat_kw(max_inflight=max_inflight, distribution=dist, seed=3)))
+    tier = FarMemoryModel(FarMemoryConfig(seed=3, regions=(
+        _region("all", 0, 1 << 20, max_inflight=max_inflight,
+                distribution=dist),)))
+    rng = np.random.default_rng(11)
+    now = 0.0
+    for _ in range(8):
+        n = int(rng.integers(1, 12))
+        sizes = rng.choice([8, 64, 512], size=n)
+        addrs = rng.integers(0, 1 << 10, size=n) * 8
+        if rng.random() < 0.5:
+            da = np.array([flat.issue(now, int(s), int(a))
+                           for s, a in zip(sizes, addrs)])
+            db = np.array([tier.issue(now, int(s), int(a))
+                           for s, a in zip(sizes, addrs)])
+        else:
+            da = flat.issue_batch(now, sizes, addrs)
+            db = tier.issue_batch(now, sizes, addrs)
+        assert np.array_equal(da, db)
+        now += float(rng.uniform(0, 4000))
+    assert flat.requests == tier.requests
+    assert flat.bytes_moved == tier.bytes_moved
+    t_end = now + 1e6
+    assert flat.avg_mlp(t_end) == tier.avg_mlp(t_end)
+    assert flat.inflight_at(now) == tier.inflight_at(now)
+    stats = tier.region_stats(t_end)
+    assert stats["all"]["requests"] == flat.requests
+    assert flat.region_stats(t_end) is None
+
+
+# =========================================================================
+# Scalar vs batch across region boundaries
+# =========================================================================
+@pytest.mark.parametrize("shared_link", [False, True],
+                         ids=["private-links", "shared-link"])
+def test_issue_batch_identical_to_scalar_loop_across_regions(shared_link):
+    """A batch spanning tiers (different latencies, distributions, and a
+    backpressured region) must be bit-identical to the scalar issue loop —
+    including the cross-region link interleaving when tiers share one
+    channel."""
+    link = {"link": "chan"} if shared_link else {}
+    regions = (
+        _region("local", 0, 4096, lat=240.0, bw=64.0),
+        _region("cxl", 4096, 4096, lat=3000.0,
+                distribution=LognormalLatency(0.5), **link),
+        _region("xswitch", 8192, 8192, lat=15000.0, max_inflight=4,
+                distribution=BimodalTail(0.2, 8.0), **link),
+    )
+    a = FarMemoryModel(FarMemoryConfig(seed=5, regions=regions))
+    b = FarMemoryModel(FarMemoryConfig(seed=5, regions=regions))
+    rng = np.random.default_rng(17)
+    now = 0.0
+    for _ in range(10):
+        n = int(rng.integers(1, 24))
+        sizes = rng.choice([8, 64], size=n)
+        addrs = rng.integers(0, 16384 // 8, size=n) * 8
+        # straddle-proof: clamp 64B requests to their region
+        addrs = np.where((sizes == 64) & (addrs % 4096 > 4032),
+                         addrs - 64, addrs)
+        da = np.array([a.issue(now, int(s), int(m))
+                       for s, m in zip(sizes, addrs)])
+        db = b.issue_batch(now, sizes, addrs)
+        assert np.array_equal(da, db)
+        now += float(rng.uniform(0, 8000))
+    t_end = now + 1e6
+    sa_stats, sb_stats = a.region_stats(t_end), b.region_stats(t_end)
+    for name in sa_stats:
+        # done times are bit-identical; the ledger's issue-time sum is a
+        # float accumulation whose association differs between one
+        # record_batch and n record() calls — MLP agrees to accumulation
+        # order, not bit-for-bit
+        assert sa_stats[name]["requests"] == sb_stats[name]["requests"]
+        assert sa_stats[name]["bytes"] == sb_stats[name]["bytes"]
+        assert sa_stats[name]["mlp"] == pytest.approx(
+            sb_stats[name]["mlp"], rel=1e-9)
+    for sa, sb in zip(a._regions, b._regions):
+        assert sa.link.free == sb.link.free
+        assert sa.token == sb.token            # S1: aligned token streams
+        assert sorted(sa.inflight) == sorted(sb.inflight)
+
+
+def test_token_streams_aligned_across_paths_flat():
+    """Unlimited-path issue_batch must not mint tokens the scalar path
+    doesn't (the `_token += n` drift): token counters stay identical, so a
+    model can mix backpressured and unlimited issue histories."""
+    a = FarMemoryModel(FarMemoryConfig(**_flat_kw()))
+    b = FarMemoryModel(FarMemoryConfig(**_flat_kw()))
+    for _ in range(3):
+        sizes = np.full(7, 8)
+        for s in sizes:
+            a.issue(0.0, int(s))
+        b.issue_batch(0.0, sizes)
+    assert a._token == b._token == 0
+    # backpressured mode still mints one token per request on both paths
+    c = FarMemoryModel(FarMemoryConfig(**_flat_kw(max_inflight=4)))
+    d = FarMemoryModel(FarMemoryConfig(**_flat_kw(max_inflight=4)))
+    for s in np.full(9, 8):
+        c.issue(0.0, int(s))
+    d.issue_batch(0.0, np.full(9, 8))
+    assert c._token == d._token == 9
+
+
+# =========================================================================
+# Shared channels
+# =========================================================================
+def test_shared_link_serializes_across_regions():
+    """Two tiers on one channel contend for injection bandwidth; on
+    private links the same traffic injects independently."""
+    def build(shared):
+        link = {"link": "chan"} if shared else {}
+        return FarMemoryModel(FarMemoryConfig(regions=(
+            _region("a", 0, 4096, lat=3000.0, bw=8.0, **link),
+            _region("b", 4096, 4096, lat=3000.0, bw=8.0, **link))))
+
+    shared, private = build(True), build(False)
+    for far in (shared, private):
+        far.issue(0.0, 4096, 0)       # 512 cycles of serialization on a
+        far.issue(0.0, 8, 4096)       # lands on b
+    # shared channel: b's request injects after a's 512-cycle serialization
+    assert shared._regions[1].link is shared._regions[0].link
+    done_shared = shared._regions[1].ledger.dones[0]
+    done_private = private._regions[1].ledger.dones[0]
+    assert done_shared == pytest.approx(512 + 1 + 3000.0)
+    assert done_private == pytest.approx(1 + 3000.0)
+    # per-region MLP ledgers stay separate even on a shared channel
+    stats = shared.region_stats(4000.0)
+    assert stats["a"]["requests"] == 1 and stats["b"]["requests"] == 1
+    assert stats["a"]["link"] == stats["b"]["link"] == "chan"
+
+
+def test_region_stats_aggregate_to_globals():
+    regions = (_region("a", 0, 4096, lat=240.0),
+               _region("b", 4096, 4096, lat=15000.0))
+    far = FarMemoryModel(FarMemoryConfig(regions=regions))
+    rng = np.random.default_rng(0)
+    addrs = rng.integers(0, 1024, size=64) * 8
+    far.issue_batch(0.0, np.full(64, 8), addrs)
+    t_end = 40000.0
+    stats = far.region_stats(t_end)
+    assert stats["a"]["requests"] + stats["b"]["requests"] == 64
+    assert stats["a"]["bytes"] + stats["b"]["bytes"] == far.bytes_moved == 512
+    total_mlp = stats["a"]["mlp"] + stats["b"]["mlp"]
+    assert total_mlp == pytest.approx(far.avg_mlp(t_end))
+
+
+# =========================================================================
+# reset_stats clears queueing state (prepare/execute split regression)
+# =========================================================================
+def test_reset_stats_clears_link_and_backpressure():
+    """After a warmup phase, reset_stats must leave the device idle: the
+    measured phase's completion times equal a fresh model's."""
+    for regions in ((), (_region("all", 0, 1 << 16, max_inflight=4),)):
+        kw = dict(regions=regions) if regions else _flat_kw(max_inflight=4)
+        warmed = FarMemoryModel(FarMemoryConfig(**kw))
+        fresh = FarMemoryModel(FarMemoryConfig(**kw))
+        # warmup: saturate the queue and the link
+        warmed.issue_batch(0.0, np.full(32, 512), np.zeros(32, np.int64))
+        warmed.reset_stats()
+        assert warmed.requests == 0 and warmed.bytes_moved == 0
+        assert warmed.inflight_at(1e12) == 0
+        sizes = np.full(12, 64)
+        addrs = np.arange(12, dtype=np.int64) * 64
+        da = warmed.issue_batch(0.0, sizes, addrs)
+        db = fresh.issue_batch(0.0, sizes, addrs)
+        assert np.array_equal(da, db)
+        assert warmed.avg_mlp(1e5) == fresh.avg_mlp(1e5)
+
+
+def test_session_execute_after_prepare_phase_warmup():
+    """The AmuSession prepare()/execute() timing split: warmup traffic
+    driven against the prepared far model (page-in DMA, cache priming)
+    must not leak link occupancy into the measured execute() phase once
+    reset_stats() is called."""
+    kw = dict(table_words=1024, updates=256, coroutines=16)
+    with AmuSession(AmuConfig(engine="batched", latency_us=1.0)) as s:
+        baseline = s.run("GUPS", **kw)
+
+    with AmuSession(AmuConfig(engine="batched", latency_us=1.0)) as s:
+        s.prepare("GUPS", **kw)
+        # prepare-phase warmup: page the table in over the far link
+        s.far.issue_batch(0.0, np.full(64, 4096),
+                          np.arange(64, dtype=np.int64) * 4096)
+        assert s.far._link_free > 0
+        s.far.reset_stats()
+        measured = s.execute()
+    assert measured == baseline
+
+    # sanity: without the reset, the warmup's link occupancy WOULD have
+    # shifted the measured phase (this is what the fix guards against)
+    with AmuSession(AmuConfig(engine="batched", latency_us=1.0)) as s:
+        s.prepare("GUPS", **kw)
+        s.far.issue_batch(0.0, np.full(64, 4096),
+                          np.arange(64, dtype=np.int64) * 4096)
+        leaked = s.execute()
+    assert leaked.cycles > baseline.cycles
+
+
+# =========================================================================
+# Exact-wake planning composes with regioned/bursty done-times
+# =========================================================================
+class _SingleStepScheduler(Scheduler):
+    """The pre-planning idle path (regression oracle): advance to the next
+    completion, one full runtime-loop turn per completion."""
+
+    def _idle_until_completion(self):
+        if not (self._waiting_count() or self._alloc_parked):
+            raise DeadlockError("live tasks but none ready/waiting")
+        next_done = self.engine.next_completion_time
+        if next_done is None:
+            if self.engine.finished_pending:
+                return
+            raise DeadlockError("waiting but nothing outstanding")
+        self.t = max(self.t, next_done)
+        self.engine.advance(self.t)
+
+
+def _tier_regions(table_bytes, tail=BimodalTail(0.1, 8.0)):
+    third = (table_bytes // 3) // 8 * 8
+    return [far_region("local", 0, third, 0.08),
+            far_region("cxl", third, third, 1.0),
+            far_region("xswitch", 2 * third, table_bytes - 2 * third, 5.0,
+                       distribution=tail, link="switch")]
+
+
+def _scalar_run(sched_cls, far_cfg, vector=False):
+    kw = dict(table_words=2048, updates=512, coroutines=64, distinct=True)
+    if vector:
+        kw["vector"] = True
+    inst = REGISTRY["GUPS"].build(0, **kw)
+    far = FarMemoryModel(far_cfg)
+    eng = make_engine("scalar", inst.engine_config, far, inst.mem,
+                      record_trace=True)
+    sched = sched_cls(eng)
+    sched.run(inst.tasks)
+    eng.drain()
+    assert inst.verify(eng.mem)
+    return sched.summary(), eng
+
+
+@pytest.mark.parametrize("vector", [False, True], ids=["scalar", "vector"])
+def test_wake_planning_bit_identical_under_regions(vector):
+    """Done-times are computed at issue, so exact-wake planning must stay
+    bit-identical to single-stepping even when completions come from mixed
+    tiers with bursty bimodal tails."""
+    cfg = AmuConfig(far=_tier_regions(2048 * 8)).far
+    new_sum, new_eng = _scalar_run(Scheduler, cfg, vector=vector)
+    old_sum, old_eng = _scalar_run(_SingleStepScheduler,
+                                   dataclasses.replace(cfg), vector=vector)
+    assert new_sum == old_sum
+    assert new_eng.trace == old_eng.trace
+    assert new_eng.stats == old_eng.stats
+    assert np.array_equal(new_eng.mem, old_eng.mem)
+
+
+# =========================================================================
+# Acceptance: mixed-tier GUPS on both engines, per-region stats
+# =========================================================================
+@pytest.mark.parametrize("vector", [False, True], ids=["scalar", "vector"])
+def test_mixed_tier_gups_both_engines(vector):
+    kw = dict(table_words=2048, updates=512, coroutines=64, distinct=True)
+    regions = _tier_regions(2048 * 8)
+    runs = {}
+    for engine in ("scalar", "batched"):
+        cfg = AmuConfig(engine=engine, scheduler="scalar", vector=vector,
+                        far=regions)
+        with AmuSession(cfg) as s:
+            stats = s.run("GUPS", record_trace=True, **kw)
+            runs[engine] = (stats, s.engine.trace, s.engine.mem.copy())
+        assert stats.verified
+        assert stats.regions is not None
+        per_tier = stats.regions
+        assert set(per_tier) == {"local", "cxl", "xswitch"}
+        # every tier saw traffic, and the split covers all requests
+        assert all(v["requests"] > 0 for v in per_tier.values())
+        assert sum(v["requests"] for v in per_tier.values()) == stats.requests
+        # slower tiers hold more in-flight occupancy per request
+        assert per_tier["xswitch"]["mlp"] > per_tier["local"]["mlp"]
+        assert stats.mlp == pytest.approx(
+            sum(v["mlp"] for v in per_tier.values()))
+    (st_a, tr_a, mem_a), (st_b, tr_b, mem_b) = runs["scalar"], runs["batched"]
+    assert tr_a == tr_b                 # engines trace-identical under one
+    assert np.array_equal(mem_a, mem_b)  # scheduler, now with regions too
+    assert st_a.cycles == st_b.cycles
+
+
+def test_mixed_tier_gups_batch_scheduler_end_to_end():
+    """The production stack (batched engine + batch-stepped scheduler)
+    drives a mixed-tier run to a verified result with region stats."""
+    with AmuSession(AmuConfig(engine="batched",
+                              far=_tier_regions(2048 * 8))) as s:
+        stats = s.run("GUPS", table_words=2048, updates=512, coroutines=64,
+                      distinct=True)
+    assert stats.verified
+    assert sum(v["requests"] for v in stats.regions.values()) \
+        == stats.requests

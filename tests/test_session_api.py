@@ -14,19 +14,15 @@ Covers the four redesign pieces plus their compatibility story:
   hand-off, mid-vector continuation, no lost waiters (both schedulers).
 * the scalar `Scheduler`'s exact-wake idle drain — pinned bit-identical
   (summary + engine trace + engine stats) to the old single-step idle path.
-* the deprecation shims — `run_amu`, `workloads.WORKLOADS`,
-  `VECTOR_WORKLOADS`: warn, and stay byte-identical to the session path
-  across all 11 workloads.
 """
 import dataclasses
 
 import numpy as np
 import pytest
 
-from repro.amu import (REGISTRY, AmuConfig, AmuDeprecationWarning, AmuSession,
-                       Port, WorkloadRegistry, ctx, far_config, workload)
+from repro.amu import (REGISTRY, AmuConfig, AmuSession, Port,
+                       WorkloadRegistry, ctx, far_config, workload)
 from repro.configs.base import EngineConfig
-from repro.core import simulator as sim
 from repro.core.coroutines import (Acquire, AcquireVec, Aload, AloadVec,
                                    AwaitRid, BatchScheduler, Cost,
                                    DeadlockError, Release, ReleaseVec,
@@ -449,77 +445,6 @@ def test_wake_planned_idle_bit_identical_hard_modes(kw):
     assert new_sum == old_sum
     assert new_eng.trace == old_eng.trace
     assert new_eng.stats == old_eng.stats
-
-
-# =========================================================================
-# Deprecation shims: warn, and stay byte-identical to the session path
-# =========================================================================
-@pytest.mark.parametrize("wl", sorted(REGISTRY.names()))
-def test_run_amu_shim_byte_identical(wl):
-    with AmuSession(AmuConfig(engine="batched", latency_us=0.5)) as s:
-        new = s.run(wl).to_dict()
-    with pytest.warns(AmuDeprecationWarning):
-        old = sim.run_amu(REGISTRY[wl], 0.5,     # old spec-object signature
-                          engine="batched")
-    assert old == new, wl                        # bit-equal cycles/insts/...
-
-
-def test_run_amu_shim_byte_identical_default_engine():
-    """The shim's default engine stays the scalar oracle (the old
-    signature's default), not AmuConfig's batched default."""
-    with AmuSession(AmuConfig(engine="scalar", latency_us=0.5)) as s:
-        new = s.run("GUPS").to_dict()
-    with pytest.warns(AmuDeprecationWarning):
-        old = sim.run_amu(REGISTRY["GUPS"], 0.5)
-    assert old == new
-
-
-@pytest.mark.parametrize("kw", [dict(vector=True), dict(dma_mode=True),
-                                dict(llvm_mode=True)],
-                         ids=["vector", "dma", "llvm"])
-def test_run_amu_shim_byte_identical_modes(kw):
-    cfg = AmuConfig(engine="batched", vector=kw.get("vector", False),
-                    dma_mode=kw.get("dma_mode", False),
-                    llvm_mode=kw.get("llvm_mode", False), latency_us=1.0)
-    with AmuSession(cfg) as s:
-        new = s.run("STREAM").to_dict()
-    with pytest.warns(AmuDeprecationWarning):
-        old = sim.run_amu("STREAM", 1.0, engine="batched", **kw)
-    assert old == new
-
-
-def test_workloads_dict_shim_matches_registry():
-    import repro.core.workloads as w
-    with pytest.warns(AmuDeprecationWarning):
-        wl = w.WORKLOADS
-    assert sorted(wl) == sorted(REGISTRY.names())
-    for name, spec in wl.items():
-        assert spec.build is REGISTRY[name].build
-        assert spec.profile == REGISTRY[name].profile
-    with pytest.warns(AmuDeprecationWarning):
-        vw = w.VECTOR_WORKLOADS
-    assert vw == frozenset(REGISTRY.vector_names())
-    with pytest.warns(AmuDeprecationWarning):
-        assert sorted(sim.WORKLOADS) == sorted(REGISTRY.names())
-    with pytest.raises(AttributeError):
-        w.NOPE
-
-
-def test_run_amu_shim_accepts_custom_workload_spec():
-    """The old extension point — a hand-made WorkloadSpec never registered
-    anywhere — must still run through the shim (built via spec.build and
-    handed to the session as a prebuilt port)."""
-    from repro.core.workloads import WorkloadSpec
-
-    def build_tiny(seed: int = 0):
-        return build_gups(seed, table_words=512, updates=128, coroutines=8)
-
-    spec = WorkloadSpec("CUSTOM-GUPS", None, build_tiny, "unregistered")
-    with pytest.warns(AmuDeprecationWarning):
-        out = sim.run_amu(spec, 0.5, engine="batched", vector=True)
-    assert out["verified"]
-    assert out["vector"] is False       # old rule: not in VECTOR_WORKLOADS
-    assert out["units"] == 128
 
 
 def test_builder_knob_signature_byte_identical():
