@@ -13,7 +13,9 @@ from repro.core import simulator as sim
 from repro.core.simulator import PowerModel
 
 LATS = [0.1, 0.2, 0.5, 1.0, 2.0, 5.0]
-WORKLOADS = REGISTRY.names()
+# throughput-normalized sweeps skip request-level workloads (their cycle
+# counts include open-loop arrival idle); serving has its own sweep below
+WORKLOADS = [n for n, d in REGISTRY.items() if not d.request_level]
 Row = Tuple[str, float, str]
 
 # The AmuConfig behind every AMU data point of the sweep. The default drives
@@ -213,6 +215,70 @@ def tail_latency() -> List[Row]:
                      f"mlp={rstats['mlp']:.1f},"
                      f"lat_cycles={rstats['latency_cycles']:.0f},"
                      f"link={rstats['link']}"))
+    # the vector-machine points (AloadVec GUPS port) on the same axes: a
+    # tail subset plus the mixed-tier scenario, so the archived sweep
+    # carries both machine configurations (ROADMAP carried minor)
+    vec = AMU.derive(vector=True)
+    det_us = None
+    for name, dist in dists:
+        if name not in ("det", "lognormal_s1.0", "bimodal_p5_x32"):
+            continue
+        cfg = vec.derive(far=far_config(1.0, distribution=dist))
+        with AmuSession(cfg.derive(verify=False)) as s:
+            out = s.run("GUPS")
+        det_us = det_us if det_us is not None else out.us
+        rows.append((f"tail/GUPS/{name}/vector", out.us,
+                     f"mlp={out.mlp:.1f},"
+                     f"slowdown_vs_det={out.us / det_us:.2f}x"))
+    with AmuSession(vec.derive(far=regions)) as s:
+        out = s.run("GUPS", table_words=table_words, distinct=True)
+    assert out.verified
+    rows.append(("tail/GUPS/mixed_tier_vector", out.us,
+                 f"mlp={out.mlp:.1f},requests={out.requests}"))
+    return rows
+
+
+def serve_latency(smoke: bool = False) -> List[Row]:
+    """Paged-KV serving sweep: per-request completion-latency percentiles
+    under open-loop arrivals (Poisson + bursty diurnal), mixed local / CXL /
+    cross-switch page tiers, for three data planes — the synchronous
+    page-fault baseline (one blocking fetch per page, MLP ~= 1), the
+    scalar-coroutine AMI plane, and the vector-AMI plane (one AloadVec
+    gather per request). ``ami_vs_sync`` on the AMI rows is the
+    mean-latency speedup over the page-fault baseline — the number
+    comparable to "A Tale of Two Paths". Smoke mode shrinks the scenario
+    and runs Poisson only (the CI gate floors ami_vs_sync)."""
+    from repro.core.serving import serve_regions
+
+    rows: List[Row] = []
+    kw = dict(requests=64, coroutines=16) if smoke else {}
+    regions = serve_regions(**({"requests": 64} if smoke else {}))
+    base = AMU.derive(far=regions)
+    for arrival in (("poisson",) if smoke else ("poisson", "bursty")):
+        with AmuSession(base) as s:
+            sync = s.run("paged_kv_serve", data_plane="sync",
+                         arrival=arrival, **kw)
+        assert sync.verified
+        rows.append((f"serve/{arrival}/sync", sync.us,
+                     f"p50={sync.req_p50_us:.1f},p99={sync.req_p99_us:.1f},"
+                     f"p999={sync.req_p999_us:.1f},mlp={sync.mlp:.2f}"))
+        # both machine points always, independent of the global --vector
+        for label, cfg in (("ami", base.derive(vector=False)),
+                           ("ami_vector", base.derive(vector=True))):
+            with AmuSession(cfg) as s:
+                out = s.run("paged_kv_serve", arrival=arrival, **kw)
+            assert out.verified
+            rows.append((
+                f"serve/{arrival}/{label}", out.us,
+                f"p50={out.req_p50_us:.1f},p99={out.req_p99_us:.1f},"
+                f"p999={out.req_p999_us:.1f},mlp={out.mlp:.2f},"
+                f"ami_vs_sync={sync.req_mean_us / out.req_mean_us:.2f}x"))
+            if label == "ami":
+                for rname, rstats in out.regions.items():
+                    rows.append((f"serve/{arrival}/ami/{rname}", out.us,
+                                 f"requests={rstats['requests']},"
+                                 f"mlp={rstats['mlp']:.1f},"
+                                 f"link={rstats['link']}"))
     return rows
 
 
@@ -257,5 +323,6 @@ ALL_FIGURES = {
     "table4": table4_prefetch,
     "table5": table5_disambiguation,
     "tail": tail_latency,
+    "serve": serve_latency,
     "headline": headline_claims,
 }

@@ -36,6 +36,11 @@ SMOKE_MIN_VECTOR_SPEEDUP = {        # vector port vs scalar-yield port
     "LL": 1.5,
 }
 SMOKE_MIN_VECTOR_DEFAULT = 1.5
+# serving: mean per-request latency, AMI plane vs the synchronous
+# page-fault baseline (measured ~12x scalar / ~19x vector at the smoke
+# sizes; MLP across requests is the whole mechanism, so anything near 1x
+# means the arrival/latency plumbing broke)
+SMOKE_MIN_SERVE_SPEEDUP = 3.0
 
 
 def _parse_speedup(derived: str, key: str) -> float:
@@ -91,12 +96,15 @@ def main() -> None:
     suites = dict(pf.ALL_FIGURES)
     suites["kernels"] = kernel_micro
     suites["engine"] = lambda: engine_driver(smoke=smoke)
+    suites["serve"] = lambda: pf.serve_latency(smoke=smoke)
     suites["roofline"] = roofline_rows
 
-    # smoke mode: the (shrunken) engine-driver throughput suite always runs,
-    # so the regression gate below can never be vacuously green
+    # smoke mode: the (shrunken) engine-driver throughput and serving
+    # suites always run, so the regression gates below can never be
+    # vacuously green
     if smoke:
-        wanted = ["engine"] + [a for a in args if a != "engine"]
+        wanted = ["engine", "serve"] + [a for a in args
+                                        if a not in ("engine", "serve")]
     else:
         wanted = args or list(suites)
     collected = []
@@ -136,6 +144,10 @@ def main() -> None:
             if sp and sp < floor:
                 failures.append(f"{row['name']}: vector/scalar-yield "
                                 f"{sp:.2f}x < {floor}x")
+            sp = _parse_speedup(row["derived"], "ami_vs_sync")
+            if sp and sp < SMOKE_MIN_SERVE_SPEEDUP:
+                failures.append(f"{row['name']}: serving AMI/page-fault "
+                                f"{sp:.2f}x < {SMOKE_MIN_SERVE_SPEEDUP}x")
         if failures:
             print("SMOKE FAIL: driver-throughput regression:",
                   file=sys.stderr)

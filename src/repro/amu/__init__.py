@@ -30,6 +30,7 @@ from repro.core.farmem import (BimodalTail, FarMemoryConfig, FarMemoryRegion,
 # fully initialized by now even when the import chain started from
 # `repro.core.workloads` itself.
 import repro.core.workloads  # noqa: E402,F401  (registration side-effect)
+import repro.core.serving    # noqa: E402,F401  (registers paged_kv_serve)
 
 __all__ = [
     "AmuConfig", "AmuSession", "RunStats", "ctx", "CommandFacade",

@@ -23,8 +23,8 @@ from typing import Optional
 
 from repro.core.coroutines import (Acquire, AcquireVec, Aload, AloadNoWait,
                                    AloadVec, Astore, AstoreNoWait, AstoreVec,
-                                   AwaitRid, AwaitRids, Cost, Release,
-                                   ReleaseVec, SpmRead, SpmWrite)
+                                   AwaitRid, AwaitRids, Cost, Now, Release,
+                                   ReleaseVec, SpmRead, SpmWrite, WaitUntil)
 
 
 class CommandFacade:
@@ -107,6 +107,19 @@ class CommandFacade:
     def cost(insts: float = 0.0, cycles: float = 0.0):
         """Charge plain compute between memory ops."""
         return Cost(insts, cycles)
+
+    # ------------------------------------------------------------ the clock
+    @staticmethod
+    def wait_until(cycles: float):
+        """Suspend until the core clock reaches the ABSOLUTE time `cycles`
+        (continues immediately if it is already past — open-loop arrival)."""
+        return WaitUntil(cycles)
+
+    @staticmethod
+    def now():
+        """Resume with the current core clock in cycles (free: a
+        cycle-counter read) — timestamp request completions with it."""
+        return Now()
 
 
 #: Singleton facade — ports do ``from repro.amu import ctx``.

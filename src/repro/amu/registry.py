@@ -65,6 +65,9 @@ class WorkloadDef:
     locked: bool = False        # uses Acquire/Release disambiguation
     distinct: bool = False      # supports the distinct= determinism knob
     frontier: bool = False      # level-synchronous (make_round_tasks driver)
+    request_level: bool = False  # open-loop arrivals + per-request latency;
+    #                              excluded from throughput-normalized sweeps
+    #                              (its cycles include arrival-horizon idle)
     llvm_defaults: Optional[Mapping[str, Any]] = None  # llvm-mode rebuild kw
     defaults: Mapping[str, Any] = field(default_factory=dict)  # default sizes
 

@@ -27,6 +27,8 @@ from typing import Dict, Iterator, Optional, Union
 
 from dataclasses import dataclass, fields
 
+import numpy as np
+
 from repro.amu.config import FREQ_GHZ, AmuConfig
 from repro.amu.registry import REGISTRY, Port, WorkloadRegistry
 from repro.core.coroutines import SCHEDULER_KINDS
@@ -43,6 +45,10 @@ class RunStats:
     ``regions`` carries per-tier request/byte/MLP stats when the config's
     far memory is heterogeneous (``AmuConfig(far=[...regions...])``), and
     is ``None`` for the flat model.
+
+    The ``req_*`` fields carry per-request completion-latency percentiles
+    (µs) for request-level ports — those whose instance fills
+    ``request_latency_cycles`` (the serving workload); ``None`` elsewhere.
     """
     cycles: float
     insts: float
@@ -58,6 +64,11 @@ class RunStats:
     verified: Optional[bool]
     workload: str = ""
     regions: Optional[Dict[str, Dict[str, float]]] = None
+    req_count: Optional[int] = None
+    req_mean_us: Optional[float] = None
+    req_p50_us: Optional[float] = None
+    req_p99_us: Optional[float] = None
+    req_p999_us: Optional[float] = None
 
     # mapping-style access keeps old dict-consumer code working unchanged;
     # only FIELD names are keys (method names like "keys" stay invisible,
@@ -81,6 +92,26 @@ class RunStats:
 
     def to_dict(self) -> Dict[str, object]:
         return {f.name: getattr(self, f.name) for f in fields(self)}
+
+
+def _request_latency_fields(lat_cycles) -> Dict[str, object]:
+    """RunStats ``req_*`` kwargs from an instance's per-request completion
+    latencies (cycles; negative entries mean the request never completed
+    and are excluded). Empty dict of Nones when the port is not
+    request-level."""
+    none = dict(req_count=None, req_mean_us=None, req_p50_us=None,
+                req_p99_us=None, req_p999_us=None)
+    if lat_cycles is None:
+        return none
+    lat = np.asarray(lat_cycles, dtype=float)
+    lat = lat[lat >= 0.0]
+    if lat.size == 0:
+        return none
+    us = lat / (FREQ_GHZ * 1e3)
+    p50, p99, p999 = np.quantile(us, [0.5, 0.99, 0.999])
+    return dict(req_count=int(lat.size), req_mean_us=float(us.mean()),
+                req_p50_us=float(p50), req_p99_us=float(p99),
+                req_p999_us=float(p999))
 
 
 class AmuSession:
@@ -164,6 +195,8 @@ class AmuSession:
         eng.drain()
         eng.check_invariants()
         stats = sched.summary()
+        req = _request_latency_fields(
+            getattr(inst, "request_latency_cycles", None))
         return RunStats(
             cycles=stats["cycles"], insts=stats["insts"], ipc=stats["ipc"],
             mlp=stats["mlp"], requests=stats["requests"],
@@ -173,7 +206,7 @@ class AmuSession:
             units=inst.units, vector=self._use_vector,
             verified=bool(inst.verify(eng.mem)) if cfg.verify else None,
             workload=inst.name,
-            regions=self.far.region_stats(stats["cycles"]))
+            regions=self.far.region_stats(stats["cycles"]), **req)
 
     def run(self, port: Union[str, Port], *,
             record_trace: bool = False, **build_kw) -> RunStats:

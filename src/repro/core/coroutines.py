@@ -216,6 +216,27 @@ class Cost:        # plain compute between memory ops
     cycles: float = 0.0
 
 
+@dataclass(frozen=True)
+class WaitUntil:
+    """Suspend until the core clock reaches `cycles` (an ABSOLUTE time).
+
+    The open-loop arrival primitive: a serving port sleeps until a
+    request's arrival time, then starts its gathers. If the clock is
+    already past `cycles` the task continues immediately (the queueing
+    delay is real — latency is measured from the scheduled arrival, not
+    from the wake). Free of charge: the sleep models the task not
+    existing yet, not the core doing work."""
+    cycles: float
+
+
+@dataclass(frozen=True)
+class Now:
+    """Resume immediately with the current core clock (cycles). Free of
+    charge (a cycle-counter register read) — ports use it to timestamp
+    request completions for per-request latency accounting."""
+    pass
+
+
 Task = Generator  # yields commands, receives command results
 
 
@@ -261,12 +282,36 @@ class Scheduler:
         self._wake_heap: list = []
         self._wake_dead: Dict[float, int] = {}
         self._wait_wake: Dict[int, float] = {}   # id(task) -> its group wake
+        # open-loop sleepers: (wake_cycles, seq, task) heap; tasks suspended
+        # on WaitUntil wake (FIFO within a tick via seq) once t >= wake
+        self._sleeping: list = []
+        self._sleep_seq = 0
         self._live = 0
 
     # --------------------------------------------------------------- helpers
     def _tick_insts(self, insts: float) -> None:
         self.insts += insts
         self.t += self.cost.insts_to_cycles(insts)
+
+    def _sleep_until(self, task: Task, wake: float) -> None:
+        """Park `task` until the clock reaches `wake` (WaitUntil). A wake
+        at or below the clock requeues immediately — the arrival is in the
+        past, the queueing delay is already being paid."""
+        if wake <= self.t:
+            self._ready.append(task)
+        else:
+            self._sleep_seq += 1
+            heapq.heappush(self._sleeping, (wake, self._sleep_seq, task))
+
+    def _wake_sleepers(self) -> None:
+        """Move every sleeper whose wake time has arrived to the ready
+        queue (in wake order, FIFO within a tick)."""
+        while self._sleeping and self._sleeping[0][0] <= self.t:
+            _, _, task = heapq.heappop(self._sleeping)
+            self._ready.append(task)
+
+    def _earliest_sleep(self) -> Optional[float]:
+        return self._sleeping[0][0] if self._sleeping else None
 
     # Token bookkeeping hooks — dict-based here (the oracle); BatchScheduler
     # overrides them with preallocated numpy maps for vectorized dispatch.
@@ -391,6 +436,11 @@ class Scheduler:
             self._tick_insts(cmd.insts)
             self.t += cmd.cycles
             self._ready.append(task)
+        elif isinstance(cmd, WaitUntil):
+            self._sleep_until(task, float(cmd.cycles))
+        elif isinstance(cmd, Now):
+            self._results[id(task)] = self.t
+            self._ready.append(task)
         elif isinstance(cmd, AwaitRid):
             self._await_tokens(task, (cmd.rid,))  # cmd.rid is the issue token
         elif isinstance(cmd, AwaitRids):
@@ -512,10 +562,15 @@ class Scheduler:
         Parked tasks can be unblocked by ANY completion (a freed ID), so
         they force single-stepping; the readying completion itself is left
         to the runtime loop, which polls it and runs the awakened task in
-        the same turn, exactly as before."""
-        if not (self._waiting_count() or self._alloc_parked):
+        the same turn, exactly as before. Sleepers (WaitUntil) cap every
+        jump/drain window at their earliest wake: a waking sleeper issues
+        new requests from that instant, so the clock must not overshoot
+        it."""
+        if not (self._waiting_count() or self._alloc_parked
+                or self._sleeping):
             raise DeadlockError("live tasks but none ready/waiting")
         c = self.cost
+        sleep0 = self._earliest_sleep()
         heap = self._wake_heap
         dead = self._wake_dead
         while heap and dead.get(heap[0]):  # exact lazy deletion
@@ -527,9 +582,9 @@ class Scheduler:
         # heap[0] (if any) is now a LIVE group's wake; when it already sits
         # at/below the clock its final token waits in the finished backlog,
         # so only a strictly-future wake opens the drain window
-        if heap and heap[0] > self.t and not self._alloc_parked:
-            wake = heap[0]
-            while True:
+        if heap and not self._alloc_parked:
+            wake = heap[0] if sleep0 is None else min(heap[0], sleep0)
+            while wake > self.t:
                 next_done = self.engine.next_completion_time
                 # retirement happens at max(t, next_done): only provably
                 # pre-wake turns (every retired token non-final) drain here
@@ -545,9 +600,15 @@ class Scheduler:
         if next_done is None:
             if self.engine.finished_pending:
                 return                     # drain via getfin next round
+            if sleep0 is not None:         # nothing in flight: jump to the
+                self.t = max(self.t, sleep0)   # next arrival
+                self.engine.advance(self.t)
+                return
             raise DeadlockError(
                 f"{self._waiting_count()} waiting, "
                 f"{len(self._alloc_parked)} parked, none outstanding")
+        if sleep0 is not None:
+            next_done = min(next_done, sleep0)
         self.t = max(self.t, next_done)
         self.engine.advance(self.t)
 
@@ -562,6 +623,8 @@ class Scheduler:
         for task in tasks or ():
             self.spawn(task)
         while self._live > 0:
+            if self._sleeping:             # arrivals whose time has come
+                self._wake_sleepers()
             # event loop: poll completions first (Fig 4 step 3)
             if (self._waiting_count() or self._alloc_parked
                     or self.engine.outstanding or self.engine.finished_pending):
@@ -710,13 +773,20 @@ class BatchScheduler(Scheduler):
         (and exact) to jump the clock to the earliest group-ready time (the
         max done-time of that group's tokens) instead of crawling one
         completion per epoch. With tasks parked on ID exhaustion, any single
-        completion can unblock them, so fall back to single-stepping."""
-        if not (self._n_wait_groups or self._alloc_parked):
+        completion can unblock them, so fall back to single-stepping.
+        Sleepers (WaitUntil) cap the jump at their earliest wake — a waking
+        arrival issues new requests from that instant."""
+        if not (self._n_wait_groups or self._alloc_parked or self._sleeping):
             raise DeadlockError("live tasks but none ready/waiting")
+        sleep0 = self._earliest_sleep()
         next_done = self.engine.next_completion_time
         if next_done is None:
             if self.engine.finished_pending:
                 return                     # drain via getfin next round
+            if sleep0 is not None:         # nothing in flight: jump to the
+                self.t = max(self.t, sleep0)   # next arrival
+                self.engine.advance(self.t)
+                return
             raise DeadlockError(
                 f"{self._n_wait_groups} waiting, "
                 f"{len(self._alloc_parked)} parked, none outstanding")
@@ -724,9 +794,12 @@ class BatchScheduler(Scheduler):
         while heap and heap[0] <= self.t:  # groups already dispatched
             heapq.heappop(heap)
         if self._alloc_parked or not heap:
-            self.t = max(self.t, next_done)
+            target = next_done
         else:
-            self.t = max(self.t, heap[0])
+            target = heap[0]
+        if sleep0 is not None:
+            target = min(target, sleep0)
+        self.t = max(self.t, target)
         self.engine.advance(self.t)
 
     def _new_group(self, task: Task, count: int, wake_time: float) -> int:
@@ -823,6 +896,8 @@ class BatchScheduler(Scheduler):
         for task in tasks or ():
             self.spawn(task)
         while self._live > 0:
+            if self._sleeping:             # arrivals whose time has come
+                self._wake_sleepers()
             if self._tok >= self._RECYCLE_AT:
                 self._maybe_recycle_tokens()
             if (self._n_wait_groups or self._alloc_parked

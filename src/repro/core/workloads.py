@@ -109,6 +109,9 @@ class WorkloadInstance:
     verify: Callable[[np.ndarray], bool]
     disambiguation: bool = False
     vector: bool = False                  # which port was built (stats label)
+    # request-level ports (serving) fill one completion latency per logical
+    # request during the run; the session turns it into RunStats req_* fields
+    request_latency_cycles: Optional[np.ndarray] = None
 
 
 def _cfg(granularity: int, queue_length: int = 256,

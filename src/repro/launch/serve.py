@@ -4,6 +4,13 @@ Demonstrates the AMU serving path end-to-end: requests arrive in batches,
 prefill fills the cache, decode streams tokens; with --use-kernels the
 decode attention runs the paged_attention Pallas kernel (interpret mode on
 CPU, compiled on TPU).
+
+With --offload-kv the KV cache lives in host memory between decode steps
+(:class:`~repro.runtime.offload.OffloadedKVCache`): each step fetches the
+cache pages through the resident window (prefetch-ahead, AMI-style), runs
+decode, and update()s the new pages back. The driver decodes once without
+offload and once with, and asserts the generated tokens are identical —
+the runtime twin of the simulator's `paged_kv_serve` differential check.
 """
 from __future__ import annotations
 
@@ -27,6 +34,11 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--use-kernels", action="store_true")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--offload-kv", action="store_true",
+                    help="page the KV cache through OffloadedKVCache "
+                         "between decode steps and check token identity")
+    ap.add_argument("--offload-window", type=int, default=2,
+                    help="resident window (device pages) for --offload-kv")
     args = ap.parse_args()
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
@@ -56,21 +68,55 @@ def main() -> None:
         return jax.random.categorical(
             k, logits[:, -1] / args.temperature)[:, None]
 
-    tok = sample(logits, key)
-    out_tokens = [tok]
+    def run_decode(cache, kv=None):
+        """Decode loop; with `kv`, the cache pages through host memory
+        between steps (fetch -> decode -> update). JAX arrays are
+        immutable, so the post-prefill cache is reusable across runs."""
+        k = key
+        tok = sample(logits, k)
+        out, cur = [tok], cache
+        if kv is not None:
+            leaves, treedef = jax.tree.flatten(cur)
+            for i, leaf in enumerate(leaves):
+                kv.host_put(i, jax.device_get(leaf))
+            kv.prefetch(0)
+        for _ in range(args.max_new - 1):
+            if kv is not None:
+                pages = [kv.fetch(i) for i in range(kv.num_layers)]
+                cur = jax.tree.unflatten(treedef, pages)
+            lg, cur = decode(params, tok, cur)
+            if kv is not None:
+                for i, leaf in enumerate(jax.tree.leaves(cur)):
+                    kv.update(i, leaf)
+            k, sub = jax.random.split(k)
+            tok = sample(lg, sub)
+            out.append(tok)
+        jax.block_until_ready(tok)
+        return jnp.concatenate(out, axis=1)
+
     t0 = time.time()
-    for i in range(args.max_new - 1):
-        logits, cache = decode(params, tok, cache)
-        key, sub = jax.random.split(key)
-        tok = sample(logits, sub)
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
+    gen = run_decode(cache)
     t_decode = time.time() - t0
-    gen = jnp.concatenate(out_tokens, axis=1)
     tok_s = args.batch * (args.max_new - 1) / max(t_decode, 1e-9)
     print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill:.2f}s | "
           f"decode: {tok_s:,.1f} tok/s | sample row 0: "
           f"{np.asarray(gen[0])[:12].tolist()}")
+
+    if args.offload_kv:
+        from repro.runtime.offload import OffloadedKVCache
+
+        n_pages = len(jax.tree.leaves(cache))
+        kv = OffloadedKVCache(num_layers=n_pages,
+                              window=args.offload_window)
+        t0 = time.time()
+        gen_off = run_decode(cache, kv=kv)
+        t_off = time.time() - t0
+        kv.close()
+        same = bool(jnp.array_equal(gen, gen_off))
+        print(f"offload-kv: {n_pages} pages, window {args.offload_window}, "
+              f"{t_off:.2f}s | stats {kv.stats} | tokens identical: {same}")
+        if not same:
+            raise SystemExit("offloaded decode diverged from baseline")
 
 
 if __name__ == "__main__":

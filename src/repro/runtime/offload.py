@@ -35,6 +35,7 @@ class OffloadedKVCache:
         self.window = window
         self._host: List[Optional[Any]] = [None] * num_layers  # far memory
         self._resident: Dict[int, Any] = {}                    # device slots
+        self._dirty: set = set()                               # update()d layers
         self._pending: Dict[int, "queue.Queue"] = {}           # in-flight
         self._writeback_q: "queue.Queue" = queue.Queue()
         self._wb_thread = threading.Thread(target=self._writeback_loop,
@@ -68,10 +69,28 @@ class OffloadedKVCache:
         host_page = self._host[layer]
         self.stats["prefetch_issued"] += 1
 
+        # the worker must never die without posting: a bare put of the
+        # device_put result hangs every later fetch() of this layer when the
+        # upload raises (e.g. the layer was never host_put). Post the
+        # exception instead and re-raise it on the consuming side.
         def work():
-            q.put(jax.device_put(host_page))
+            try:
+                if host_page is None:
+                    raise RuntimeError(
+                        f"layer {layer} fetched before host_put()")
+                q.put(("ok", jax.device_put(host_page)))
+            except BaseException as exc:  # noqa: BLE001 - posted, not dropped
+                q.put(("err", exc))
 
         threading.Thread(target=work, daemon=True).start()
+
+    def _take_pending(self, layer: int) -> Any:
+        """Consume `layer`'s in-flight transfer, re-raising a worker error."""
+        status, payload = self._pending.pop(layer).get()
+        if status == "err":
+            raise RuntimeError(
+                f"prefetch of layer {layer} failed") from payload
+        return payload
 
     def fetch(self, layer: int) -> Any:
         """getfin + SPM read: returns the resident page, waiting only if the
@@ -79,9 +98,12 @@ class OffloadedKVCache:
         if layer in self._resident:
             self.stats["prefetch_hits"] += 1
         elif layer in self._pending:
-            self._resident[layer] = self._pending.pop(layer).get()
+            self._resident[layer] = self._take_pending(layer)
             self.stats["prefetch_hits"] += 1
         else:
+            if self._host[layer] is None:
+                raise RuntimeError(
+                    f"layer {layer} fetched before host_put()")
             self.stats["demand_fetches"] += 1
             self._resident[layer] = jax.device_put(self._host[layer])
         # keep the window: issue the next prefetch, retire the oldest
@@ -90,17 +112,35 @@ class OffloadedKVCache:
             oldest = min(self._resident)
             if oldest == layer:
                 break
-            self._writeback_q.put((oldest, self._resident.pop(oldest)))
+            self._retire(oldest)
         return self._resident[layer]
+
+    def _retire(self, layer: int) -> None:
+        """Evict `layer` from the window: write back only if update()d —
+        a clean page is already byte-identical on the host side."""
+        page = self._resident.pop(layer)
+        if layer in self._dirty:
+            self._dirty.discard(layer)
+            self._writeback_q.put((layer, page))
 
     def update(self, layer: int, page: Any) -> None:
         """astore: replace the resident page; writeback happens lazily when
         the slot is recycled."""
         self._resident[layer] = page
+        self._dirty.add(layer)
 
     def flush(self) -> None:
+        # land in-flight prefetches first: a pending layer still owns a
+        # worker thread and a device copy, and dropping its queue here used
+        # to leak both. A landed prefetch is clean by definition (update()
+        # targets resident layers), so it retires without a writeback.
+        for layer in sorted(self._pending):
+            try:
+                self._resident[layer] = self._take_pending(layer)
+            except RuntimeError:
+                pass  # upload failed: the host copy is still authoritative
         for layer in sorted(self._resident):
-            self._writeback_q.put((layer, self._resident.pop(layer)))
+            self._retire(layer)
         self._writeback_q.join()
 
     def close(self) -> None:

@@ -1,0 +1,177 @@
+"""Paged-KV serving workload: arrivals, request latency, pinning.
+
+Pins the serving contracts (TESTING.md "Serving workload"):
+
+* seeded arrival draws (Poisson + bursty) are deterministic, strictly
+  increasing, and mean-preserving; the bursty closed-form inversion is
+  regression-pinned against the fp-stall seed that hung the old
+  incremental loop;
+* ``WaitUntil`` wakes a sleeping coroutine exactly at its absolute wake
+  time on both scheduler kinds, and a wake time already in the past
+  continues immediately (open-loop queueing delay);
+* under a fixed scheduler the scalar and batched ENGINES produce identical
+  request traces, far-memory bytes, cycle counts — and identical
+  per-request completion-latency arrays — for every data plane;
+* ``RunStats`` req_* percentiles are populated for the serving workload
+  (and None elsewhere), and are stable across ``far.reset_stats()``;
+* the synchronous page-fault plane has MLP ~= 1 and the AMI plane beats it
+  by a wide margin on mean per-request latency (the smoke-gate floor).
+"""
+import numpy as np
+import pytest
+
+from repro.amu import AmuConfig, AmuSession, ctx
+from repro.core.coroutines import SCHEDULER_KINDS
+from repro.core.engine import make_engine
+from repro.core.farmem import FarMemoryConfig, FarMemoryModel
+from repro.core.serving import (build_paged_kv_serve, bursty_arrivals,
+                                poisson_arrivals, serve_regions)
+
+
+# ---------------------------------------------------------------- arrivals
+def test_poisson_arrivals_deterministic_and_monotone():
+    a = poisson_arrivals(3, 256, 2.0)
+    b = poisson_arrivals(3, 256, 2.0)
+    np.testing.assert_array_equal(a, b)
+    assert np.all(np.diff(a) >= 0) and a[0] > 0
+    assert not np.array_equal(a, poisson_arrivals(4, 256, 2.0))
+    # rate is honoured in the mean (3000 cycles per us)
+    rate = 256 / (a[-1] / 3e3)
+    assert 1.5 < rate < 2.6, rate
+
+
+def test_bursty_arrivals_deterministic_mean_preserving_and_bursty():
+    a = bursty_arrivals(3, 4096, 2.0)
+    np.testing.assert_array_equal(a, bursty_arrivals(3, 4096, 2.0))
+    assert np.all(np.diff(a) >= 0)
+    # mean-preserving: long-run rate matches the base rate
+    rate = 4096 / (a[-1] / 3e3)
+    assert 1.8 < rate < 2.2, rate
+    # bursty: the duty fraction of each period carries most arrivals
+    phase = (a / 3e3) % 8.0
+    frac = float(np.mean(phase < 0.2 * 8.0))
+    assert frac > 0.6, frac                      # duty is 0.2
+
+
+def test_bursty_arrivals_fp_stall_regression():
+    """Seed/rate pair whose 17th draw landed within one ulp of a segment
+    boundary and hung the old incremental inversion forever."""
+    a = bursty_arrivals(101, 96, 2.0)
+    assert a.shape == (96,) and np.all(np.diff(a) >= 0)
+
+
+def test_bursty_arrivals_rejects_degenerate_square_wave():
+    with pytest.raises(ValueError, match="burst"):
+        bursty_arrivals(0, 8, 2.0, burst_mult=4.0, duty=0.25)
+    with pytest.raises(ValueError, match="duty"):
+        bursty_arrivals(0, 8, 2.0, duty=1.5)
+
+
+# ------------------------------------------------------- WaitUntil / Now
+@pytest.mark.parametrize("kind", sorted(SCHEDULER_KINDS))
+def test_wait_until_wakes_exactly(kind):
+    inst = build_paged_kv_serve(requests=4, coroutines=2)
+    far = FarMemoryModel(FarMemoryConfig.from_latency_us(1.0))
+    eng = make_engine("batched", inst.engine_config, far, inst.mem)
+    wakes = {}
+
+    def sleeper(i, t):
+        yield ctx.wait_until(t)
+        wakes[i] = (yield ctx.now())
+
+    sched = SCHEDULER_KINDS[kind](eng)
+    sched.run([sleeper(0, 5000.0), sleeper(1, 12345.5), sleeper(2, 100.0)])
+    assert wakes[0] == 5000.0 and wakes[1] == 12345.5 and wakes[2] == 100.0
+
+
+@pytest.mark.parametrize("kind", sorted(SCHEDULER_KINDS))
+def test_wait_until_in_the_past_continues_immediately(kind):
+    inst = build_paged_kv_serve(requests=4, coroutines=2)
+    far = FarMemoryModel(FarMemoryConfig.from_latency_us(1.0))
+    eng = make_engine("batched", inst.engine_config, far, inst.mem)
+    seen = {}
+
+    def task():
+        yield ctx.wait_until(9000.0)             # advance the clock
+        yield ctx.wait_until(10.0)               # long past: free continue
+        seen["t"] = (yield ctx.now())
+
+    sched = SCHEDULER_KINDS[kind](eng)
+    sched.run([task()])
+    assert seen["t"] == 9000.0
+
+
+# ----------------------------------------------- engine pinning contract
+def _lat_of(session):
+    return session.instance.request_latency_cycles.copy()
+
+
+@pytest.mark.parametrize("plane,vector", [("ami", False), ("ami", True),
+                                          ("sync", False)])
+def test_serving_engines_trace_and_latency_identical(plane, vector):
+    """Scalar vs batched ENGINE under the fixed scalar scheduler: identical
+    request trace, far-memory bytes, cycles, and per-request latencies."""
+    results = []
+    for engine in ("scalar", "batched"):
+        cfg = AmuConfig(engine=engine, scheduler="scalar", vector=vector,
+                        far=serve_regions())
+        with AmuSession(cfg) as s:
+            st = s.run("paged_kv_serve", record_trace=True,
+                       data_plane=plane)
+            assert st.verified
+            results.append((list(s.engine.trace), s.engine.mem.copy(),
+                            st.cycles, _lat_of(s), st))
+    tr_a, mem_a, cyc_a, lat_a, st_a = results[0]
+    tr_b, mem_b, cyc_b, lat_b, st_b = results[1]
+    assert tr_a == tr_b
+    assert np.array_equal(mem_a, mem_b)
+    assert cyc_a == cyc_b
+    np.testing.assert_array_equal(lat_a, lat_b)
+    assert (st_a.req_p50_us, st_a.req_p99_us, st_a.req_p999_us) == \
+        (st_b.req_p50_us, st_b.req_p99_us, st_b.req_p999_us)
+
+
+def test_serving_latencies_nonnegative_and_fields_populated():
+    with AmuSession(AmuConfig(engine="batched", far=serve_regions())) as s:
+        st = s.run("paged_kv_serve")
+    assert st.req_count == 96
+    assert 0 < st.req_p50_us <= st.req_p99_us <= st.req_p999_us
+    assert st.req_mean_us > 0
+    # non-request workloads carry no req_* stats
+    with AmuSession(AmuConfig(engine="batched")) as s:
+        st2 = s.run("GUPS")
+    assert st2.req_count is None and st2.req_p99_us is None
+
+
+def test_serving_percentiles_stable_across_reset_stats():
+    """prepare -> warmup traffic -> reset_stats -> execute reproduces the
+    plain run bit-for-bit, req_* fields included (measured-phase idiom)."""
+    cfg = AmuConfig(engine="batched", scheduler="scalar",
+                    far=serve_regions())
+    with AmuSession(cfg) as s:
+        baseline = s.run("paged_kv_serve")
+    with AmuSession(cfg) as s:
+        s.prepare("paged_kv_serve")
+        s.far.issue_batch(0.0, np.full(16, 256),
+                          np.arange(16, dtype=np.int64) * 256)  # warmup
+        s.far.reset_stats()
+        measured = s.execute()
+    assert measured == baseline
+
+
+def test_sync_baseline_no_mlp_and_ami_speedup():
+    cfg = AmuConfig(engine="batched", far=serve_regions())
+    with AmuSession(cfg) as s:
+        sync = s.run("paged_kv_serve", data_plane="sync")
+    with AmuSession(cfg) as s:
+        ami = s.run("paged_kv_serve")
+    assert sync.verified and ami.verified
+    assert sync.mlp < 1.2                        # one blocking fetch at a time
+    assert ami.mlp > 3.0
+    assert sync.req_mean_us / ami.req_mean_us > 5.0
+
+
+def test_serving_verifies_on_flat_model_and_bursty():
+    with AmuSession(AmuConfig(engine="batched")) as s:
+        st = s.run("paged_kv_serve", arrival="bursty")
+    assert st.verified and st.req_count == 96

@@ -195,13 +195,14 @@ def test_session_choreography_identical_to_manual_stack():
 def test_registry_capabilities_cover_builtin_workloads():
     assert sorted(REGISTRY.names()) == ["BFS", "BS", "GUPS", "HJ", "HPCG",
                                         "HT", "IS", "LL", "Redis", "SL",
-                                        "STREAM"]
+                                        "STREAM", "paged_kv_serve"]
     assert sorted(REGISTRY.vector_names()) == sorted(REGISTRY.names())
     for name in ("HJ", "HT", "Redis"):
         assert REGISTRY[name].pipelined and REGISTRY[name].locked
     assert REGISTRY["STREAM"].llvm_defaults == {"block_doubles": 1}
     assert REGISTRY["BFS"].frontier
     assert REGISTRY["GUPS"].distinct and REGISTRY["Redis"].distinct
+    assert REGISTRY["paged_kv_serve"].request_level
     with pytest.raises(KeyError):
         REGISTRY["nope"]
 

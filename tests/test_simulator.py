@@ -11,7 +11,9 @@ import pytest
 from repro.amu import REGISTRY
 from repro.core import simulator as sim
 
-WORKLOADS = REGISTRY.names()
+# request-level workloads (open-loop arrivals) are covered by
+# tests/test_serving.py; the throughput sweeps here exclude them
+WORKLOADS = [n for n, d in REGISTRY.items() if not d.request_level]
 ENGINE = "batched"
 
 

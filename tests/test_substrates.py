@@ -186,3 +186,63 @@ def test_offloaded_kv_cache_roundtrip_and_prefetch():
     assert cache.stats["prefetch_hits"] >= L - 1
     assert cache.stats["writebacks"] == L
     cache.close()
+
+
+def test_offloaded_kv_cache_clean_pages_skip_writeback():
+    import jax.numpy as jnp
+
+    from repro.runtime.offload import OffloadedKVCache
+
+    L = 8
+    cache = OffloadedKVCache(num_layers=L, window=2)
+    rng = np.random.default_rng(1)
+    pages = [rng.standard_normal((4, 8)).astype(np.float32) for _ in range(L)]
+    for i, p in enumerate(pages):
+        cache.host_put(i, p)
+    dirty = {1, 4, 5}
+    for i in range(L):
+        page = cache.fetch(i)
+        if i in dirty:
+            cache.update(i, jnp.asarray(page) * 2.0)
+    cache.flush()
+    # only update()d layers were written back; clean evictions are free
+    assert cache.stats["writebacks"] == len(dirty)
+    for i in range(L):
+        want = pages[i] * 2.0 if i in dirty else pages[i]
+        np.testing.assert_allclose(cache._host[i], want)
+    cache.close()
+
+
+def test_offloaded_kv_cache_flush_drains_pending():
+    from repro.runtime.offload import OffloadedKVCache
+
+    L = 4
+    cache = OffloadedKVCache(num_layers=L, window=2)
+    for i in range(L):
+        cache.host_put(i, np.full((2, 2), i, np.float32))
+    cache.fetch(0)                      # issues the prefetch of layer 1
+    assert 1 in cache._pending or 1 in cache._resident
+    cache.flush()                       # must land the in-flight transfer
+    assert cache._pending == {}
+    assert cache._resident == {}
+    assert cache.stats["writebacks"] == 0   # nothing was update()d
+    np.testing.assert_array_equal(cache._host[1], np.full((2, 2), 1))
+    cache.close()
+
+
+def test_offloaded_kv_cache_missing_layer_raises_not_hangs():
+    import pytest
+
+    from repro.runtime.offload import OffloadedKVCache
+
+    cache = OffloadedKVCache(num_layers=3, window=2)
+    cache.host_put(0, np.zeros((2, 2), np.float32))
+    # prefetched transfer of a never-host_put layer: the worker error must
+    # surface at fetch() instead of deadlocking on the queue
+    cache.prefetch(1)
+    with pytest.raises(RuntimeError, match="layer 1"):
+        cache.fetch(1)
+    # demand path too
+    with pytest.raises(RuntimeError, match="host_put"):
+        cache.fetch(2)
+    cache.close()
