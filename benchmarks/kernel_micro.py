@@ -80,12 +80,15 @@ _PORT_VEC = {
 
 
 def _drive_workload_port(wl: str, vector: bool, updates: int,
-                         latency_us: float = 1.0) -> float:
-    """Run a workload port through the full BatchScheduler + batched-engine
-    stack; returns far-memory requests retired per wall-clock second. This is
-    the host-side throughput that bounds paper sweeps — `vector=True` runs
+                         latency_us: float = 1.0, scheduler: str = "auto"):
+    """Run a workload port through the full scheduler + batched-engine
+    stack; returns ``(req_per_s, RunStats)`` — far-memory requests retired
+    per wall-clock second plus the run's host-side observability counters
+    (engine entries, rows per entry, wall-µs per entry). This is the
+    host-side throughput that bounds paper sweeps — `vector=True` runs
     the AloadVec/AstoreVec (or pipelined-chase) port, `vector=False` PR 1's
-    scalar-yield port."""
+    scalar-yield port; `scheduler="batched"` pins the per-command loop,
+    the `"auto"` default takes the epoch-fused loop."""
     from repro.amu import REGISTRY, AmuConfig, AmuSession
 
     kw = dict(_PORT_SCALE.get(wl, {}))
@@ -94,14 +97,21 @@ def _drive_workload_port(wl: str, vector: bool, updates: int,
     if vector:
         kw.update(vector=True, **_PORT_VEC.get(wl, {}))
     inst = REGISTRY.build(wl, 0, **kw)
-    session = AmuSession(AmuConfig(engine="batched",
+    session = AmuSession(AmuConfig(engine="batched", scheduler=scheduler,
                                    latency_us=latency_us, verify=False))
     session.prepare(inst)       # build + stack construction outside timing
     t0 = time.perf_counter()
     stats = session.execute()
     dt = time.perf_counter() - t0
     assert inst.verify(session.engine.mem)
-    return stats.requests / dt
+    return stats.requests / dt, stats
+
+
+def _entry_counters(stats) -> str:
+    """Derived-string fragment for the host-side observability counters."""
+    return (f"entries={stats.engine_entries},"
+            f"rows_per_entry={stats.rows_per_entry:.1f},"
+            f"us_per_entry={stats.us_per_entry:.1f}")
 
 
 def engine_driver(n_requests: int = 100_000, smoke: bool = False) -> List[Row]:
@@ -120,18 +130,30 @@ def engine_driver(n_requests: int = 100_000, smoke: bool = False) -> List[Row]:
     # the full scheduler stack (GUPS scaled up so fixed costs don't mask the
     # ratio). The smoke set keeps one representative per port family the CI
     # gate holds a floor for: GUPS (vector RMW), STREAM/IS (zero-copy block
-    # ports), LL (pipelined chase).
+    # ports), LL (pipelined chase). Each vector port runs twice — the
+    # per-command BatchScheduler (`_sched_vector`, comparable to earlier
+    # sweeps) and the epoch-fused loop (`_sched_vector_fused`, one engine
+    # entry per epoch) — so the fusion win (entry collapse, fused_vs_percmd
+    # speedup, µs/entry) is visible per workload.
     updates = 16_384 if smoke else 65_536
     wls = (("GUPS", "STREAM", "IS", "LL") if smoke
            else ("GUPS", "STREAM", "IS", "HPCG", "LL", "Redis"))
     for wl in wls:
-        s = _drive_workload_port(wl, vector=False, updates=updates)
-        v = _drive_workload_port(wl, vector=True, updates=updates)
+        s, s_st = _drive_workload_port(wl, vector=False, updates=updates)
+        v, v_st = _drive_workload_port(wl, vector=True, updates=updates,
+                                       scheduler="batched")
+        f, f_st = _drive_workload_port(wl, vector=True, updates=updates)
         rows.append((f"engine/{wl}_sched_scalar_yield", 1e6 / s,
-                     f"req_per_s={s:.0f}"))
+                     f"req_per_s={s:.0f},{_entry_counters(s_st)}"))
         rows.append((f"engine/{wl}_sched_vector", 1e6 / v,
                      f"req_per_s={v:.0f},"
-                     f"speedup_vs_scalar_yield={v / s:.2f}x"))
+                     f"speedup_vs_scalar_yield={v / s:.2f}x,"
+                     f"{_entry_counters(v_st)}"))
+        rows.append((f"engine/{wl}_sched_vector_fused", 1e6 / f,
+                     f"req_per_s={f:.0f},"
+                     f"speedup_vs_scalar_yield={f / s:.2f}x,"
+                     f"fused_vs_percmd={f / v:.2f}x,"
+                     f"{_entry_counters(f_st)}"))
     return rows
 
 

@@ -272,7 +272,10 @@ def serve_latency(smoke: bool = False) -> List[Row]:
                 f"serve/{arrival}/{label}", out.us,
                 f"p50={out.req_p50_us:.1f},p99={out.req_p99_us:.1f},"
                 f"p999={out.req_p999_us:.1f},mlp={out.mlp:.2f},"
-                f"ami_vs_sync={sync.req_mean_us / out.req_mean_us:.2f}x"))
+                f"ami_vs_sync={sync.req_mean_us / out.req_mean_us:.2f}x,"
+                f"entries={out.engine_entries},"
+                f"rows_per_entry={out.rows_per_entry:.1f},"
+                f"us_per_entry={out.us_per_entry:.1f}"))
             if label == "ami":
                 for rname, rstats in out.regions.items():
                     rows.append((f"serve/{arrival}/ami/{rname}", out.us,

@@ -41,6 +41,24 @@ SMOKE_MIN_VECTOR_DEFAULT = 1.5
 # sizes; MLP across requests is the whole mechanism, so anything near 1x
 # means the arrival/latency plumbing broke)
 SMOKE_MIN_SERVE_SPEEDUP = 3.0
+# epoch-fused host-throughput floor, two ceilings per flagship row:
+#  * `entries` — the engine-entry count is a deterministic model fact, so a
+#    ceiling catches the fused loop silently degrading back toward
+#    per-command entry granularity (GUPS smoke: 119 fused vs 574 per-command;
+#    serve vector: 290 vs ~430);
+#  * `us_per_entry` — with the entry count pinned, ceiling-gating wall-µs of
+#    driver time per entry bounds total driver time for the row's fixed
+#    workload shape. These sit ~4x above the locally-measured values (GUPS
+#    fused ~410 µs/entry at ~550 rows/entry, serve vector ~90 µs/entry) so
+#    loaded CI runners don't flake.
+SMOKE_MAX_US_PER_ENTRY = {
+    "engine/GUPS_sched_vector_fused": 1600.0,
+    "serve/poisson/ami_vector": 400.0,
+}
+SMOKE_MAX_ENTRIES = {
+    "engine/GUPS_sched_vector_fused": 200,
+    "serve/poisson/ami_vector": 360,
+}
 
 
 def _parse_speedup(derived: str, key: str) -> float:
@@ -148,6 +166,18 @@ def main() -> None:
             if sp and sp < SMOKE_MIN_SERVE_SPEEDUP:
                 failures.append(f"{row['name']}: serving AMI/page-fault "
                                 f"{sp:.2f}x < {SMOKE_MIN_SERVE_SPEEDUP}x")
+            ceil = SMOKE_MAX_US_PER_ENTRY.get(row["name"])
+            if ceil is not None:
+                upe = _parse_speedup(row["derived"], "us_per_entry")
+                if not upe or upe > ceil:
+                    failures.append(f"{row['name']}: fused driver "
+                                    f"{upe:.1f} µs/engine-entry > {ceil}")
+                ents = _parse_speedup(row["derived"], "entries")
+                if not ents or ents > SMOKE_MAX_ENTRIES[row["name"]]:
+                    failures.append(
+                        f"{row['name']}: {ents:.0f} engine entries > "
+                        f"{SMOKE_MAX_ENTRIES[row['name']]} — epoch fusion "
+                        f"degraded toward per-command granularity")
         if failures:
             print("SMOKE FAIL: driver-throughput regression:",
                   file=sys.stderr)

@@ -59,9 +59,17 @@ class AmuConfig:
 
     * ``engine`` — timed-engine implementation: ``"scalar"`` (the per-event
       oracle) or ``"batched"`` (vectorized SoA; production sweeps).
-    * ``scheduler`` — runtime loop: ``"auto"`` (follow the engine),
-      ``"scalar"`` (one getfin + one task step per turn) or ``"batched"``
-      (epoch-stepped ``getfin_all`` drain).
+    * ``scheduler`` — runtime loop: ``"auto"`` (follow the engine:
+      ``"fused"`` on the batched engine, ``"scalar"`` on the oracle),
+      ``"scalar"`` (one getfin + one task step per turn), ``"batched"``
+      (epoch-stepped ``getfin_all`` drain) or ``"fused"`` (epoch-stepped
+      AND epoch-staged: one engine/far entry per epoch; bit-identical to
+      ``"batched"`` on the same engine).
+    * ``host_jit`` — compile the far model's sequential host loops
+      (injection chains, MLP ledger accumulation) with numba when it is
+      importable; silently falls back to the pure-numpy paths otherwise.
+      Bit-identical either way — this is a host-throughput knob, not a
+      model knob.
     * ``vector`` — run the workload's AloadVec/AstoreVec (or software-
       pipelined chase) port where one is registered.
     * ``pipeline_k`` — chases per coroutine for pipelined ports
@@ -86,6 +94,7 @@ class AmuConfig:
     """
     engine: str = "batched"
     scheduler: str = "auto"
+    host_jit: bool = False
     vector: bool = False
     pipeline_k: Optional[int] = None
     dma_mode: bool = False
@@ -150,8 +159,13 @@ class AmuConfig:
     # ------------------------------------------------- resolved properties
     @property
     def scheduler_kind(self) -> str:
-        """The runtime loop actually used (``"auto"`` follows the engine)."""
-        return self.engine if self.scheduler == "auto" else self.scheduler
+        """The runtime loop actually used. ``"auto"`` follows the engine:
+        the batched engine gets the epoch-fused loop (bit-identical to the
+        per-command batched loop, one engine entry per epoch), the scalar
+        oracle keeps the scalar loop."""
+        if self.scheduler != "auto":
+            return self.scheduler
+        return "fused" if self.engine == "batched" else self.engine
 
     def resolve_engine_config(self, port_config: EngineConfig) -> EngineConfig:
         """The :class:`EngineConfig` for a run: explicit override, else the

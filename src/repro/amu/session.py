@@ -25,7 +25,9 @@ from __future__ import annotations
 
 from typing import Dict, Iterator, Optional, Union
 
-from dataclasses import dataclass, fields
+import time
+
+from dataclasses import dataclass, field, fields
 
 import numpy as np
 
@@ -49,6 +51,13 @@ class RunStats:
     The ``req_*`` fields carry per-request completion-latency percentiles
     (µs) for request-level ports — those whose instance fills
     ``request_latency_cycles`` (the serving workload); ``None`` elsewhere.
+
+    ``engine_entries`` / ``rows_per_entry`` / ``us_per_entry`` are host-side
+    observability counters (how many times the run crossed the Python-level
+    AMI surface, how many request rows the average crossing carried, and
+    wall-clock µs of driver time per crossing). The first two are
+    deterministic model facts; ``us_per_entry`` is wall-clock and excluded
+    from equality comparisons.
     """
     cycles: float
     insts: float
@@ -69,10 +78,15 @@ class RunStats:
     req_p50_us: Optional[float] = None
     req_p99_us: Optional[float] = None
     req_p999_us: Optional[float] = None
+    engine_entries: Optional[int] = None
+    rows_per_entry: Optional[float] = None
+    us_per_entry: Optional[float] = field(default=None, compare=False)
 
     # mapping-style access keeps old dict-consumer code working unchanged;
-    # only FIELD names are keys (method names like "keys" stay invisible,
-    # exactly as on the old plain dict)
+    # only COMPARABLE field names are keys (method names like "keys" stay
+    # invisible, exactly as on the old plain dict, and wall-clock fields
+    # stay out so to_dict() equality remains a model-identity check —
+    # matching dataclass __eq__, which honors compare=False)
     def __getitem__(self, key: str):
         if key in self.keys():
             return getattr(self, key)
@@ -85,13 +99,14 @@ class RunStats:
         return iter(self.keys())
 
     def keys(self):
-        return [f.name for f in fields(self)]
+        return [f.name for f in fields(self) if f.compare]
 
     def get(self, key: str, default=None):
         return getattr(self, key) if key in self.keys() else default
 
     def to_dict(self) -> Dict[str, object]:
-        return {f.name: getattr(self, f.name) for f in fields(self)}
+        return {f.name: getattr(self, f.name) for f in fields(self)
+                if f.compare}
 
 
 def _request_latency_fields(lat_cycles) -> Dict[str, object]:
@@ -167,7 +182,7 @@ class AmuSession:
         # prebuilt ports without the stamp fall back to the config's intent
         self._use_vector = bool(getattr(inst, "vector", cfg.vector))
         ecfg = cfg.resolve_engine_config(inst.engine_config)
-        far = FarMemoryModel(cfg.resolve_far_config())
+        far = FarMemoryModel(cfg.resolve_far_config(), host_jit=cfg.host_jit)
         eng = make_engine(cfg.engine, ecfg, far, inst.mem,
                           record_trace=record_trace)
         disamb = CuckooAddressSet() if inst.disambiguation else None
@@ -185,6 +200,8 @@ class AmuSession:
         inst, eng, sched = self.instance, self.engine, self.scheduler
         if inst is None:
             raise RuntimeError("no port prepared; call prepare() first")
+        entries0, rows0 = eng.host_entries, eng.host_rows
+        wall0 = time.perf_counter()
         if hasattr(inst, "make_round_tasks"):        # frontier parallelism
             frontier = [inst.root]                   # type: ignore[union-attr]
             while frontier:
@@ -192,6 +209,9 @@ class AmuSession:
                 frontier = sorted(inst.next_frontier)       # type: ignore
         else:
             sched.run(inst.tasks)
+        wall_us = (time.perf_counter() - wall0) * 1e6
+        entries = eng.host_entries - entries0
+        rows = eng.host_rows - rows0
         eng.drain()
         eng.check_invariants()
         stats = sched.summary()
@@ -206,7 +226,10 @@ class AmuSession:
             units=inst.units, vector=self._use_vector,
             verified=bool(inst.verify(eng.mem)) if cfg.verify else None,
             workload=inst.name,
-            regions=self.far.region_stats(stats["cycles"]), **req)
+            regions=self.far.region_stats(stats["cycles"]),
+            engine_entries=entries,
+            rows_per_entry=rows / entries if entries else 0.0,
+            us_per_entry=wall_us / entries if entries else 0.0, **req)
 
     def run(self, port: Union[str, Port], *,
             record_trace: bool = False, **build_kw) -> RunStats:

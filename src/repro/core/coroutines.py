@@ -43,7 +43,7 @@ from typing import Callable, Deque, Dict, Generator, Iterable, Optional
 import numpy as np
 
 from repro.core.disambiguation import CuckooAddressSet
-from repro.core.engine import AsyncEngineBase
+from repro.core.engine import LOAD, STORE, AsyncEngineBase
 
 
 # ---------------------------------------------------------------------- cost
@@ -399,7 +399,8 @@ class Scheduler:
         else:
             rids = self.engine.astore_batch(cmd.spm, cmd.mem, cmd.size)
         self.t += c.refill_cycles * (self.engine.stats["free_refills"] - refills)
-        k = int(np.count_nonzero(rids))     # allocation fails as a suffix
+        # allocation fails as a zero suffix: full when the last rid is live
+        k = n if rids[n - 1] else int(np.count_nonzero(rids))
         toks = self._new_tokens(rids[:k]) if k else []
         if k < n:
             acc.extend(toks)
@@ -735,7 +736,8 @@ class BatchScheduler(Scheduler):
         if self._tok >= self._tok_group.size:
             self._grow_tok_maps()
         rids = np.asarray(rids, np.int64)
-        if int(rids.max()) >= self._rid_tok.size:    # queue_length resized up
+        if self._rid_tok.size <= self.engine.config.queue_length \
+                and int(rids.max()) >= self._rid_tok.size:  # resized up
             self._rid_tok = np.concatenate(
                 [self._rid_tok, np.zeros(int(rids.max()) + 1
                                          - self._rid_tok.size, np.int64)])
@@ -832,14 +834,18 @@ class BatchScheduler(Scheduler):
             self._ready.append(task)
             return
         done = self._tok_done[toks]
-        if done.all():
+        ds = int(done.sum())
+        if ds == toks.size:
             self._tok_done[toks] = False         # consume unclaimed tokens
             self._n_unclaimed -= toks.size
             self._ready.append(task)
             return
-        self._tok_done[toks[done]] = False
-        self._n_unclaimed -= int(done.sum())
-        pending = toks[~done]
+        if ds:
+            self._tok_done[toks[done]] = False
+            self._n_unclaimed -= ds
+            pending = toks[~done]
+        else:
+            pending = toks                       # common case: none done yet
         self._tok_group[pending] = self._new_group(
             task, pending.size, float(self._tok_time[pending].max()))
 
@@ -851,21 +857,25 @@ class BatchScheduler(Scheduler):
         costs are summed into one clock update, as before."""
         if not rids:
             return
-        if len(rids) == 1:                       # sparse epoch: skip the
-            tok = self._rid_tok[rids[0]]         # vector machinery
-            gid = self._tok_group[tok]
-            if gid < 0:
-                self._tok_done[tok] = True
-                self._n_unclaimed += 1
-                return
-            left = self._group_left[gid] - 1
-            self._group_left[gid] = left
-            if left == 0:
-                self._ready.append(self._group_task[gid])
-                self._group_task[gid] = None
-                self._n_wait_groups -= 1
-                self._tick_insts(self.cost.switch_insts)
-                self.t += self.cost.switch_stall_cycles
+        if len(rids) <= 6:                       # sparse epoch: skip the
+            n_ready = 0                          # vector machinery; groups
+            for rid in rids:                     # still resume at their last
+                tok = self._rid_tok[rid]         # token's position, and the
+                gid = self._tok_group[tok]       # switch costs apply as one
+                if gid < 0:                      # multiply, like the vector
+                    self._tok_done[tok] = True   # path
+                    self._n_unclaimed += 1
+                    continue
+                left = self._group_left[gid] - 1
+                self._group_left[gid] = left
+                if left == 0:
+                    self._ready.append(self._group_task[gid])
+                    self._group_task[gid] = None
+                    n_ready += 1
+            if n_ready:
+                self._n_wait_groups -= n_ready
+                self._tick_insts(self.cost.switch_insts * n_ready)
+                self.t += self.cost.switch_stall_cycles * n_ready
             return
         toks = self._rid_tok[np.asarray(rids, np.int64)]
         groups = self._tok_group[toks]
@@ -876,7 +886,8 @@ class BatchScheduler(Scheduler):
             if unclaimed.all():
                 return
             groups = groups[~unclaimed]
-        np.subtract.at(self._group_left, groups, 1)
+        mx = int(groups.max()) + 1            # bincount beats subtract.at
+        self._group_left[:mx] -= np.bincount(groups, minlength=mx)
         # groups hitting zero, ordered by their last occurrence in the epoch
         uniq, rev_idx = np.unique(groups[::-1], return_index=True)
         ready_mask = self._group_left[uniq] == 0
@@ -933,4 +944,186 @@ class BatchScheduler(Scheduler):
         return self.summary()
 
 
-SCHEDULER_KINDS = {"scalar": Scheduler, "batched": BatchScheduler}
+class EpochScheduler(BatchScheduler):
+    """Epoch-fused runtime loop: ONE engine entry per scheduler epoch.
+
+    The BatchScheduler already steps every ready task once per epoch, but
+    each port's issue command still crosses the engine surface on its own —
+    32 coroutines yielding AloadVec means 32 `aload_batch` calls (and 32
+    far-model entries) per epoch. Here those calls only *stage*: the engine
+    collects every staged batch into one SoA mega-batch and
+    :meth:`~repro.core.engine.BatchedAsyncMemoryEngine.flush_epoch` enters
+    the far model once, at the end of the epoch's step phase. The epoch-top
+    drain likewise goes through one `getfin_epoch` call.
+
+    What stays at staging time (it observes live state): ID allocation,
+    SPM bounds checks, astore payload capture, and every cost-model charge
+    (issue insts, DMA descriptors, refill round trips) — so the core clock
+    `t` evolves identically to the per-command loop. What defers to the
+    flush: the far-model math, AMART scatter, trace rows, token done-times
+    (the epoch's tokens are a contiguous range, filled with one vector
+    store) and waiter-group registration (replayed in command order).
+    The flush ends by advancing the engine to the last staged time, which
+    reproduces the cumulative retirement effect of the per-command loop's
+    mid-epoch advances. The result is pinned bit-identical — trace,
+    summary, stats, RNG bitstreams — to :class:`BatchScheduler` on the
+    same engine (tests/test_epoch_fusion.py).
+
+    On an engine without the epoch surface (the scalar oracle) every
+    override falls through to the inherited per-command protocol.
+    """
+
+    def __init__(self, engine: AsyncEngineBase,
+                 cost: CostModel = CostModel(),
+                 disambiguator: Optional[CuckooAddressSet] = None,
+                 dma_mode: bool = False):
+        super().__init__(engine, cost, disambiguator, dma_mode)
+        self._fuse = bool(getattr(engine, "supports_epoch", False))
+        # deferred per-epoch state: tokens minted since the last flush are
+        # (_ep_tok_start, _tok]; their done-times land at the flush. Awaits
+        # collected during the epoch replay in command order after that.
+        self._ep_tok_start = self._tok
+        self._ep_awaits: list = []
+
+    # ------------------------------------------------- deferred token mint
+    def _new_token(self, rid: int) -> int:
+        # an immediate mint (scalar command, after its flush) carries its
+        # real done-time already: keep it out of the epoch's deferred window
+        # (_ep_tok_start, _tok], whose times are back-filled at the flush
+        tok = super()._new_token(rid)
+        self._ep_tok_start = self._tok
+        return tok
+
+    def _mint_deferred(self, rids) -> np.ndarray:
+        """`_new_tokens` minus the done-time gather (filled at the flush)."""
+        k = len(rids)
+        toks = np.arange(self._tok + 1, self._tok + k + 1)
+        self._tok += k
+        if self._tok >= self._tok_group.size:
+            self._grow_tok_maps()
+        rids = np.asarray(rids, np.int64)
+        if self._rid_tok.size <= self.engine.config.queue_length \
+                and int(rids.max()) >= self._rid_tok.size:  # resized up
+            self._rid_tok = np.concatenate(
+                [self._rid_tok, np.zeros(int(rids.max()) + 1
+                                         - self._rid_tok.size, np.int64)])
+        self._rid_tok[rids] = toks
+        self._tok_group[toks] = -1
+        return toks
+
+    def _maybe_recycle_tokens(self) -> None:
+        super()._maybe_recycle_tokens()
+        if self._tok == 0:                 # maps recycled (staging is empty
+            self._ep_tok_start = 0         # at the loop top, so no live refs)
+
+    # ---------------------------------------------------- staged issue path
+    def _issue(self, task: Task, cmd) -> None:
+        if isinstance(cmd, (AloadVec, AstoreVec)):
+            return self._issue_vec(task, cmd)
+        # scalar commands take the immediate per-command path (staging a
+        # 1-row numpy batch costs more host time than it saves); flushing
+        # first keeps engine entry order = command order, so the trace and
+        # far-model draw sequence stay identical to the per-command loop
+        if self._fuse:
+            self._flush_epoch()
+        return super()._issue(task, cmd)
+
+    def _issue_vec(self, task: Task, cmd) -> None:
+        if not self._fuse:
+            return super()._issue_vec(task, cmd)
+        c = self.cost
+        n = len(cmd.spm)
+        acc = self._vec_acc.pop(id(task), [])
+        if n == 0:
+            self._results[id(task)] = tuple(acc)
+            self._ready.append(task)
+            return
+        # speculative ID pre-allocation: one issue + ID-batch cost per vector
+        self._tick_insts(c.ami_issue_insts + c.vec_elem_insts * n)
+        if self.dma_mode:
+            # external engines pay descriptor setup + doorbell per request
+            self._tick_insts(c.dma_descriptor_insts * n)
+            self.t += c.dma_serialize_cycles * n
+        refills = self.engine.stats["free_refills"]
+        kind = LOAD if isinstance(cmd, AloadVec) else STORE
+        rids = self.engine.stage_epoch(kind, self.t, cmd.spm, cmd.mem,
+                                       cmd.size)
+        self.t += c.refill_cycles * (self.engine.stats["free_refills"]
+                                     - refills)
+        # allocation fails as a zero suffix: full when the last rid is live
+        k = n if rids[n - 1] else int(np.count_nonzero(rids))
+        toks = self._mint_deferred(rids[:k]) if k else []
+        if k < n:
+            acc.extend(toks)
+            rest = type(cmd)(cmd.spm[k:], cmd.mem[k:], cmd.size, cmd.wait)
+            self._vec_acc[id(task)] = acc
+            self._alloc_parked.append((task, rest))
+            return
+        if acc:                             # parked earlier: stitch the tail
+            acc.extend(toks)
+            toks = tuple(acc)
+        if cmd.wait:                        # fused await: suspend at flush
+            self._ep_awaits.append((task, toks))
+        else:
+            self._results[id(task)] = toks
+            self._ready.append(task)
+
+    def _flush_epoch(self) -> None:
+        """End the epoch: one engine/far entry for everything staged, fill
+        the epoch's token done-times with one vector store, then register
+        the deferred waiter groups in command order."""
+        if not self.engine.epoch_staged and not self._ep_awaits:
+            return                          # clean epoch: flush is a no-op
+        tok_lo = self._ep_tok_start
+        dones = self.engine.flush_epoch()
+        if dones.size:
+            self._tok_time[tok_lo + 1:tok_lo + 1 + dones.size] = dones
+        self._ep_tok_start = self._tok
+        if self._ep_awaits:
+            awaits, self._ep_awaits = self._ep_awaits, []
+            for task, toks in awaits:
+                self._await_tokens(task, toks)
+
+    # -------------------------------------------------------- runtime loop
+    def run(self, tasks: Optional[Iterable[Task]] = None) -> dict:
+        if not self._fuse:
+            return super().run(tasks)
+        c = self.cost
+        for task in tasks or ():
+            self.spawn(task)
+        while self._live > 0:
+            if self._sleeping:             # arrivals whose time has come
+                self._wake_sleepers()
+            if self._tok >= self._RECYCLE_AT:
+                self._maybe_recycle_tokens()
+            if (self._n_wait_groups or self._alloc_parked
+                    or self.engine.outstanding or self.engine.finished_pending):
+                # one advance + (iff anything finished) one drain per epoch
+                rids = self.engine.getfin_epoch(self.t)
+                if rids is not None:
+                    self._tick_insts(c.getfin_insts * (len(rids) + 1))
+                    self._dispatch_fins(rids)
+                    # freed IDs: parked tasks can retry (staged, not issued)
+                    while self._alloc_parked and self.engine.free_ids:
+                        ptask, pcmd = self._alloc_parked.popleft()
+                        parked_before = len(self._alloc_parked)
+                        self._issue(ptask, pcmd)
+                        if len(self._alloc_parked) > parked_before:
+                            break
+            if self._ready:
+                # step every currently-ready task once (snapshot: tasks that
+                # re-queue themselves run again next epoch, after the poll)
+                for _ in range(len(self._ready)):
+                    task = self._ready.popleft()
+                    self._run_task(task, self._results.pop(id(task), None))
+                self._flush_epoch()
+            elif self._live > 0:
+                # a parked retry may have staged a partial vector with no
+                # task left ready: flush it before idling on completions
+                self._flush_epoch()
+                self._idle_until_completion()
+        return self.summary()
+
+
+SCHEDULER_KINDS = {"scalar": Scheduler, "batched": BatchScheduler,
+                   "fused": EpochScheduler}

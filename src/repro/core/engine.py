@@ -74,6 +74,11 @@ class SpmOverflow(ValueError):
 class AsyncEngineBase:
     """Shared SPM/config plumbing for the scalar and batched engines."""
 
+    #: True when the engine accepts epoch staging (stage_epoch/flush_epoch/
+    #: getfin_epoch); the EpochScheduler probes this and falls back to the
+    #: per-command batched protocol when it's absent.
+    supports_epoch = False
+
     def __init__(self, config: EngineConfig,
                  far_memory: Optional[FarMemoryModel] = None,
                  backing: Optional[np.ndarray] = None,
@@ -96,14 +101,23 @@ class AsyncEngineBase:
         self.trace: Optional[list] = [] if record_trace else None
         self.stats = {"aload": 0, "astore": 0, "getfin": 0, "getfin_empty": 0,
                       "alloc_fail": 0, "free_refills": 0, "fin_refills": 0}
+        # host-side observability (NOT architectural state): Python-level
+        # crossings of the AMI surface and the rows they carried. One scalar
+        # aload = 1 entry / 1 row; one flush_epoch = 1 entry / n rows.
+        self.host_entries = 0
+        self.host_rows = 0
 
     # ----------------------------------------------------------------- AMI
     def aload(self, spm_addr: int, mem_addr: int, size: Optional[int] = None) -> int:
         """Far memory -> SPM. Returns request ID, 0 if ID allocation failed."""
+        self.host_entries += 1
+        self.host_rows += 1
         return self._issue(LOAD, spm_addr, mem_addr, size)
 
     def astore(self, spm_addr: int, mem_addr: int, size: Optional[int] = None) -> int:
         """SPM -> far memory. Returns request ID, 0 if ID allocation failed."""
+        self.host_entries += 1
+        self.host_rows += 1
         return self._issue(STORE, spm_addr, mem_addr, size)
 
     def getfin_all(self) -> List[int]:
@@ -120,10 +134,14 @@ class AsyncEngineBase:
     # BatchedAsyncMemoryEngine overrides them with true vector paths.
     def aload_batch(self, spm_addrs, mem_addrs, sizes=None) -> np.ndarray:
         """Vectorized aload: returns rids (0 where ID allocation failed)."""
+        self.host_entries += 1
+        self.host_rows += int(np.size(spm_addrs))
         return self._issue_seq(LOAD, spm_addrs, mem_addrs, sizes)
 
     def astore_batch(self, spm_addrs, mem_addrs, sizes=None) -> np.ndarray:
         """Vectorized astore: returns rids (0 where ID allocation failed)."""
+        self.host_entries += 1
+        self.host_rows += int(np.size(spm_addrs))
         return self._issue_seq(STORE, spm_addrs, mem_addrs, sizes)
 
     def _issue_seq(self, kind: int, spm_addrs, mem_addrs,
@@ -360,6 +378,8 @@ class AsyncMemoryEngine(AsyncEngineBase):
     def getfin(self) -> int:
         """Return a completed request ID (0 if none). Frees the ID."""
         self.advance(self.now)
+        self.host_entries += 1
+        self.host_rows += 1
         self.stats["getfin"] += 1
         if not self._fin_cache:
             if not self._finished:
@@ -452,7 +472,19 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
     trace-identical to :class:`AsyncMemoryEngine`; the batch entry points
     (`aload_batch`/`astore_batch`/`getfin_all`) retire whole vectors per
     Python call, which is what makes latency x queue-depth sweeps tractable.
+
+    On top of those sits the **epoch surface** (`stage_epoch` /
+    `flush_epoch` / `getfin_epoch`): the EpochScheduler stages every port's
+    issue batch for a whole scheduler epoch and the engine enters the far
+    model ONCE with the concatenated SoA mega-batch
+    (:meth:`FarMemoryModel.issue_epoch`). Allocation, bounds checks and
+    store-payload capture stay at staging time (they observe live SPM/ID
+    state); far-model math, AMART scatter, trace rows and the clock advance
+    are deferred to the flush — bit-identical to issuing each staged batch
+    through `aload_batch`/`astore_batch` at its staged `now`.
     """
+
+    supports_epoch = True
 
     def __init__(self, config: EngineConfig,
                  far_memory: Optional[FarMemoryModel] = None,
@@ -480,6 +512,12 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         self._pend = np.zeros(cap, np.int64)
         self._pend_n = 0
         self._pend_min = math.inf
+        # epoch staging: (kind, now, rids, spm, mem, sizes) per staged batch
+        self._ep_segs: List[tuple] = []
+        self._ep_last_now: Optional[float] = None
+        # shared-granularity sizes arrays, reused across batch/stage calls
+        # (read-only once handed out; every consumer copies or slices)
+        self._gran_cache: Dict[int, np.ndarray] = {}
 
     # ------------------------------------------------------------------ time
     def advance(self, now: float) -> None:
@@ -492,7 +530,8 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         done = self._done_t[rids]
         due = done <= self.now
         fin = rids[due]
-        fin = fin[np.lexsort((fin, done[due]))]
+        if fin.size > 1:
+            fin = fin[np.lexsort((fin, done[due]))]
         self._move_data(fin)
         self._finished.push_many(fin)
         keep = rids[~due]
@@ -508,13 +547,25 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         load-after-store ordering on overlapping far-memory regions, and
         in-order fancy assignment keeps last-writer-wins within a run.
         """
+        if fin.size == 0:
+            return
         kinds = self._kind[fin]
-        i = 0
-        while i < fin.size:
-            j = i + 1
-            while j < fin.size and kinds[j] == kinds[i]:
-                j += 1
+        bounds = [0, *(np.flatnonzero(kinds[1:] != kinds[:-1]) + 1).tolist(),
+                  fin.size]
+        for b in range(len(bounds) - 1):
+            i, j = bounds[b], bounds[b + 1]
             run = fin[i:j]
+            if j - i <= 4:                  # few rows: in-order scalar copies
+                if kinds[i] == LOAD:        # (the reference semantics) beat
+                    for rid in run.tolist():     # the pattern analysis
+                        a, m, s = (int(self._spm_a[rid]),
+                                   int(self._mem_a[rid]), int(self._size[rid]))
+                        self.spm[a:a + s] = self.mem[m:m + s]
+                else:
+                    for rid in run.tolist():
+                        m, s = int(self._mem_a[rid]), int(self._size[rid])
+                        self.mem[m:m + s] = self._store_data[rid]
+                continue
             sizes = self._size[run]
             same_gran = sizes.size > 1 and bool((sizes == sizes[0]).all())
             if kinds[i] == LOAD:
@@ -533,7 +584,6 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
                     for rid in run:
                         m, s = int(self._mem_a[rid]), int(self._size[rid])
                         self.mem[m:m + s] = self._store_data[rid]
-            i = j
 
     def _move_loads_same_gran(self, run: np.ndarray, g: int) -> None:
         """Same-granularity load retirement: one copy per run instead of
@@ -555,8 +605,8 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         spm_a = self._spm_a[run]
         mem_a = self._mem_a[run]
         n = run.size
-        d_spm = np.diff(spm_a)
-        d_mem = np.diff(mem_a)
+        d_spm = spm_a[1:] - spm_a[:-1]
+        d_mem = mem_a[1:] - mem_a[:-1]
         if (d_spm == g).all() and (d_mem == g).all():
             s0, m0 = int(spm_a[0]), int(mem_a[0])
             self.spm[s0:s0 + n * g] = self.mem[m0:m0 + n * g]
@@ -595,9 +645,10 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         mem_a = self._mem_a[run]
         n = run.size
         # one concatenate over the captured row views — no per-rid fill loop
-        data = np.concatenate([self._store_data[rid] for rid in run]) \
-            if n > 1 else self._store_data[int(run[0])]
-        if (np.diff(mem_a) == g).all():
+        store = self._store_data
+        data = np.concatenate([store[rid] for rid in run.tolist()]) \
+            if n > 1 else store[int(run[0])]
+        if (mem_a[1:] - mem_a[:-1] == g).all():
             m0 = int(mem_a[0])
             self.mem[m0:m0 + n * g] = data
             return
@@ -656,22 +707,40 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
 
     def _alloc_ids(self, n: int) -> np.ndarray:
         """Allocate up to n IDs — state/stat-equivalent to n scalar allocs."""
-        take = min(n, self._fc.size - self._fc_head)
-        parts = [self._fc[self._fc_head:self._fc_head + take]]
-        self._fc_head += take
-        need = n - take
-        while need > 0 and len(self._free):
-            chunk = min(self.config.batch_ids, len(self._free))
-            got = self._free.pop_many(chunk)
-            self.stats["free_refills"] += 1
-            use = min(need, chunk)
+        head = self._fc_head
+        avail = self._fc.size - head
+        if n <= avail:                      # cache covers the whole batch
+            self._fc_head = head + n
+            return self._fc[head:head + n]
+        parts = [self._fc[head:]] if avail else []
+        self._fc_head = self._fc.size
+        need = n - avail
+        if need > 0 and len(self._free):
+            # replicate the batch_ids-chunked refill accounting (same
+            # free_refills count, same leftover cache) with ONE ring pop
+            bsz = self.config.batch_ids
+            fn = len(self._free)
+            refills = total = last = 0
+            rem = need
+            while rem > 0 and fn:
+                last = min(bsz, fn)
+                fn -= last
+                total += last
+                refills += 1
+                rem -= min(rem, last)
+            got = self._free.pop_many(total)
+            self.stats["free_refills"] += refills
+            use = min(need, total)
             parts.append(got[:use])
-            if use < chunk:              # leftover becomes the new cache
-                self._fc = got
-                self._fc_head = use
+            if use < total:              # leftover becomes the new cache
+                self._fc = got[total - last:]
+                self._fc_head = use - (total - last)
             need -= use
-        self.stats["alloc_fail"] += need
-        return parts[0] if len(parts) == 1 else np.concatenate(parts)
+        if need:
+            self.stats["alloc_fail"] += need
+        if len(parts) == 1:
+            return parts[0]
+        return np.concatenate(parts) if parts else self._fc[:0]
 
     def _set_request(self, rid: int, kind: int, spm_addr: int, mem_addr: int,
                      size: int, done: float) -> None:
@@ -707,6 +776,8 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
     def getfin(self) -> int:
         """Return a completed request ID (0 if none). Frees the ID."""
         self.advance(self.now)
+        self.host_entries += 1
+        self.host_rows += 1
         self.stats["getfin"] += 1
         if not self._fin_cache:
             if len(self._finished) == 0:
@@ -726,28 +797,75 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         return rid
 
     # ------------------------------------------------------- batch AMI path
-    def _issue_batch(self, kind: int, spm_addrs, mem_addrs,
-                     sizes=None) -> np.ndarray:
+    def _coerce_batch(self, spm_addrs, mem_addrs, sizes):
+        """Shared front half of the batch/epoch issue paths: int64 coercion,
+        `size or granularity`, and the vectorized SPM bounds check.
+        Returns the shared granularity `g0` too (0 for per-row sizes)."""
         spm_addrs = np.asarray(spm_addrs, np.int64)
         mem_addrs = np.asarray(mem_addrs, np.int64)
         n = spm_addrs.size
-        if sizes is None or np.ndim(sizes) == 0:
-            # shared granularity (`size or granularity`, like the scalar path)
-            sizes = np.full(n, int(sizes or 0) or self.config.granularity,
-                            np.int64)
+        if sizes is None or sizes.__class__ is int or np.ndim(sizes) == 0:
+            # shared granularity (`size or granularity`, like the scalar
+            # path); the filled array is cached and handed out read-only
+            g0 = int(sizes or 0) or self.config.granularity
+            sz = self._gran_cache.get(g0)
+            if sz is None or sz.size < n:
+                sz = np.full(max(n, 1024), g0, np.int64)
+                self._gran_cache[g0] = sz
+            sizes = sz[:n]
         else:
             # match the scalar path's `size or granularity` coercion
+            g0 = 0
             sizes = np.asarray(sizes, np.int64)
             sizes = np.where(sizes == 0, self.config.granularity, sizes)
         if n:
-            bad_mask = ((spm_addrs < 0) | (sizes < 0)
-                        | (spm_addrs + sizes > self.spm_data_bytes))
-            if bad_mask.any():
+            if g0:
+                # shared granularity: two reductions replace the row masks
+                ok = (g0 > 0 and int(spm_addrs.min()) >= 0
+                      and int(spm_addrs.max()) + g0 <= self.spm_data_bytes)
+            else:
+                ok = not bool(((spm_addrs < 0) | (sizes < 0)
+                               | (spm_addrs + sizes
+                                  > self.spm_data_bytes)).any())
+            if not ok:
+                bad_mask = ((spm_addrs < 0) | (sizes < 0)
+                            | (spm_addrs + sizes > self.spm_data_bytes))
                 bad = int(np.argmax(bad_mask))
                 raise SpmOverflow(
                     f"SPM access [{spm_addrs[bad]}, "
                     f"{spm_addrs[bad] + sizes[bad]}) "
                     f"outside data area of {self.spm_data_bytes}B")
+        return spm_addrs, mem_addrs, sizes, n, g0
+
+    def _capture_stores(self, ok: np.ndarray, k: int, spm_addrs: np.ndarray,
+                        sizes: np.ndarray, g0: int = 0) -> None:
+        """Capture astore payloads from live SPM at issue/staging time.
+        `g0` (when nonzero) promises every row shares that granularity."""
+        if g0 or (sizes[:k] == sizes[0]).all():
+            # same-granularity capture: one copy, row views out — a
+            # single reshaped slice when the source slots are contiguous
+            # (vector ports), else one fancy gather
+            g = g0 or int(sizes[0])
+            if k > 1 and (spm_addrs[1:k] - spm_addrs[:k - 1] == g).all():
+                a0 = int(spm_addrs[0])
+                rows = self.spm[a0:a0 + k * g].copy().reshape(k, g)
+            else:
+                rows = self.spm[spm_addrs[:k, None] + np.arange(g)]
+            store = self._store_data
+            for rid, row in zip(ok.tolist(), rows):
+                store[rid] = row
+        else:
+            spm, store = self.spm, self._store_data
+            for rid, a, s in zip(ok.tolist(), spm_addrs.tolist(),
+                                 sizes.tolist()):
+                store[rid] = spm[a:a + s].copy()
+
+    def _issue_batch(self, kind: int, spm_addrs, mem_addrs,
+                     sizes=None) -> np.ndarray:
+        spm_addrs, mem_addrs, sizes, n, g0 = self._coerce_batch(
+            spm_addrs, mem_addrs, sizes)
+        self.host_entries += 1
+        self.host_rows += n
         got = self._alloc_ids(n)
         k = len(got)
         rids = np.zeros(n, np.int64)
@@ -756,22 +874,7 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         ok = np.asarray(got, np.int64)
         rids[:k] = ok
         if kind == STORE:
-            if (sizes[:k] == sizes[0]).all():
-                # same-granularity capture: one copy, row views out — a
-                # single reshaped slice when the source slots are contiguous
-                # (vector ports), else one fancy gather
-                g = int(sizes[0])
-                if k > 1 and (np.diff(spm_addrs[:k]) == g).all():
-                    a0 = int(spm_addrs[0])
-                    rows = self.spm[a0:a0 + k * g].copy().reshape(k, g)
-                else:
-                    rows = self.spm[spm_addrs[:k, None] + np.arange(g)]
-                for i in range(k):
-                    self._store_data[int(ok[i])] = rows[i]
-            else:
-                for i in range(k):
-                    a, s = int(spm_addrs[i]), int(sizes[i])
-                    self._store_data[int(ok[i])] = self.spm[a:a + s].copy()
+            self._capture_stores(ok, k, spm_addrs, sizes, g0)
         done = self.far.issue_batch(self.now, sizes[:k], mem_addrs[:k])
         self._kind[ok] = kind
         self._spm_a[ok] = spm_addrs[:k]
@@ -806,6 +909,8 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         self.advance(self.now)
         c, f = len(self._fin_cache), len(self._finished)
         total = c + f
+        self.host_entries += 1
+        self.host_rows += total
         self.stats["getfin"] += total + 1
         self.stats["getfin_empty"] += 1
         if total == 0:
@@ -827,6 +932,134 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
             self.trace.extend(("fin", rid) for rid in rids)
             self.trace.append(("fin", 0))
         return rids
+
+    # ------------------------------------------------------ epoch AMI path
+    def stage_epoch(self, kind: int, now: float, spm_addrs, mem_addrs,
+                    sizes=None) -> np.ndarray:
+        """Stage one port's issue batch for the current epoch.
+
+        Everything that observes *live* state happens here, exactly as it
+        would on the immediate path: bounds validation, ID allocation from
+        the ASMC free list / ALSU cache (the free pool only shrinks between
+        the epoch-top drain and the flush, so staged allocs see the same
+        pool the per-command path would), astore payload capture from the
+        SPM as it is *now*, and the aload/astore stats. The far-model call,
+        AMART scatter, trace rows and clock advance are deferred to
+        :meth:`flush_epoch`. Returns rids (0 where allocation failed).
+        """
+        spm_addrs, mem_addrs, sizes, n, g0 = self._coerce_batch(
+            spm_addrs, mem_addrs, sizes)
+        # remember the epoch's last staged time even if nothing allocates:
+        # the flush replays the per-command path's trailing advance()
+        self._ep_last_now = float(now)
+        got = self._alloc_ids(n)
+        k = len(got)
+        if k == 0:
+            return np.zeros(n, np.int64)
+        ok = np.asarray(got, np.int64)
+        if k == n:
+            rids = ok                       # full allocation: no zero suffix
+        else:
+            rids = np.zeros(n, np.int64)
+            rids[:k] = ok
+        if kind == STORE:
+            self._capture_stores(ok, k, spm_addrs, sizes, g0)
+        self.stats["aload" if kind == LOAD else "astore"] += k
+        self._ep_segs.append((kind, float(now), ok, spm_addrs[:k],
+                              mem_addrs[:k], sizes[:k]))
+        return rids
+
+    @property
+    def epoch_staged(self) -> bool:
+        """Anything staged (or staged-and-failed) since the last flush —
+        when False, ``flush_epoch`` would be a pure no-op."""
+        return bool(self._ep_segs) or self._ep_last_now is not None
+
+    def flush_epoch(self) -> np.ndarray:
+        """Issue every staged batch with ONE far-model entry.
+
+        Segments keep their staged `now` (``issue_epoch`` replays per-link /
+        per-region draw order exactly), the AMART scatter and per-row trace
+        run over the concatenated epoch, and the final ``advance`` to the
+        last staged time reproduces the cumulative effect of the immediate
+        path's per-command advances (retirement batches concatenate to one
+        globally (done, rid)-sorted batch because due-sets partition
+        monotonically in time). Returns the done-times, epoch row order.
+        """
+        segs = self._ep_segs
+        last = self._ep_last_now
+        self._ep_segs = []
+        self._ep_last_now = None
+        if not segs:
+            if last is not None:
+                self.advance(last)
+            return np.empty(0, np.float64)
+        if len(segs) == 1:
+            # one staged batch: issue_epoch over a single segment is defined
+            # as exactly one issue_batch — take it directly, skipping the
+            # concat/repeat machinery
+            kind0, now0, ok, spm, mem, sizes = segs[0]
+            k = int(ok.size)
+            self.host_entries += 1
+            self.host_rows += k
+            done = self.far.issue_batch(now0, sizes, mem)
+            self._kind[ok] = kind0
+            self._spm_a[ok] = spm
+            self._mem_a[ok] = mem
+            self._size[ok] = sizes
+            self._issue_t[ok] = now0
+            self._done_t[ok] = done
+            self._active[ok] = True
+            self._pend[self._pend_n:self._pend_n + k] = ok
+            self._pend_n += k
+            self._pend_min = min(self._pend_min, float(done.min()))
+            if self.trace is not None:
+                for i in range(k):
+                    self.trace.append(("issue", kind0, int(ok[i]),
+                                       int(spm[i]), int(mem[i]),
+                                       int(sizes[i]), float(done[i])))
+            self.advance(last)
+            return done
+        ks = np.array([s[2].size for s in segs], np.int64)
+        seg_nows = np.array([s[1] for s in segs], np.float64)
+        seg_bounds = np.zeros(ks.size + 1, np.int64)
+        np.cumsum(ks, out=seg_bounds[1:])
+        ok = np.concatenate([s[2] for s in segs])
+        spm = np.concatenate([s[3] for s in segs])
+        mem = np.concatenate([s[4] for s in segs])
+        sizes = np.concatenate([s[5] for s in segs])
+        k = int(ok.size)
+        self.host_entries += 1
+        self.host_rows += k
+        done = self.far.issue_epoch(seg_nows, seg_bounds, sizes, mem)
+        kinds = np.repeat(np.array([s[0] for s in segs], np.int8), ks)
+        self._kind[ok] = kinds
+        self._spm_a[ok] = spm
+        self._mem_a[ok] = mem
+        self._size[ok] = sizes
+        self._issue_t[ok] = np.repeat(seg_nows, ks)
+        self._done_t[ok] = done
+        self._active[ok] = True
+        self._pend[self._pend_n:self._pend_n + k] = ok
+        self._pend_n += k
+        self._pend_min = min(self._pend_min, float(done.min()))
+        if self.trace is not None:
+            for i in range(k):
+                self.trace.append(("issue", int(kinds[i]), int(ok[i]),
+                                   int(spm[i]), int(mem[i]), int(sizes[i]),
+                                   float(done[i])))
+        self.advance(last)
+        return done
+
+    def getfin_epoch(self, now: float) -> Optional[List[int]]:
+        """Epoch-top drain: advance to `now`, then ``getfin_all`` iff
+        anything finished. Returns None when nothing was pending — the
+        same gate the per-command scheduler applies before draining, so the
+        trace/stats stay call-for-call identical."""
+        self.advance(now)
+        if not self.finished_pending:
+            return None
+        return self.getfin_all()
 
     def _reset_id_pool(self, queue_length: int) -> None:
         cap = queue_length

@@ -36,7 +36,22 @@ tests/test_farmem_regions.py): every latency distribution draws through a
 seeded ``np.random.Generator`` whose array fills consume the bitstream
 exactly like sequential scalar draws, so ``issue_batch`` is bit-identical
 to the equivalent ``issue()`` loop — per region, and across regions via
-consecutive same-region run segmentation.
+the **mixed-tier reordering path**: when every region a batch touches is
+unlimited (no ``max_inflight`` coupling), the scalar loop's cross-region
+interleaving factors exactly into independent per-link injection chains
+(rows in original order per link) and per-region latency draws (rows in
+original order per RNG stream), so an arbitrarily interleaved batch
+vectorizes without replaying run boundaries. Batches touching a
+backpressured region keep the consecutive same-region run segmentation
+(injection there is coupled to completions through a heap).
+
+:meth:`issue_epoch` extends the same factoring across a whole scheduler
+epoch of batches ("segments", each with its own issue time): per-link
+chains restart their ``max(now, free)`` only at segment boundaries and
+per-region draws concatenate, so one entry reproduces the per-command
+call sequence bit-for-bit. The sequential recurrences optionally run as
+numba kernels (``host_jit=True`` + numba importable, see
+:mod:`repro.core.hostjit`) — bit-identical to the numpy fallback.
 
 The same model backs the functional engine (zero-latency mode), the
 cycle-approximate simulator, and the runtime's host-offload tier.
@@ -48,6 +63,8 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.core import hostjit
 
 GHZ = 1e9  # cycles are expressed at the simulated core clock (paper: 3 GHz)
 
@@ -220,14 +237,19 @@ class FarMemoryConfig:
 # Internal state helpers
 # =========================================================================
 class _Ledger:
-    """Closed-form MLP ledger: completion times + sum of issue times."""
+    """Closed-form MLP ledger: completion times + sum of issue times.
 
-    __slots__ = ("dones", "n", "sum_issue")
+    ``seq_sum`` optionally points at the jitted sequential accumulator
+    (``host_jit``): same left-to-right binary adds, same bits.
+    """
 
-    def __init__(self) -> None:
+    __slots__ = ("dones", "n", "sum_issue", "seq_sum")
+
+    def __init__(self, seq_sum=None) -> None:
         self.dones = np.empty(1024, np.float64)
         self.n = 0
         self.sum_issue = 0.0
+        self.seq_sum = seq_sum
 
     def record(self, issue_t: float, done: float) -> None:
         if self.n == self.dones.size:
@@ -251,8 +273,12 @@ class _Ledger:
         if np.ndim(issue_t):
             # sequential adds keep the ledger bit-identical to n scalar
             # record() calls (np.sum's pairwise order differs in float)
-            for v in issue_t:
-                self.sum_issue += float(v)
+            if self.seq_sum is not None:
+                self.sum_issue = float(self.seq_sum(
+                    np.asarray(issue_t, np.float64), self.sum_issue))
+            else:
+                for v in issue_t:
+                    self.sum_issue += float(v)
         else:
             self.sum_issue += float(issue_t) * done.size
 
@@ -287,26 +313,34 @@ class _RegionState:
                  "requests", "bytes_moved")
 
     def __init__(self, region: FarMemoryRegion, link: _Link,
-                 rng: np.random.Generator) -> None:
+                 rng: np.random.Generator, seq_sum=None) -> None:
         self.region = region
         self.link = link
         self.rng = rng
         self.token = 0
         self.inflight: List[Tuple[float, int]] = []
-        self.ledger = _Ledger()
+        self.ledger = _Ledger(seq_sum)
         self.requests = 0
         self.bytes_moved = 0
 
 
 class FarMemoryModel:
-    """Timed far-memory device. All times in core cycles (float)."""
+    """Timed far-memory device. All times in core cycles (float).
 
-    def __init__(self, config: FarMemoryConfig):
+    ``host_jit=True`` swaps the sequential injection-chain / ledger
+    recurrences for numba kernels when numba is importable (pure-numpy
+    fallback otherwise) — results are bit-identical either way.
+    """
+
+    def __init__(self, config: FarMemoryConfig, host_jit: bool = False):
         self.config = config
+        self.host_jit = bool(host_jit)
+        self._jit_chain = hostjit.get_chain(self.host_jit)
+        seq_sum = hostjit.get_seq_sum(self.host_jit)
         self._link_free = 0.0
         self._rng = np.random.default_rng(config.seed)
         self._token = 0
-        self._ledger = _Ledger()
+        self._ledger = _Ledger(seq_sum)
         # event heap, used only in max_inflight (backpressure) mode
         self._inflight: List[Tuple[float, int]] = []
         # stats
@@ -318,11 +352,29 @@ class FarMemoryModel:
             links: Dict[str, _Link] = {}
             self._regions = [
                 _RegionState(r, links.setdefault(r.link or r.name, _Link()),
-                             np.random.default_rng(config.seed + i))
+                             np.random.default_rng(config.seed + i), seq_sum)
                 for i, r in enumerate(config.regions)]
             self._starts = np.array([r.start for r in config.regions],
                                     np.int64)
             self._ends = np.array([r.end for r in config.regions], np.int64)
+            # reordering-path tables: per-region bandwidth / backpressure
+            # flags and a dense link index (regions sharing a _Link share an
+            # index), so a mixed batch routes to per-link chains without
+            # touching Python objects per row
+            self._links: List[_Link] = []
+            link_ix: Dict[int, int] = {}
+            lt = []
+            for st in self._regions:
+                ix = link_ix.setdefault(id(st.link), len(self._links))
+                if ix == len(self._links):
+                    self._links.append(st.link)
+                lt.append(ix)
+            self._link_table = np.array(lt, np.int64)
+            self._bw_table = np.array(
+                [r.bandwidth_bytes_per_cycle for r in config.regions],
+                np.float64)
+            self._mi_table = np.array(
+                [r.max_inflight for r in config.regions], np.int64)
 
     # -- accounting ---------------------------------------------------------
     def inflight_at(self, now: float) -> int:
@@ -568,13 +620,12 @@ class FarMemoryModel:
         self.bytes_moved += size
         return done
 
-    def _region_issue_batch_routed(self, now: float, sizes: np.ndarray,
-                                   addrs) -> np.ndarray:
+    def _route_batch(self, sizes: np.ndarray, addrs) -> np.ndarray:
+        """Vectorized routing + validation: region index per row."""
         if addrs is None:
             raise ValueError("heterogeneous far memory routes by address; "
                              "issue_batch() needs addrs")
         addrs = np.asarray(addrs, np.int64)
-        n = sizes.size
         idx = np.searchsorted(self._starts, addrs, side="right") - 1
         safe = np.clip(idx, 0, len(self._regions) - 1)
         bad = ((idx < 0) | (addrs >= self._ends[safe])
@@ -583,6 +634,19 @@ class FarMemoryModel:
             # re-raise through the scalar validator for the precise message
             b = int(np.argmax(bad))
             self._route(int(addrs[b]), int(sizes[b]))
+        return idx
+
+    def _region_issue_batch_routed(self, now: float, sizes: np.ndarray,
+                                   addrs) -> np.ndarray:
+        idx = self._route_batch(sizes, addrs)
+        n = sizes.size
+        involved = np.unique(idx)
+        if involved.size > 1 and not self._mi_table[involved].any():
+            # mixed-tier reordering path: arbitrary interleavings of
+            # unlimited regions vectorize as per-link chains + per-region
+            # draws (bit-identical to the scalar loop; see issue_epoch)
+            return self._fused_routed(np.array([now], np.float64),
+                                      np.array([0, n], np.int64), sizes, idx)
         dones = np.empty(n, np.float64)
         i = 0
         while i < n:                    # consecutive same-region runs
@@ -597,6 +661,217 @@ class FarMemoryModel:
                 dones[i:j] = self._region_batch(st, now, sizes[i:j])
             i = j
         return dones
+
+    def _chain_inject(self, seg_nows, seg_bounds, serial, link_ids,
+                      free) -> np.ndarray:
+        """Per-link injection chains across segments, in row order.
+
+        ``free`` is a float64 array of per-link next-free times, updated in
+        place. Bit-identical to the scalar per-row recurrence
+        ``inj = max(now_seg(i), free[l_i]); free[l_i] = inj + serial_i``:
+        within one (segment, link) chunk the link's free time can only stay
+        at/above that segment's `now` after the first row, so the inner rows
+        collapse to the same left-to-right ``np.cumsum`` the single-region
+        batch path uses. The jitted kernel runs the recurrence directly —
+        same sequential binary ops, same bits.
+        """
+        n = serial.size
+        injects = np.empty(n, np.float64)
+        if self._jit_chain is not None:
+            nows_row = np.repeat(seg_nows, np.diff(seg_bounds))
+            self._jit_chain(nows_row, serial, link_ids, free, injects)
+            return injects
+        if free.size == 1:
+            # single link (flat model, or all regions on one channel): the
+            # per-link grouping is the identity, so each segment is one
+            # contiguous cumsum chunk
+            f = float(free[0])
+            for s in range(seg_nows.size):
+                lo, hi = int(seg_bounds[s]), int(seg_bounds[s + 1])
+                if lo == hi:
+                    continue
+                inj = injects[lo:hi]
+                inj[0] = max(float(seg_nows[s]), f)
+                inj[1:] = serial[lo:hi - 1]
+                np.cumsum(inj, out=inj)
+                f = float(inj[-1]) + float(serial[hi - 1])
+            free[0] = f
+            return injects
+        for s in range(seg_nows.size):
+            lo, hi = int(seg_bounds[s]), int(seg_bounds[s + 1])
+            if lo == hi:
+                continue
+            now_s = float(seg_nows[s])
+            seg_links = link_ids[lo:hi]
+            for ix in np.unique(seg_links):
+                rows = lo + np.flatnonzero(seg_links == ix)
+                ser = serial[rows]
+                inj = np.empty(rows.size, np.float64)
+                inj[0] = max(now_s, float(free[ix]))
+                inj[1:] = ser[:-1]
+                np.cumsum(inj, out=inj)
+                injects[rows] = inj
+                free[ix] = float(inj[-1]) + float(ser[-1])
+        return injects
+
+    def _fused_routed_small(self, seg_nows, seg_bounds, sizes,
+                            idx) -> np.ndarray:
+        """`_fused_routed` for a handful of rows (serving epochs under
+        open-loop arrivals carry ~4): the same factoring run as Python
+        loops, skipping the unique/flatnonzero machinery whose fixed cost
+        dominates at this scale. Bit-identical — draws happen in the same
+        ascending-region order with the same chunk counts, the per-link
+        injection recurrence is the same sequence of float ops the cumsum
+        chunks reduce to, and ledger/stat chunks keep the per-(segment,
+        region) association."""
+        n = sizes.size
+        il = idx.tolist()
+        serial = sizes / self._bw_table[idx]
+        lat = np.empty(n, np.float64)
+        for ri in sorted(set(il)):
+            rows = [i for i, r in enumerate(il) if r == ri]
+            lat[rows] = self._region_lat(self._regions[ri], len(rows))
+        links = self._link_table[idx].tolist()
+        free = {ix: float(l.free) for ix, l in enumerate(self._links)}
+        injects = np.empty(n, np.float64)
+        bounds = seg_bounds.tolist()
+        nows = seg_nows.tolist()
+        for s in range(len(nows)):
+            now_s = nows[s]
+            for i in range(bounds[s], bounds[s + 1]):
+                ix = links[i]
+                inj = free[ix]
+                if now_s > inj:
+                    inj = now_s
+                injects[i] = inj
+                free[ix] = inj + float(serial[i])
+        for ix, l in enumerate(self._links):
+            l.free = free[ix]
+        done = injects + serial + lat
+        for s in range(len(nows)):
+            lo, hi = bounds[s], bounds[s + 1]
+            if lo == hi:
+                continue
+            seg = il[lo:hi]
+            for ri in sorted(set(seg)):
+                rows = [lo + i for i, r in enumerate(seg) if r == ri]
+                st = self._regions[ri]
+                st.ledger.record_batch(nows[s], done[rows])
+                nb = int(sizes[rows].sum())
+                st.requests += len(rows)
+                st.bytes_moved += nb
+                self.requests += len(rows)
+                self.bytes_moved += nb
+        return done
+
+    def _fused_routed(self, seg_nows, seg_bounds, sizes,
+                      idx) -> np.ndarray:
+        """Reordered mixed-tier issue over unlimited regions.
+
+        The scalar loop's per-row work factors exactly: latency draws only
+        touch the row's region RNG (per-region fills in row order consume
+        each bitstream identically), injection only touches the row's link
+        (per-link chains in row order reproduce the interleaved link_free
+        evolution), and nothing couples to completions (no backpressure).
+        Ledger/stat updates chunk per (segment, region) to mirror the
+        per-command batch path's float association.
+        """
+        n = sizes.size
+        if n <= 16 and self._jit_chain is None:
+            return self._fused_routed_small(seg_nows, seg_bounds, sizes, idx)
+        serial = sizes / self._bw_table[idx]
+        lat = np.empty(n, np.float64)
+        for ri in np.unique(idx):
+            rows = np.flatnonzero(idx == ri)
+            lat[rows] = self._region_lat(self._regions[int(ri)], rows.size)
+        free = np.array([l.free for l in self._links], np.float64)
+        injects = self._chain_inject(seg_nows, seg_bounds, serial,
+                                     self._link_table[idx], free)
+        for ix, link in enumerate(self._links):
+            link.free = float(free[ix])
+        done = injects + serial + lat
+        for s in range(seg_nows.size):
+            lo, hi = int(seg_bounds[s]), int(seg_bounds[s + 1])
+            if lo == hi:
+                continue
+            now_s = float(seg_nows[s])
+            seg_idx = idx[lo:hi]
+            for ri in np.unique(seg_idx):
+                rows = lo + np.flatnonzero(seg_idx == ri)
+                st = self._regions[int(ri)]
+                st.ledger.record_batch(now_s, done[rows])
+                nb = int(sizes[rows].sum())
+                st.requests += rows.size
+                st.bytes_moved += nb
+                self.requests += rows.size
+                self.bytes_moved += nb
+        return done
+
+    def _fused_flat(self, seg_nows, seg_bounds, sizes) -> np.ndarray:
+        """Epoch-fused issue against the flat (regionless) unlimited model."""
+        cfg = self.config
+        n = sizes.size
+        serial = sizes / cfg.bandwidth_bytes_per_cycle
+        free = np.array([self._link_free], np.float64)
+        injects = self._chain_inject(seg_nows, seg_bounds, serial,
+                                     np.zeros(n, np.int64), free)
+        self._link_free = float(free[0])
+        if cfg.distribution is not None:
+            lat = cfg.base_latency_cycles * cfg.distribution.draw(self._rng, n)
+            done = injects + serial + lat
+        elif cfg.jitter_frac:
+            lat = cfg.base_latency_cycles * (
+                1.0 + cfg.jitter_frac * self._rng.uniform(-1.0, 1.0, size=n))
+            done = injects + serial + lat
+        else:
+            done = injects + serial + cfg.base_latency_cycles
+        for s in range(seg_nows.size):
+            lo, hi = int(seg_bounds[s]), int(seg_bounds[s + 1])
+            if lo != hi:
+                self._ledger.record_batch(float(seg_nows[s]), done[lo:hi])
+        self.requests += n
+        self.bytes_moved += int(sizes.sum())
+        return done
+
+    def issue_epoch(self, seg_nows, seg_bounds, sizes,
+                    addrs=None) -> np.ndarray:
+        """One far-memory entry for a whole scheduler epoch of batches.
+
+        ``seg_bounds`` (length S+1) partitions the rows into S segments;
+        segment s was issued at ``seg_nows[s]``. Bit-identical to calling
+        ``issue_batch(seg_nows[s], sizes[lo:hi], addrs[lo:hi])`` once per
+        segment: fully fused when nothing the epoch touches is
+        backpressured, otherwise an exact per-segment replay (injection
+        under ``max_inflight`` is coupled to completions through a heap,
+        which no reordering can untangle).
+        """
+        sizes = np.asarray(sizes, np.float64)
+        seg_nows = np.asarray(seg_nows, np.float64)
+        seg_bounds = np.asarray(seg_bounds, np.int64)
+        n = sizes.size
+        if n == 0:
+            return np.empty(0, np.float64)
+        if self._regions is not None:
+            addrs = np.asarray(addrs, np.int64) if addrs is not None else None
+            idx = self._route_batch(sizes, addrs)
+            if not self._mi_table[np.unique(idx)].any():
+                return self._fused_routed(seg_nows, seg_bounds, sizes, idx)
+            out = np.empty(n, np.float64)
+            for s in range(seg_nows.size):
+                lo, hi = int(seg_bounds[s]), int(seg_bounds[s + 1])
+                if lo != hi:
+                    out[lo:hi] = self._region_issue_batch_routed(
+                        float(seg_nows[s]), sizes[lo:hi], addrs[lo:hi])
+            return out
+        if self.config.max_inflight:
+            out = np.empty(n, np.float64)
+            for s in range(seg_nows.size):
+                lo, hi = int(seg_bounds[s]), int(seg_bounds[s + 1])
+                if lo != hi:
+                    out[lo:hi] = self._issue_batch_backpressured(
+                        float(seg_nows[s]), sizes[lo:hi])
+            return out
+        return self._fused_flat(seg_nows, seg_bounds, sizes)
 
     def _region_batch(self, st: _RegionState, now: float,
                       sizes: np.ndarray) -> np.ndarray:
@@ -706,3 +981,11 @@ class InstantMemory(FarMemoryModel):
         self.requests += sizes.size
         self.bytes_moved += int(sizes.sum()) if sizes.size else 0
         return np.full(sizes.size, now, np.float64)
+
+    def issue_epoch(self, seg_nows, seg_bounds, sizes,
+                    addrs=None) -> "np.ndarray":
+        sizes = np.asarray(sizes)
+        self.requests += sizes.size
+        self.bytes_moved += int(sizes.sum()) if sizes.size else 0
+        return np.repeat(np.asarray(seg_nows, np.float64),
+                         np.diff(np.asarray(seg_bounds, np.int64)))

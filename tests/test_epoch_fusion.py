@@ -1,0 +1,429 @@
+"""Epoch-fused command plane: differential + property tests.
+
+The contract under test (TESTING.md "Epoch fusion"): the fused scheduler
+(`EpochScheduler`, ``AmuConfig(scheduler="fused")`` — the ``"auto"``
+default on the batched engine) stages every port's vector commands for a
+whole scheduler epoch and enters the engine/far model ONCE per epoch, yet
+stays **bit-identical** to the per-command `BatchScheduler` on the same
+engine: same issue/fin trace, same engine stats, same RNG bitstream
+consumption (latency draws), same SPM/far-memory bytes, same summary.
+The far model's ``issue_epoch`` must likewise be bit-identical to the
+per-segment ``issue_batch`` sequence it replaces — including the
+mixed-tier reordered path, which vectorizes across regions/links only
+when every involved region is unlimited.
+
+`hypothesis` optional — tests/proplib.py falls back to seeded-random
+example generation.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from proplib import given, settings, st
+
+from repro.amu import AmuConfig, AmuSession, REGISTRY, far_region
+from repro.configs.base import EngineConfig
+from repro.core.coroutines import (AloadNoWait, AloadVec, Aload, Astore,
+                                   AstoreNoWait, AstoreVec, AwaitRids,
+                                   BatchScheduler, Cost, EpochScheduler, Now,
+                                   SpmRead, SpmWrite, WaitUntil)
+from repro.core.engine import BatchedAsyncMemoryEngine, make_engine
+from repro.core.farmem import (BimodalTail, FarMemoryConfig, FarMemoryModel,
+                               hostjit)
+
+SCHEDS = {"batched": BatchScheduler, "fused": EpochScheduler}
+
+
+def _tier_regions(table_bytes, shared_link=True, max_inflight=(0, 0, 0)):
+    third = (table_bytes // 3) // 8 * 8
+    link = "switch" if shared_link else None
+    return [far_region("local", 0, third, 0.08,
+                       max_inflight=max_inflight[0]),
+            far_region("cxl", third, third, 1.0, link=link,
+                       max_inflight=max_inflight[1],
+                       distribution=BimodalTail(0.1, 8.0)),
+            far_region("xswitch", 2 * third, table_bytes - 2 * third, 5.0,
+                       link=link, max_inflight=max_inflight[2])]
+
+
+def _session_pair(wl, *, far=None, vector=False, engine="batched",
+                  host_jit=False, **build_kw):
+    """Run `wl` under the batched vs fused scheduler; return both capture
+    tuples (stats, trace, engine stats, mem)."""
+    out = {}
+    for sched in ("batched", "fused"):
+        cfg = AmuConfig(engine=engine, scheduler=sched, vector=vector,
+                        far=far, host_jit=host_jit)
+        with AmuSession(cfg) as s:
+            stats = s.run(wl, record_trace=True, **build_kw)
+            assert stats.verified is True
+            out[sched] = (stats, list(s.engine.trace), dict(s.engine.stats),
+                          s.engine.mem.copy(), s.engine.spm.copy())
+    return out["batched"], out["fused"]
+
+
+def _assert_pair_identical(a, b):
+    (st_a, tr_a, es_a, mem_a, spm_a) = a
+    (st_b, tr_b, es_b, mem_b, spm_b) = b
+    assert tr_a == tr_b
+    assert es_a == es_b
+    assert np.array_equal(mem_a, mem_b)
+    assert np.array_equal(spm_a, spm_b)
+    # dataclass equality skips wall-clock fields (us_per_entry) but engine
+    # entry counts intentionally DIFFER between the two loops — compare
+    # everything else
+    da, db = st_a.to_dict(), st_b.to_dict()
+    for k in ("engine_entries", "rows_per_entry"):
+        da.pop(k), db.pop(k)
+    assert da == db
+
+
+# =========================================================================
+# Workload-level: fused == batched on every registered port
+# =========================================================================
+@pytest.mark.parametrize("wl", REGISTRY.names())
+def test_fused_trace_identical_scalar_port(wl):
+    _assert_pair_identical(*_session_pair(wl))
+
+
+@pytest.mark.parametrize("wl", REGISTRY.vector_names())
+def test_fused_trace_identical_vector_port(wl):
+    _assert_pair_identical(*_session_pair(wl, vector=True))
+
+
+@pytest.mark.parametrize("vector", [False, True], ids=["scalar", "vector"])
+def test_fused_identical_mixed_tier_gups(vector):
+    """Mixed-tier far memory with a shared channel + bimodal tail: the
+    reordered fused path must replay per-link injection chains and
+    per-region RNG draw order exactly."""
+    kw = dict(table_words=2048, updates=512, coroutines=64, distinct=True)
+    _assert_pair_identical(*_session_pair(
+        "GUPS", far=_tier_regions(2048 * 8), vector=vector, **kw))
+
+
+@pytest.mark.parametrize("vector", [False, True], ids=["scalar", "vector"])
+def test_fused_identical_backpressured_regions(vector):
+    """One backpressured tier forces the exact per-segment replay path."""
+    kw = dict(table_words=2048, updates=512, coroutines=64, distinct=True)
+    _assert_pair_identical(*_session_pair(
+        "GUPS", far=_tier_regions(2048 * 8, max_inflight=(0, 8, 4)),
+        vector=vector, **kw))
+
+
+@pytest.mark.parametrize("arrival", ["poisson", "bursty"])
+@pytest.mark.parametrize("vector", [False, True], ids=["scalar", "vector"])
+def test_fused_identical_paged_kv_serve(arrival, vector):
+    """The serving workload mixes WaitUntil sleeps, Now timestamps, scalar
+    and vector AMIs against tiered far memory — the hardest fusion case
+    (and the regression surface for the deferred token-window bug: scalar
+    tokens minted between flushes must advance the epoch window)."""
+    from repro.core.serving import serve_regions
+    out = {}
+    for sched in ("batched", "fused"):
+        cfg = AmuConfig(scheduler=sched, far=serve_regions(requests=96),
+                        vector=vector)
+        with AmuSession(cfg) as s:
+            stats = s.run("paged_kv_serve", record_trace=True, requests=96,
+                          coroutines=16, arrival=arrival)
+            assert stats.verified is True
+            out[sched] = (stats, list(s.engine.trace), s.engine.mem.copy())
+    (st_a, tr_a, mem_a), (st_b, tr_b, mem_b) = out["batched"], out["fused"]
+    assert tr_a == tr_b
+    assert np.array_equal(mem_a, mem_b)
+    assert st_a.req_mean_us == st_b.req_mean_us
+    assert st_a.req_p99_us == st_b.req_p99_us
+    assert st_a.req_p999_us == st_b.req_p999_us
+    assert st_a.cycles == st_b.cycles
+
+
+# =========================================================================
+# Far-model level: issue_epoch == per-segment issue_batch
+# =========================================================================
+def _far_pair(cfg, host_jit=False):
+    return (FarMemoryModel(dataclasses.replace(cfg)),
+            FarMemoryModel(dataclasses.replace(cfg), host_jit=host_jit))
+
+
+def _random_epochs(rng, n_epochs, addr_space, max_segs=5, max_rows=24,
+                   align=8):
+    """Random (seg_nows, seg_bounds, sizes, addrs) epoch batches with
+    non-decreasing segment times across the whole stream. Requests are
+    `align`-aligned with sizes <= align so none straddles a region edge
+    (region starts are multiples of 64 in these fixtures)."""
+    t = 0.0
+    epochs = []
+    size_pool = [s for s in (8, 64, 256) if s <= align] or [align]
+    for _ in range(n_epochs):
+        n_segs = int(rng.integers(1, max_segs + 1))
+        ks = rng.integers(1, max_rows + 1, size=n_segs)
+        bounds = np.zeros(n_segs + 1, np.int64)
+        np.cumsum(ks, out=bounds[1:])
+        nows = np.empty(n_segs)
+        for s in range(n_segs):
+            t += float(rng.uniform(0.0, 400.0))
+            nows[s] = t
+        n = int(bounds[-1])
+        sizes = rng.choice(size_pool, size=n).astype(np.int64)
+        addrs = (rng.integers(0, addr_space // align, size=n)
+                 * align).astype(np.int64)
+        epochs.append((nows, bounds, sizes, addrs))
+    return epochs
+
+
+@pytest.mark.parametrize("variant", ["plain", "jitter", "tail", "inflight"])
+def test_issue_epoch_matches_issue_batch_flat(variant):
+    kw = {}
+    if variant == "jitter":
+        kw["jitter_frac"] = 0.3
+    elif variant == "tail":
+        kw["distribution"] = BimodalTail(0.2, 6.0)
+    elif variant == "inflight":
+        kw["max_inflight"] = 6
+    cfg = FarMemoryConfig.from_latency_us(1.0, **kw)
+    a, b = _far_pair(cfg)
+    rng = np.random.default_rng(7)
+    last = 0.0
+    for nows, bounds, sizes, addrs in _random_epochs(rng, 12, 1 << 16,
+                                                     align=256):
+        ref = np.empty(sizes.size)
+        for s in range(nows.size):
+            lo, hi = int(bounds[s]), int(bounds[s + 1])
+            ref[lo:hi] = a.issue_batch(float(nows[s]), sizes[lo:hi],
+                                       addrs[lo:hi])
+        got = b.issue_epoch(nows, bounds, sizes, addrs)
+        assert np.array_equal(ref, got), variant
+        last = max(last, float(np.max(ref)))
+    assert a.avg_mlp(last + 1.0) == b.avg_mlp(last + 1.0)
+    assert a.requests == b.requests and a.bytes_moved == b.bytes_moved
+
+
+@pytest.mark.parametrize("shared_link", [False, True],
+                         ids=["own-links", "shared-channel"])
+@pytest.mark.parametrize("inflight", [(0, 0, 0), (0, 8, 0)],
+                         ids=["unlimited", "backpressured"])
+def test_issue_epoch_matches_issue_batch_regions(shared_link, inflight):
+    """Routed mixed-tier epochs: the reordered fused path (all-unlimited)
+    and the per-segment replay (any backpressure) are both bit-identical
+    to the sequential per-segment issue — latencies, RNG draws, ledgers,
+    per-region stats."""
+    space = 3 * 4096 * 8
+    regions = tuple(r for r in _tier_regions(space, shared_link=shared_link,
+                                             max_inflight=inflight))
+    cfg = FarMemoryConfig(regions=regions)
+    a, b = _far_pair(cfg)
+    rng = np.random.default_rng(11)
+    last = 0.0
+    for nows, bounds, sizes, addrs in _random_epochs(rng, 12, space,
+                                                     align=64):
+        ref = np.empty(sizes.size)
+        for s in range(nows.size):
+            lo, hi = int(bounds[s]), int(bounds[s + 1])
+            ref[lo:hi] = a.issue_batch(float(nows[s]), sizes[lo:hi],
+                                       addrs[lo:hi])
+        got = b.issue_epoch(nows, bounds, sizes, addrs)
+        assert np.array_equal(ref, got)
+        last = max(last, float(np.max(ref)))
+    assert a.region_stats(last + 1.0) == b.region_stats(last + 1.0)
+    assert a.avg_mlp(last + 1.0) == b.avg_mlp(last + 1.0)
+
+
+def test_host_jit_falls_back_and_stays_identical():
+    """`host_jit=True` must be bit-identical to the numpy paths whether or
+    not numba is importable (in this container it is not — the knob must
+    degrade silently)."""
+    cfg = FarMemoryConfig(regions=tuple(_tier_regions(3 * 4096 * 8)))
+    a, b = _far_pair(cfg, host_jit=True)
+    assert isinstance(hostjit.numba_available(), bool)
+    if not hostjit.numba_available():
+        assert b._jit_chain is None      # graceful degrade, no import error
+    rng = np.random.default_rng(23)
+    for nows, bounds, sizes, addrs in _random_epochs(rng, 8, 3 * 4096 * 8,
+                                                     align=64):
+        ref = np.empty(sizes.size)
+        for s in range(nows.size):
+            lo, hi = int(bounds[s]), int(bounds[s + 1])
+            ref[lo:hi] = a.issue_batch(float(nows[s]), sizes[lo:hi],
+                                       addrs[lo:hi])
+        assert np.array_equal(ref, b.issue_epoch(nows, bounds, sizes, addrs))
+
+
+def test_host_jit_session_identical():
+    a, _ = _session_pair("GUPS", vector=True, table_words=2048, updates=512,
+                         coroutines=32)
+    b, _ = _session_pair("GUPS", vector=True, host_jit=True,
+                         table_words=2048, updates=512, coroutines=32)
+    assert a[1] == b[1]                  # trace
+    assert a[0].to_dict() == b[0].to_dict()
+
+
+# =========================================================================
+# Scheduler-level properties (proplib): random mixed ports
+# =========================================================================
+def _drive(sched_kind, tasks_fn, qlen=48, latency_us=1.0):
+    cfg = EngineConfig(queue_length=qlen, granularity=8,
+                       spm_bytes=64 * 1024, batch_ids=16)
+    far = FarMemoryModel(FarMemoryConfig.from_latency_us(latency_us))
+    eng = BatchedAsyncMemoryEngine(cfg, far, record_trace=True)
+    eng.mem[:8192] = (np.arange(8192) % 251).astype(np.uint8)
+    sched = SCHEDS[sched_kind](eng)
+    summary = sched.run(tasks_fn())
+    eng.drain()
+    eng.check_invariants()
+    return summary, eng
+
+
+@given(seed=st.integers(0, 1 << 20), n_tasks=st.integers(1, 6))
+@settings(max_examples=20, deadline=None)
+def test_random_mixed_ports_fused_identical(seed, n_tasks):
+    """Random interleavings of scalar Aload/Astore, vector gathers/scatters
+    (awaited and not), SpmRead/Write and Cost — fused == batched, bit for
+    bit. Covers the scalar-between-epochs token-window case by
+    construction."""
+    def mk_tasks():
+        rng = np.random.default_rng(seed)
+
+        def task(tid):
+            base = tid * 512
+            for _ in range(int(rng.integers(2, 7))):
+                op = int(rng.integers(0, 5))
+                k = int(rng.integers(1, 9))
+                slots = base + rng.permutation(16)[:k] * 8
+                addrs = (rng.integers(0, 1000, size=k) * 8)
+                if op == 0:
+                    if rng.integers(0, 2):       # awaiting scalar load
+                        yield Aload(int(slots[0]), int(addrs[0]), 8)
+                    else:                        # deferred token + AwaitRids
+                        tok = yield AloadNoWait(int(slots[0]),
+                                                int(addrs[0]), 8)
+                        yield AwaitRids([tok])
+                elif op == 1:
+                    yield SpmWrite(int(slots[0]),
+                                   bytes([tid & 0xFF]) * 8)
+                    if rng.integers(0, 2):
+                        yield Astore(int(slots[0]), int(addrs[0]), 8)
+                    else:
+                        tok = yield AstoreNoWait(int(slots[0]),
+                                                 int(addrs[0]), 8)
+                        yield AwaitRids([tok])
+                elif op == 2:
+                    yield AloadVec(slots, addrs, 8,
+                                   wait=bool(rng.integers(0, 2)))
+                elif op == 3:
+                    yield SpmWrite(int(slots.min()), bytes(range(128)))
+                    yield AstoreVec(slots, addrs, 8, wait=True)
+                else:
+                    yield Cost(insts=float(rng.integers(0, 300)))
+                    yield SpmRead(int(slots[0]), 8)
+
+        return [task(t) for t in range(n_tasks)]
+
+    (sum_a, eng_a) = _drive("batched", mk_tasks)
+    (sum_b, eng_b) = _drive("fused", mk_tasks)
+    assert eng_a.trace == eng_b.trace
+    assert eng_a.stats == eng_b.stats
+    assert sum_a == sum_b
+    assert np.array_equal(eng_a.spm, eng_b.spm)
+    assert np.array_equal(eng_a.mem, eng_b.mem)
+
+
+@given(seed=st.integers(0, 1 << 20))
+@settings(max_examples=20, deadline=None)
+def test_waituntil_now_under_fusion(seed):
+    """Satellite property: sleepers are never fused past their wake time —
+    every post-wake Now() reads >= the requested wake — and the whole
+    observable run (summary, Now observations, trace) is bit-identical
+    between the fused and per-command schedulers."""
+    rng0 = np.random.default_rng(seed)
+    wakes = np.sort(rng0.uniform(0.0, 30000.0, size=6))
+
+    def mk_tasks():
+        obs = []
+
+        def task(tid, wake):
+            yield WaitUntil(wake)
+            t0 = yield Now()
+            obs.append((tid, t0))
+            assert t0 >= wake          # never woken early / fused past wake
+            slots = tid * 256 + np.arange(4) * 8
+            yield AloadVec(slots, slots, 8, wait=True)
+            t1 = yield Now()
+            obs.append((tid, t1))
+
+        tasks = [task(i, float(w)) for i, w in enumerate(wakes)]
+        return tasks, obs
+
+    captured = {}
+    for kind in ("batched", "fused"):
+        tasks, obs = mk_tasks()
+        summary, eng = _drive(kind, lambda: tasks)
+        captured[kind] = (summary, list(obs), list(eng.trace))
+    assert captured["batched"] == captured["fused"]
+
+
+def test_idle_jump_lands_exactly_on_sleeper_wake():
+    """With one far-future sleeper and one fast worker, the idle path must
+    jump exactly to the sleeper's wake — its first Now() reads exactly W —
+    on both scheduler kinds."""
+    W = 1.0e6
+
+    def mk_tasks():
+        obs = []
+
+        def sleeper():
+            yield WaitUntil(W)
+            t0 = yield Now()
+            obs.append(t0)
+
+        def worker():
+            slots = 1024 + np.arange(8) * 8
+            yield AloadVec(slots, slots, 8, wait=True)
+
+        return [sleeper(), worker()], obs
+
+    for kind in ("batched", "fused"):
+        tasks, obs = mk_tasks()
+        _drive(kind, lambda: tasks)
+        assert obs == [W]
+
+
+def test_fused_scheduler_falls_back_on_scalar_engine():
+    """EpochScheduler on the oracle engine (no epoch surface) must behave
+    exactly like the BatchScheduler it inherits from."""
+    out = {}
+    for sched in ("batched", "fused"):
+        cfg = AmuConfig(engine="scalar", scheduler=sched, vector=True)
+        with AmuSession(cfg) as s:
+            stats = s.run("GUPS", record_trace=True, table_words=2048,
+                          updates=512, coroutines=32)
+            assert stats.verified is True
+            out[sched] = (stats.to_dict(), list(s.engine.trace))
+    assert out["batched"] == out["fused"]
+
+
+# =========================================================================
+# Host-side observability counters (RunStats satellites)
+# =========================================================================
+def test_engine_entry_counters_collapse_under_fusion():
+    kw = dict(table_words=2048, updates=2048, coroutines=32, vec_chunk=32)
+    ent = {}
+    for sched in ("batched", "fused"):
+        with AmuSession(AmuConfig(scheduler=sched, vector=True)) as s:
+            stats = s.run("GUPS", **kw)
+        assert stats.engine_entries > 0
+        assert stats.rows_per_entry > 0
+        assert stats.us_per_entry > 0
+        ent[sched] = stats
+    # one engine entry per epoch beats one per command by a wide margin
+    assert ent["fused"].engine_entries < ent["batched"].engine_entries / 2
+    assert ent["fused"].rows_per_entry > ent["batched"].rows_per_entry * 2
+
+
+def test_wall_clock_fields_stay_out_of_model_identity():
+    with AmuSession(AmuConfig(vector=True)) as s:
+        stats = s.run("GUPS", table_words=2048, updates=512, coroutines=32)
+    assert "us_per_entry" not in stats.to_dict()
+    assert "us_per_entry" not in stats.keys()
+    assert "engine_entries" in stats.keys()
+    with pytest.raises(KeyError):
+        stats["us_per_entry"]
+    assert stats.us_per_entry > 0        # still readable as an attribute

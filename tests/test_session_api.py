@@ -71,9 +71,13 @@ def test_config_resolution():
     assert ecfg.batch_ids == 1                 # DMA-mode ablation
     assert ecfg.queue_length == 64             # port sizing preserved
     assert AmuConfig(scheduler="auto", engine="batched").scheduler_kind \
-        == "batched"
+        == "fused"                             # epoch-fused on SoA engine
+    assert AmuConfig(scheduler="auto", engine="scalar").scheduler_kind \
+        == "scalar"
     assert AmuConfig(engine="batched",
                      scheduler="scalar").scheduler_kind == "scalar"
+    assert AmuConfig(engine="batched",
+                     scheduler="batched").scheduler_kind == "batched"
     # explicit FarMemoryConfig replaces the whole operating point
     far = far_config(2.0, max_inflight=7)
     assert AmuConfig(far=far).resolve_far_config() is far
