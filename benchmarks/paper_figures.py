@@ -8,7 +8,8 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 from repro.amu import (REGISTRY, AmuConfig, AmuSession, BimodalTail,
-                       LognormalLatency, far_config, far_region)
+                       FaultModel, LinkFlap, LognormalLatency, RetryPolicy,
+                       far_config, far_region)
 from repro.core import simulator as sim
 from repro.core.simulator import PowerModel
 
@@ -285,6 +286,95 @@ def serve_latency(smoke: bool = False) -> List[Row]:
     return rows
 
 
+def fault_tolerance(smoke: bool = False) -> List[Row]:
+    """Fault-injection sweep: goodput and tail latency vs fault rate, retry
+    policy on/off — the headline curves for the fault plane.
+
+    GUPS runs against a faulted fabric region (seeded per-request error
+    draws, failover to a slower backup tier) across error rates;
+    ``vs_clean`` is the slowdown against the same config at rate 0 and
+    ``goodput_rps`` the availability-weighted request rate. Serving
+    (`paged_kv_serve`) takes the faults on its cross-switch tier (failover
+    to CXL) and adds mid-run link-outage windows of increasing width —
+    p999 and availability through an outage are the "serving millions of
+    users" numbers. Smoke mode shrinks to the CI gate: GUPS at 1% error
+    with retries must stay within 1.5x of fault-free, serving
+    availability >= 0.99 (floors enforced by benchmarks.run --smoke)."""
+    from repro.core.serving import serve_regions
+
+    rows: List[Row] = []
+    rp = RetryPolicy(max_retries=3, backoff=300.0)
+    size = 1 << 22                   # covers the GUPS table; backup above it
+
+    def gups_regions(rate: float) -> List:
+        fm = FaultModel(error_prob=rate) if rate else None
+        return [far_region("fabric", 0, size, 1.0, faults=fm,
+                           failover="backup" if rate else None),
+                far_region("backup", size, size, 3.0)]
+
+    # --- GUPS: error-rate sweep, retry on/off (verify off: with retries
+    # off, failed loads legitimately leave stale data behind)
+    rates = [0.0, 0.01] if smoke else [0.0, 0.005, 0.01, 0.02, 0.05]
+    gups_kw = dict(table_words=8192, distinct=True) if smoke else {}
+    clean_us: Dict[str, float] = {}
+    for rate in rates:
+        for tag, retry in (("retry_off", None), ("retry_on", rp)):
+            cfg = AMU.derive(far=gups_regions(rate), retry=retry,
+                             verify=False)
+            with AmuSession(cfg) as s:
+                out = s.run("GUPS", **gups_kw)
+            if rate == 0.0:
+                clean_us[tag] = out.us
+            goodput = out.requests * out.availability / out.us
+            rows.append((
+                f"faults/GUPS/err{rate}/{tag}", out.us,
+                f"vs_clean={out.us / clean_us[tag]:.2f}x,"
+                f"avail={out.availability:.4f},"
+                f"faults={out.faults_injected},retries={out.retries},"
+                f"failovers={out.failovers},goodput_rps={goodput:.4f},"
+                f"mlp={out.mlp:.1f}"))
+
+    # --- serving: faults on the cross-switch tier, failover to CXL
+    serve_kw = dict(requests=64, coroutines=16) if smoke else {}
+    size_kw = {"requests": 64} if smoke else {}
+    serve_rates = [0.01] if smoke else [0.01, 0.05]
+    for rate in serve_rates:
+        regs = serve_regions(faults=FaultModel(error_prob=rate),
+                             failover="cxl", **size_kw)
+        modes = (("retry_on", rp),) if smoke \
+            else (("retry_off", None), ("retry_on", rp))
+        for tag, retry in modes:
+            cfg = AMU.derive(far=regs, retry=retry)
+            with AmuSession(cfg) as s:
+                out = s.run("paged_kv_serve", **serve_kw)
+            # the port's sync_fallback keeps the fold correct even when
+            # the AMI plane reports final failures
+            assert out.verified
+            rows.append((
+                f"faults/serve/err{rate}/{tag}", out.us,
+                f"avail={out.availability:.4f},"
+                f"p99={out.req_p99_us:.1f},p999={out.req_p999_us:.1f},"
+                f"faults={out.faults_injected},retries={out.retries},"
+                f"failovers={out.failovers}"))
+
+    # --- serving through a mid-run outage of increasing width (nightly)
+    widths = [] if smoke else [20_000.0, 60_000.0]
+    for width in widths:
+        fm = FaultModel(error_prob=0.01,
+                        flaps=(LinkFlap(20_000.0, width, mode="error"),))
+        regs = serve_regions(faults=fm, failover="cxl")
+        with AmuSession(AMU.derive(far=regs, retry=rp)) as s:
+            out = s.run("paged_kv_serve")
+        assert out.verified
+        rows.append((
+            f"faults/serve/flap{int(width)}/retry_on", out.us,
+            f"avail={out.availability:.4f},"
+            f"p99={out.req_p99_us:.1f},p999={out.req_p999_us:.1f},"
+            f"faults={out.faults_injected},retries={out.retries},"
+            f"failovers={out.failovers}"))
+    return rows
+
+
 def table5_disambiguation() -> List[Row]:
     """Table 5: fraction of execution time in software disambiguation."""
     rows = []
@@ -327,5 +417,6 @@ ALL_FIGURES = {
     "table5": table5_disambiguation,
     "tail": tail_latency,
     "serve": serve_latency,
+    "faults": fault_tolerance,
     "headline": headline_claims,
 }

@@ -59,6 +59,12 @@ SMOKE_MAX_ENTRIES = {
     "engine/GUPS_sched_vector_fused": 200,
     "serve/poisson/ami_vector": 360,
 }
+# fault gates (rows from the `faults` suite, retry-enabled only): GUPS at
+# 1% error with retries must stay within 1.5x of its fault-free time
+# (retry+failover traffic is modeled, so a blowup means the recovery path
+# regressed), and serving availability must hold >= 0.99
+SMOKE_MAX_FAULT_SLOWDOWN = 1.5
+SMOKE_MIN_AVAILABILITY = 0.99
 
 
 def _parse_speedup(derived: str, key: str) -> float:
@@ -115,14 +121,15 @@ def main() -> None:
     suites["kernels"] = kernel_micro
     suites["engine"] = lambda: engine_driver(smoke=smoke)
     suites["serve"] = lambda: pf.serve_latency(smoke=smoke)
+    suites["faults"] = lambda: pf.fault_tolerance(smoke=smoke)
     suites["roofline"] = roofline_rows
 
-    # smoke mode: the (shrunken) engine-driver throughput and serving
-    # suites always run, so the regression gates below can never be
-    # vacuously green
+    # smoke mode: the (shrunken) engine-driver throughput, serving and
+    # fault-injection suites always run, so the regression gates below can
+    # never be vacuously green
     if smoke:
-        wanted = ["engine", "serve"] + [a for a in args
-                                        if a not in ("engine", "serve")]
+        always = ("engine", "serve", "faults")
+        wanted = list(always) + [a for a in args if a not in always]
     else:
         wanted = args or list(suites)
     collected = []
@@ -178,6 +185,18 @@ def main() -> None:
                         f"{row['name']}: {ents:.0f} engine entries > "
                         f"{SMOKE_MAX_ENTRIES[row['name']]} — epoch fusion "
                         f"degraded toward per-command granularity")
+            if row["name"].startswith("faults/") \
+                    and row["name"].endswith("/retry_on"):
+                sp = _parse_speedup(row["derived"], "vs_clean")
+                if sp and sp > SMOKE_MAX_FAULT_SLOWDOWN:
+                    failures.append(
+                        f"{row['name']}: faulty/fault-free {sp:.2f}x > "
+                        f"{SMOKE_MAX_FAULT_SLOWDOWN}x with retries on")
+                av = _parse_speedup(row["derived"], "avail")
+                if av and av < SMOKE_MIN_AVAILABILITY:
+                    failures.append(
+                        f"{row['name']}: availability {av:.4f} < "
+                        f"{SMOKE_MIN_AVAILABILITY} with retries on")
         if failures:
             print("SMOKE FAIL: driver-throughput regression:",
                   file=sys.stderr)

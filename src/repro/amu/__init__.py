@@ -16,14 +16,15 @@ Port bodies use the typed command facade :data:`ctx`
 (``yield ctx.aload(...)`` etc.) instead of hand-rolling command objects.
 """
 from repro.amu.commands import CommandFacade, ctx
-from repro.amu.config import (FREQ_GHZ, LINE, AmuConfig, far_config,
-                              far_region)
+from repro.amu.config import (FREQ_GHZ, LINE, AmuConfig, RetryPolicy,
+                              far_config, far_region)
 from repro.amu.registry import (REGISTRY, Port, WorkloadDef,
                                 WorkloadRegistry, workload)
 from repro.amu.session import AmuSession, RunStats
-from repro.core.farmem import (BimodalTail, FarMemoryConfig, FarMemoryRegion,
-                               LatencyDistribution, LognormalLatency,
-                               UniformJitter)
+from repro.core.farmem import (STATUS_ERROR, STATUS_OK, STATUS_TIMED_OUT,
+                               BimodalTail, FarMemoryConfig, FarMemoryRegion,
+                               FaultModel, LatencyDistribution, LinkFlap,
+                               LognormalLatency, UniformJitter)
 
 # Populate REGISTRY with the built-in Table 3 workloads. Deliberately last:
 # the port module imports the facade/registry submodules above, which are
@@ -38,4 +39,6 @@ __all__ = [
     "far_config", "far_region", "FREQ_GHZ", "LINE",
     "FarMemoryConfig", "FarMemoryRegion", "LatencyDistribution",
     "UniformJitter", "LognormalLatency", "BimodalTail",
+    "FaultModel", "LinkFlap", "RetryPolicy",
+    "STATUS_OK", "STATUS_ERROR", "STATUS_TIMED_OUT",
 ]

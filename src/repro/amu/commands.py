@@ -36,7 +36,13 @@ class CommandFacade:
               wait: bool = True):
         """Far memory -> SPM. ``wait=True`` suspends until completion;
         ``wait=False`` resumes immediately with a wait token (pair with
-        :meth:`await_rid`)."""
+        :meth:`await_rid`).
+
+        Under fault injection (a region with a :class:`FaultModel`), a
+        ``wait=True`` yield resumes with the request's final AMART status
+        (``STATUS_OK`` / ``STATUS_ERROR`` / ``STATUS_TIMED_OUT`` — after
+        any scheduler retries/failover); failed requests move no data.
+        Zero-fault configs resume with ``None`` exactly as before."""
         return Aload(spm, mem, size) if wait else AloadNoWait(spm, mem, size)
 
     @staticmethod
@@ -50,7 +56,11 @@ class CommandFacade:
                   wait: bool = True):
         """One AMI vector command for ``len(spm)`` loads (§4.2 metadata
         batching). ``wait=True`` fuses the await (one generator hop per
-        vector); ``wait=False`` returns wait tokens for :meth:`await_rids`."""
+        vector); ``wait=False`` returns wait tokens for :meth:`await_rids`.
+
+        Under fault injection a fused-await yield resumes with a per-lane
+        ``int8`` status array (lane-aligned with ``spm``); zero-fault
+        configs resume with ``None``."""
         return AloadVec(spm, mem, size, wait)
 
     @staticmethod
@@ -61,12 +71,16 @@ class CommandFacade:
 
     @staticmethod
     def await_rid(tok):
-        """Suspend until the token from a ``wait=False`` issue completes."""
+        """Suspend until the token from a ``wait=False`` issue completes.
+        Under fault injection the yield resumes with that request's final
+        status int (``None`` on zero-fault configs)."""
         return AwaitRid(tok)
 
     @staticmethod
     def await_rids(toks):
-        """Suspend until EVERY token completes (one coroutine resume)."""
+        """Suspend until EVERY token completes (one coroutine resume).
+        Under fault injection the yield resumes with a per-token ``int8``
+        status array (``None`` on zero-fault configs)."""
         return AwaitRids(tuple(toks) if not hasattr(toks, "dtype") else toks)
 
     # ------------------------------------------------ software lock plane

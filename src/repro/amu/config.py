@@ -17,7 +17,7 @@ from typing import Optional, Sequence, Union
 from repro.configs.base import EngineConfig
 from repro.core.coroutines import SCHEDULER_KINDS, CostModel
 from repro.core.engine import ENGINE_KINDS
-from repro.core.farmem import (FarMemoryConfig, FarMemoryRegion,
+from repro.core.farmem import (FarMemoryConfig, FarMemoryRegion, FaultModel,
                                LatencyDistribution)
 
 #: Simulated core clock (Table 2: 3 GHz, 6-wide OoO).
@@ -42,15 +42,51 @@ def far_region(name: str, start: int, size: int, latency_us: float,
                bandwidth_gbs: float = 64.0, max_inflight: int = 0,
                link: Optional[str] = None,
                distribution: Optional[LatencyDistribution] = None,
-               jitter_frac: float = 0.0) -> FarMemoryRegion:
+               jitter_frac: float = 0.0,
+               faults: Optional[FaultModel] = None,
+               failover: Optional[str] = None) -> FarMemoryRegion:
     """One tier of a heterogeneous far memory, in the paper's µs / GB/s
     units. Pass a list of these as ``AmuConfig(far=[...])`` to run a
     workload against mixed local-DRAM / fast-CXL / cross-switch tiers;
-    regions naming the same ``link`` contend on one shared channel."""
+    regions naming the same ``link`` contend on one shared channel.
+    ``faults`` attaches a seeded :class:`FaultModel` (error/drop draws,
+    outage windows); ``failover`` names the region that absorbs this one's
+    requests after retry exhaustion."""
     return FarMemoryRegion.from_latency_us(
         name, start, size, latency_us, freq_ghz=FREQ_GHZ,
         bandwidth_gbs=bandwidth_gbs, max_inflight=max_inflight, link=link,
-        distribution=distribution, jitter_frac=jitter_frac)
+        distribution=distribution, jitter_frac=jitter_frac,
+        faults=faults, failover=failover)
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Recovery policy for faulted far-memory requests (the AMI side of
+    the fault plane). A scheduler given a policy re-issues each failed or
+    timed-out request up to ``max_retries`` times with deterministic
+    exponential backoff (``backoff * 2**attempt`` core cycles between the
+    failure notice and the re-issue); after exhaustion it tries the
+    region's configured ``failover`` region once, and only then delivers
+    the failure status to the awaiting coroutine. ``timeout_cycles`` > 0
+    additionally classifies any request whose modeled completion exceeds
+    its issue time by more than that budget as TIMED_OUT at the deadline
+    (a client-side timer on top of the device-side fault draws). All
+    retry traffic is charged to the far-memory ledger honestly — retries
+    are real requests."""
+
+    max_retries: int = 3
+    timeout_cycles: float = 0.0
+    backoff: float = 256.0
+
+    def __post_init__(self) -> None:
+        if self.max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0, got {self.max_retries}")
+        if self.timeout_cycles < 0.0:
+            raise ValueError(
+                f"timeout_cycles must be >= 0, got {self.timeout_cycles}")
+        if self.backoff < 0.0:
+            raise ValueError(f"backoff must be >= 0, got {self.backoff}")
 
 
 @dataclass(frozen=True)
@@ -89,6 +125,10 @@ class AmuConfig:
     * ``engine_config`` — overrides the workload's sized
       :class:`EngineConfig` wholesale; ``spm_bytes`` overrides just the
       SPM budget of whichever config is in effect.
+    * ``retry`` — :class:`RetryPolicy` for faulted far-memory requests
+      (deterministic backoff re-issue, then failover); also arms the far
+      model's client-side ``timeout_cycles`` timer. ``None`` (default)
+      delivers failure statuses immediately with no retry traffic.
     * ``seed`` / ``verify`` — build seed; run the port's numpy oracle at
       the end.
     """
@@ -105,6 +145,7 @@ class AmuConfig:
                         Sequence[FarMemoryRegion]]] = None
     engine_config: Optional[EngineConfig] = None
     spm_bytes: Optional[int] = None
+    retry: Optional[RetryPolicy] = None
     seed: int = 0
     verify: bool = True
 
@@ -146,6 +187,8 @@ class AmuConfig:
                 f"max_inflight must be >= 0, got {self.max_inflight}")
         if self.spm_bytes is not None and self.spm_bytes <= 0:
             raise ValueError(f"spm_bytes must be > 0, got {self.spm_bytes}")
+        if self.retry is not None and not isinstance(self.retry, RetryPolicy):
+            raise TypeError(f"retry= takes a RetryPolicy, got {self.retry!r}")
         if self.seed < 0:
             raise ValueError(f"seed must be >= 0, got {self.seed}")
 

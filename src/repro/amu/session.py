@@ -48,6 +48,12 @@ class RunStats:
     far memory is heterogeneous (``AmuConfig(far=[...regions...])``), and
     is ``None`` for the flat model.
 
+    ``faults_injected`` / ``retries`` / ``timeouts`` / ``failovers`` /
+    ``availability`` report the fault plane: device-side fault draws, the
+    retry/failover traffic the scheduler re-issued, and the fraction of
+    logical requests that ultimately succeeded. Zero-fault configs keep
+    the defaults (all-zero, availability 1.0).
+
     The ``req_*`` fields carry per-request completion-latency percentiles
     (µs) for request-level ports — those whose instance fills
     ``request_latency_cycles`` (the serving workload); ``None`` elsewhere.
@@ -73,6 +79,11 @@ class RunStats:
     verified: Optional[bool]
     workload: str = ""
     regions: Optional[Dict[str, Dict[str, float]]] = None
+    faults_injected: int = 0
+    retries: int = 0
+    timeouts: int = 0
+    failovers: int = 0
+    availability: float = 1.0
     req_count: Optional[int] = None
     req_mean_us: Optional[float] = None
     req_p50_us: Optional[float] = None
@@ -182,13 +193,15 @@ class AmuSession:
         # prebuilt ports without the stamp fall back to the config's intent
         self._use_vector = bool(getattr(inst, "vector", cfg.vector))
         ecfg = cfg.resolve_engine_config(inst.engine_config)
-        far = FarMemoryModel(cfg.resolve_far_config(), host_jit=cfg.host_jit)
+        far = FarMemoryModel(
+            cfg.resolve_far_config(), host_jit=cfg.host_jit,
+            timeout_cycles=cfg.retry.timeout_cycles if cfg.retry else 0.0)
         eng = make_engine(cfg.engine, ecfg, far, inst.mem,
                           record_trace=record_trace)
         disamb = CuckooAddressSet() if inst.disambiguation else None
         sched = SCHEDULER_KINDS[cfg.scheduler_kind](
             eng, cost=cfg.cost_model(), disambiguator=disamb,
-            dma_mode=cfg.dma_mode)
+            dma_mode=cfg.dma_mode, retry=cfg.retry)
         self.engine, self.far, self.scheduler, self.instance = \
             eng, far, sched, inst
         return inst
@@ -227,6 +240,11 @@ class AmuSession:
             verified=bool(inst.verify(eng.mem)) if cfg.verify else None,
             workload=inst.name,
             regions=self.far.region_stats(stats["cycles"]),
+            faults_injected=stats.get("faults_injected", 0),
+            retries=stats.get("retries", 0),
+            timeouts=stats.get("timeouts", 0),
+            failovers=stats.get("failovers", 0),
+            availability=stats.get("availability", 1.0),
             engine_entries=entries,
             rows_per_entry=rows / entries if entries else 0.0,
             us_per_entry=wall_us / entries if entries else 0.0, **req)

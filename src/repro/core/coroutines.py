@@ -248,11 +248,30 @@ class Scheduler:
     def __init__(self, engine: AsyncEngineBase,
                  cost: CostModel = CostModel(),
                  disambiguator: Optional[CuckooAddressSet] = None,
-                 dma_mode: bool = False):
+                 dma_mode: bool = False,
+                 retry=None):
         self.engine = engine
         self.cost = cost
         self.disamb = disambiguator
         self.dma_mode = dma_mode
+        # ---- fault/recovery plane (§3.2 status + RetryPolicy) -------------
+        # `retry` duck-types amu.config.RetryPolicy (max_retries/backoff).
+        # All of this is dead weight on the zero-fault path: `_fault` is
+        # False, every hook below is gated on it, and the run loops only
+        # touch `_retry_heap` through truthiness checks on an empty list —
+        # so fault-free traces/costs are bit-identical to pre-fault builds.
+        self.retry = retry
+        self._fault = bool(getattr(engine, "fault_enabled", False))
+        self._rp_active = retry is not None and self._fault
+        self._tok_req: Dict[int, list] = {}   # tok -> [kind,spm,mem,size,
+        #                                        attempt, failover state 0/1/2]
+        self._retry_heap: list = []           # (ready_cycles, seq, tok)
+        self._retry_seq = 0
+        self._tok_fstat: Dict[int, int] = {}  # tok -> final non-OK status
+        self._group_toks: Dict[int, tuple] = {}  # id(task) -> awaited toks
+        self.n_retries = 0
+        self.n_failovers = 0
+        self.n_failed = 0
         self.t = 0.0                       # core clock, cycles
         self.insts = 0.0                   # retired instructions
         self.disamb_cycles = 0.0           # time inside start/end_access
@@ -311,7 +330,16 @@ class Scheduler:
             self._ready.append(task)
 
     def _earliest_sleep(self) -> Optional[float]:
-        return self._sleeping[0][0] if self._sleeping else None
+        """Earliest future event the runtime loop itself must service: a
+        WaitUntil sleeper or a backoff-delayed retry slot. Both cap every
+        clock jump/drain window the same way — the loop top requeues due
+        sleepers (`_wake_sleepers`) and re-issues due retries
+        (`_service_retries`) from exactly that instant."""
+        s = self._sleeping[0][0] if self._sleeping else None
+        if self._retry_heap:
+            r = self._retry_heap[0][0]
+            return r if s is None else min(s, r)
+        return s
 
     # Token bookkeeping hooks — dict-based here (the oracle); BatchScheduler
     # overrides them with preallocated numpy maps for vectorized dispatch.
@@ -331,6 +359,8 @@ class Scheduler:
     def _await_tokens(self, task: Task, toks) -> None:
         """Suspend `task` until every token in `toks` completes (tokens that
         already completed unclaimed are consumed immediately)."""
+        if self._fault:
+            self._group_toks[id(task)] = tuple(int(t) for t in toks)
         remaining = 0
         wake = 0.0
         for tok in toks:
@@ -345,6 +375,8 @@ class Scheduler:
             self._wait_wake[id(task)] = wake
             heapq.heappush(self._wake_heap, wake)
         else:
+            if self._fault:
+                self._deliver_status(task)
             self._ready.append(task)
 
     def _issue(self, task: Task, cmd) -> None:
@@ -368,6 +400,9 @@ class Scheduler:
             self._alloc_parked.append((task, cmd))  # queue full: retry later
             return
         tok = self._new_token(rid)
+        if self._rp_active:
+            kind = LOAD if isinstance(cmd, (Aload, AloadNoWait)) else STORE
+            self._tok_req[tok] = [kind, cmd.spm, cmd.mem, cmd.size, 0, 0]
         if isinstance(cmd, (AloadNoWait, AstoreNoWait)):
             self._results[id(task)] = tok        # token back, keep running
             self._ready.append(task)
@@ -402,6 +437,8 @@ class Scheduler:
         # allocation fails as a zero suffix: full when the last rid is live
         k = n if rids[n - 1] else int(np.count_nonzero(rids))
         toks = self._new_tokens(rids[:k]) if k else []
+        if self._rp_active and k:
+            self._record_vec_reqs(cmd, toks, k)
         if k < n:
             acc.extend(toks)
             rest = type(cmd)(cmd.spm[k:], cmd.mem[k:], cmd.size, cmd.wait)
@@ -416,6 +453,16 @@ class Scheduler:
         else:                               # tokens straight through (ndarray
             self._results[id(task)] = toks  # on the batch scheduler, list on
             self._ready.append(task)        # the oracle)
+
+    def _record_vec_reqs(self, cmd, toks, k: int) -> None:
+        """Retry-plane bookkeeping for a vector issue: remember each lane's
+        (kind, spm, mem, size) so a failed lane can be re-issued verbatim.
+        Fault-mode-only cost, charged nothing on the clock."""
+        kind = LOAD if isinstance(cmd, AloadVec) else STORE
+        spm, mem, size = cmd.spm, cmd.mem, cmd.size
+        req = self._tok_req
+        for i, tok in enumerate(toks):
+            req[int(tok)] = [kind, int(spm[i]), int(mem[i]), size, 0, 0]
 
     def _run_task(self, task: Task, send_value=None) -> None:
         """Resume `task`, process the command it yields (if not finished)."""
@@ -532,9 +579,32 @@ class Scheduler:
     def _dispatch_fin(self, rid: int) -> None:
         """Route a completed request ID to its awaiting task (if any). A task
         suspended on AwaitRids only resumes — and only pays the coroutine
-        switch once — when its LAST outstanding token completes."""
+        switch once — when its LAST outstanding token completes.
+
+        In fault mode the completion carries a status (`engine.fin_status`,
+        set by the getfin that produced `rid`): a failed completion first
+        consults the RetryPolicy — the token stays pending while its request
+        is re-issued — and only a final (retry-exhausted, failover-failed)
+        status reaches the awaiting task."""
+        if self._fault:
+            status = self.engine.fin_status
+            if status:
+                tok = self._rid_tok.pop(rid)
+                if self._rp_active and self._schedule_retry(tok, status):
+                    return               # re-issue pending: token stays live
+                self._mark_failed(tok, status)
+                self._tok_time.pop(tok, None)
+                self._complete_token(tok)
+                return
         tok = self._rid_tok.pop(rid)
+        if self._rp_active:
+            self._tok_req.pop(tok, None)
         self._tok_time.pop(tok, None)
+        self._complete_token(tok)
+
+    def _complete_token(self, tok: int) -> None:
+        """Final-completion half of dispatch: group countdown, exact wake
+        deletion, status delivery (fault mode) and the coroutine switch."""
         task = self._waiting_tok.pop(tok, None)
         if task is None:
             self._unclaimed.add(tok)
@@ -548,9 +618,107 @@ class Scheduler:
         wake = self._wait_wake.pop(id(task), None)
         if wake is not None:                 # exact heap deletion (see init)
             self._wake_dead[wake] = self._wake_dead.get(wake, 0) + 1
+        if self._fault:
+            self._deliver_status(task)
         self._tick_insts(self.cost.switch_insts)  # resume the awaiter
         self.t += self.cost.switch_stall_cycles
         self._ready.append(task)
+
+    # ------------------------------------------------- fault/recovery plane
+    def _deliver_status(self, task: Task) -> None:
+        """Hand the resuming task its per-lane statuses as the await's send
+        value: an int for single-token awaits, an int8 array (lane-aligned)
+        for vector awaits. 0/all-zero means every lane succeeded."""
+        toks = self._group_toks.pop(id(task), None)
+        if toks is None:
+            return                       # not an await resume (issue/SPM/...)
+        fst = self._tok_fstat
+        if len(toks) == 1:
+            self._results[id(task)] = fst.pop(toks[0], 0)
+        else:
+            self._results[id(task)] = np.array(
+                [fst.pop(t, 0) for t in toks], np.int8)
+
+    def _mark_failed(self, tok: int, status: int) -> None:
+        """Record a token's FINAL failure status (delivered to its awaiter)."""
+        self._tok_fstat[tok] = int(status)
+        self.n_failed += 1
+        if self._rp_active:
+            self._tok_req.pop(tok, None)
+
+    def _schedule_retry(self, tok: int, status: int) -> bool:
+        """Decide recovery for a failed completion. Returns True when a
+        re-issue (retry with exponential backoff, or a one-shot failover to
+        the region's configured alternate) was scheduled — the token stays
+        pending and its awaiting task keeps waiting. False means the failure
+        is final."""
+        req = self._tok_req.get(tok)
+        if req is None:
+            return False
+        rp = self.retry
+        if req[4] < rp.max_retries:
+            delay = rp.backoff * (2.0 ** req[4])
+            req[4] += 1
+        elif req[5] == 0 and \
+                self.engine.far.failover_index(req[2]) is not None:
+            # retries exhausted on the home path: one failover attempt
+            # through the region's configured alternate (same far-memory
+            # address — an alternate path/replica, so the data plane is
+            # unchanged; only the timing/fault draws route differently)
+            delay = rp.backoff * (2.0 ** req[4])
+            req[5] = 1
+        else:
+            return False
+        self._retry_seq += 1
+        heapq.heappush(self._retry_heap,
+                       (self.t + delay, self._retry_seq, tok))
+        return True
+
+    def _rebind_token(self, tok: int, rid: int) -> None:
+        """Point an existing (still-awaited) token at its re-issued rid."""
+        self._rid_tok[rid] = tok
+        self._tok_time[tok] = self.engine.done_time(rid)
+
+    def _service_retries(self) -> None:
+        """Re-issue every retry whose backoff slot has arrived (loop-top
+        hook, the retry counterpart of `_wake_sleepers`). The re-issue pays
+        the normal AMI issue cost and enters the far model like any other
+        request — retry traffic is charged to the ledger honestly. If the
+        ID pool is exhausted the slot is pushed back and re-attempted next
+        turn (completions free IDs each turn)."""
+        heap = self._retry_heap
+        c = self.cost
+        while heap and heap[0][0] <= self.t:
+            _, _, tok = heapq.heappop(heap)
+            req = self._tok_req[tok]
+            kind, spm, mem, size = req[0], req[1], req[2], req[3]
+            self._tick_insts(c.ami_issue_insts)
+            self.engine.advance(self.t)
+            far = self.engine.far
+            refills = self.engine.stats["free_refills"]
+            forced = req[5] == 1
+            if forced:
+                far._forced_region = far.failover_index(mem)
+            try:
+                if kind == LOAD:
+                    rid = self.engine.aload(spm, mem, size)
+                else:
+                    rid = self.engine.astore(spm, mem, size)
+            finally:
+                if forced:
+                    far._forced_region = None
+            if self.engine.stats["free_refills"] != refills:
+                self.t += c.refill_cycles  # batched ID fetch round trip
+            if rid == 0:
+                self._retry_seq += 1
+                heapq.heappush(heap, (self.t, self._retry_seq, tok))
+                return
+            if forced:
+                req[5] = 2
+                self.n_failovers += 1
+            else:
+                self.n_retries += 1
+            self._rebind_token(tok, rid)
 
     def _idle_until_completion(self) -> None:
         """Nothing runnable: validate liveness and advance to the next
@@ -568,7 +736,7 @@ class Scheduler:
         new requests from that instant, so the clock must not overshoot
         it."""
         if not (self._waiting_count() or self._alloc_parked
-                or self._sleeping):
+                or self._sleeping or self._retry_heap):
             raise DeadlockError("live tasks but none ready/waiting")
         c = self.cost
         sleep0 = self._earliest_sleep()
@@ -626,6 +794,8 @@ class Scheduler:
         while self._live > 0:
             if self._sleeping:             # arrivals whose time has come
                 self._wake_sleepers()
+            if self._retry_heap:           # backoff slots whose time has come
+                self._service_retries()
             # event loop: poll completions first (Fig 4 step 3)
             if (self._waiting_count() or self._alloc_parked
                     or self.engine.outstanding or self.engine.finished_pending):
@@ -647,7 +817,7 @@ class Scheduler:
 
     def summary(self) -> dict:
         far = self.engine.far
-        return {
+        out = {
             "cycles": self.t,
             "insts": self.insts,
             "ipc": self.insts / max(self.t, 1e-9),
@@ -657,6 +827,32 @@ class Scheduler:
             "disamb_cycles": self.disamb_cycles,
             "disamb_frac": self.disamb_cycles / max(self.t, 1e-9),
         }
+        if self._fault:
+            # logical requests = far-model entries minus recovery re-issues;
+            # availability = fraction of logical requests that ultimately
+            # succeeded (possibly after retries/failover)
+            logical = far.requests - self.n_retries - self.n_failovers
+            out["faults_injected"] = far.faults_injected
+            out["retries"] = self.n_retries
+            out["timeouts"] = far.timeouts
+            out["failovers"] = self.n_failovers
+            out["failed"] = self.n_failed
+            out["availability"] = 1.0 - self.n_failed / max(logical, 1)
+        return out
+
+    def reset_stats(self) -> None:
+        """Zero the recovery-plane counters and drop any in-flight retry
+        state — the scheduler-side counterpart of
+        :meth:`FarMemoryModel.reset_stats` for a prepare/measure split.
+        Pending backoff slots are abandoned (their requests were warmup
+        traffic); tokens already awaited stay resolvable via the engine."""
+        self.n_retries = 0
+        self.n_failovers = 0
+        self.n_failed = 0
+        self._retry_heap.clear()
+        self._tok_req.clear()
+        self._tok_fstat.clear()
+        self._group_toks.clear()
 
 
 class BatchScheduler(Scheduler):
@@ -685,8 +881,9 @@ class BatchScheduler(Scheduler):
     def __init__(self, engine: AsyncEngineBase,
                  cost: CostModel = CostModel(),
                  disambiguator: Optional[CuckooAddressSet] = None,
-                 dma_mode: bool = False):
-        super().__init__(engine, cost, disambiguator, dma_mode)
+                 dma_mode: bool = False,
+                 retry=None):
+        super().__init__(engine, cost, disambiguator, dma_mode, retry)
         # rid -> token map (slot 0 unused; rids are 1-based)
         self._rid_tok = np.zeros(engine.config.queue_length + 1, np.int64)
         # token-indexed maps (slot 0 unused; tokens are 1-based)
@@ -759,7 +956,7 @@ class BatchScheduler(Scheduler):
     def _maybe_recycle_tokens(self) -> None:
         if (self._tok < self._RECYCLE_AT or self._n_wait_groups
                 or self._n_unclaimed or self._alloc_parked
-                or self.engine.active_requests):
+                or self._retry_heap or self.engine.active_requests):
             return
         self._tok = 0
         self._tok_group = np.full(self._GROW, -1, np.int64)
@@ -768,6 +965,12 @@ class BatchScheduler(Scheduler):
         self._group_task = []
         self._group_left = np.zeros(self._GROW, np.int64)
         self._wake_heap.clear()          # all entries are <= now: stale
+        if self._fault:
+            # token numbers restart: drop bookkeeping keyed by old tokens
+            # (all final — no waiter/retry/unclaimed state exists here)
+            self._tok_req.clear()
+            self._tok_fstat.clear()
+            self._group_toks.clear()
 
     def _idle_until_completion(self) -> None:
         """Idle step with wake planning: nothing is runnable, so no new
@@ -778,7 +981,8 @@ class BatchScheduler(Scheduler):
         completion can unblock them, so fall back to single-stepping.
         Sleepers (WaitUntil) cap the jump at their earliest wake — a waking
         arrival issues new requests from that instant."""
-        if not (self._n_wait_groups or self._alloc_parked or self._sleeping):
+        if not (self._n_wait_groups or self._alloc_parked or self._sleeping
+                or self._retry_heap):
             raise DeadlockError("live tasks but none ready/waiting")
         sleep0 = self._earliest_sleep()
         next_done = self.engine.next_completion_time
@@ -819,11 +1023,15 @@ class BatchScheduler(Scheduler):
         return gid
 
     def _await_tokens(self, task: Task, toks) -> None:
+        if self._fault:
+            self._group_toks[id(task)] = tuple(int(t) for t in toks)
         if len(toks) == 1:                       # AwaitRid / awaited scalar
             tok = toks[0]                        # issue: skip array overhead
             if self._tok_done[tok]:
                 self._tok_done[tok] = False
                 self._n_unclaimed -= 1
+                if self._fault:
+                    self._deliver_status(task)
                 self._ready.append(task)
                 return
             self._tok_group[tok] = self._new_group(
@@ -831,6 +1039,8 @@ class BatchScheduler(Scheduler):
             return
         toks = np.asarray(toks, np.int64)
         if toks.size == 0:
+            if self._fault:
+                self._deliver_status(task)
             self._ready.append(task)
             return
         done = self._tok_done[toks]
@@ -838,6 +1048,8 @@ class BatchScheduler(Scheduler):
         if ds == toks.size:
             self._tok_done[toks] = False         # consume unclaimed tokens
             self._n_unclaimed -= toks.size
+            if self._fault:
+                self._deliver_status(task)
             self._ready.append(task)
             return
         if ds:
@@ -857,6 +1069,15 @@ class BatchScheduler(Scheduler):
         costs are summed into one clock update, as before."""
         if not rids:
             return
+        if self._fault:
+            sts = self.engine.fin_statuses
+            if any(sts):
+                # some completion failed: fall back to a per-rid ordered
+                # loop (retry/failover scheduling + final-status routing).
+                # Shared by BatchScheduler and EpochScheduler, so their
+                # bit-identity survives fault injection.
+                self._dispatch_fins_faulty(rids, sts)
+                return
         if len(rids) <= 6:                       # sparse epoch: skip the
             n_ready = 0                          # vector machinery; groups
             for rid in rids:                     # still resume at their last
@@ -869,7 +1090,10 @@ class BatchScheduler(Scheduler):
                 left = self._group_left[gid] - 1
                 self._group_left[gid] = left
                 if left == 0:
-                    self._ready.append(self._group_task[gid])
+                    gtask = self._group_task[gid]
+                    if self._fault:
+                        self._deliver_status(gtask)
+                    self._ready.append(gtask)
                     self._group_task[gid] = None
                     n_ready += 1
             if n_ready:
@@ -896,11 +1120,61 @@ class BatchScheduler(Scheduler):
             return
         last_pos = groups.size - 1 - rev_idx[ready_mask]
         for gid in uniq[ready_mask][np.argsort(last_pos, kind="stable")]:
-            self._ready.append(self._group_task[gid])
+            gtask = self._group_task[gid]
+            if self._fault:
+                self._deliver_status(gtask)
+            self._ready.append(gtask)
             self._group_task[gid] = None
         self._n_wait_groups -= n_ready
         self._tick_insts(self.cost.switch_insts * n_ready)
         self.t += self.cost.switch_stall_cycles * n_ready
+
+    def _dispatch_fins_faulty(self, rids, sts) -> None:
+        """Ordered per-rid dispatch for an epoch containing failures: same
+        group-countdown/unclaimed semantics as the ≤6-rid scalar path, plus
+        retry/failover scheduling and final-status routing. Failed tokens
+        whose re-issue is scheduled stay pending (their group does not
+        count down)."""
+        n_ready = 0
+        rp = self._rp_active
+        for rid, status in zip(rids, sts):
+            tok = int(self._rid_tok[rid])
+            if status:
+                if rp and self._schedule_retry(tok, status):
+                    continue             # token re-issued: group keeps waiting
+                self._mark_failed(tok, status)
+            elif rp:
+                self._tok_req.pop(tok, None)
+            gid = self._tok_group[tok]
+            if gid < 0:
+                self._tok_done[tok] = True
+                self._n_unclaimed += 1
+                continue
+            left = self._group_left[gid] - 1
+            self._group_left[gid] = left
+            if left == 0:
+                gtask = self._group_task[gid]
+                self._deliver_status(gtask)
+                self._ready.append(gtask)
+                self._group_task[gid] = None
+                n_ready += 1
+        if n_ready:
+            self._n_wait_groups -= n_ready
+            self._tick_insts(self.cost.switch_insts * n_ready)
+            self.t += self.cost.switch_stall_cycles * n_ready
+
+    def _rebind_token(self, tok: int, rid: int) -> None:
+        if rid >= self._rid_tok.size:    # queue_length was resized up
+            self._rid_tok = np.concatenate(
+                [self._rid_tok, np.zeros(rid + 1 - self._rid_tok.size,
+                                         np.int64)])
+        self._rid_tok[rid] = tok
+        done = self.engine.done_time(rid)
+        self._tok_time[tok] = done
+        # wake planning: the re-issued completion is a lower bound on its
+        # group's ready time — cap the idle jump there so the retried fin
+        # is drained (and possibly re-retried) the turn it lands
+        heapq.heappush(self._wake_heap, float(done))
 
     def run(self, tasks: Optional[Iterable[Task]] = None) -> dict:
         c = self.cost
@@ -909,6 +1183,8 @@ class BatchScheduler(Scheduler):
         while self._live > 0:
             if self._sleeping:             # arrivals whose time has come
                 self._wake_sleepers()
+            if self._retry_heap:           # backoff slots whose time has come
+                self._service_retries()
             if self._tok >= self._RECYCLE_AT:
                 self._maybe_recycle_tokens()
             if (self._n_wait_groups or self._alloc_parked
@@ -976,8 +1252,9 @@ class EpochScheduler(BatchScheduler):
     def __init__(self, engine: AsyncEngineBase,
                  cost: CostModel = CostModel(),
                  disambiguator: Optional[CuckooAddressSet] = None,
-                 dma_mode: bool = False):
-        super().__init__(engine, cost, disambiguator, dma_mode)
+                 dma_mode: bool = False,
+                 retry=None):
+        super().__init__(engine, cost, disambiguator, dma_mode, retry)
         self._fuse = bool(getattr(engine, "supports_epoch", False))
         # deferred per-epoch state: tokens minted since the last flush are
         # (_ep_tok_start, _tok]; their done-times land at the flush. Awaits
@@ -1016,6 +1293,14 @@ class EpochScheduler(BatchScheduler):
         if self._tok == 0:                 # maps recycled (staging is empty
             self._ep_tok_start = 0         # at the loop top, so no live refs)
 
+    def _service_retries(self) -> None:
+        # retry re-issues take the immediate scalar engine path: flush any
+        # staged epoch first so engine entry order = command order (a no-op
+        # at the loop top, where retries are serviced)
+        if self._fuse:
+            self._flush_epoch()
+        super()._service_retries()
+
     # ---------------------------------------------------- staged issue path
     def _issue(self, task: Task, cmd) -> None:
         if isinstance(cmd, (AloadVec, AstoreVec)):
@@ -1053,6 +1338,8 @@ class EpochScheduler(BatchScheduler):
         # allocation fails as a zero suffix: full when the last rid is live
         k = n if rids[n - 1] else int(np.count_nonzero(rids))
         toks = self._mint_deferred(rids[:k]) if k else []
+        if self._rp_active and k:
+            self._record_vec_reqs(cmd, toks, k)
         if k < n:
             acc.extend(toks)
             rest = type(cmd)(cmd.spm[k:], cmd.mem[k:], cmd.size, cmd.wait)
@@ -1094,6 +1381,8 @@ class EpochScheduler(BatchScheduler):
         while self._live > 0:
             if self._sleeping:             # arrivals whose time has come
                 self._wake_sleepers()
+            if self._retry_heap:           # backoff slots whose time has come
+                self._service_retries()
             if self._tok >= self._RECYCLE_AT:
                 self._maybe_recycle_tokens()
             if (self._n_wait_groups or self._alloc_parked

@@ -65,6 +65,7 @@ class Request:
     issue_time: float
     done_time: float = 0.0
     data: Optional[bytes] = None  # astore payload captured at issue
+    status: int = 0               # AMART status (§3.2): farmem.STATUS_*
 
 
 class SpmOverflow(ValueError):
@@ -106,6 +107,14 @@ class AsyncEngineBase:
         # aload = 1 entry / 1 row; one flush_epoch = 1 entry / n rows.
         self.host_entries = 0
         self.host_rows = 0
+        # fault mode: statuses ride the AMART out-of-band with the done
+        # times; after getfin() `fin_status` holds the retired request's
+        # status, after getfin_all()/getfin_epoch() `fin_statuses` aligns
+        # with the returned rids. Only maintained when the far model
+        # injects faults — zero-fault runs never touch these.
+        self.fault_enabled = bool(getattr(self.far, "fault_enabled", False))
+        self.fin_status = 0
+        self.fin_statuses = None
 
     # ----------------------------------------------------------------- AMI
     def aload(self, spm_addr: int, mem_addr: int, size: Optional[int] = None) -> int:
@@ -123,6 +132,15 @@ class AsyncEngineBase:
     def getfin_all(self) -> List[int]:
         """Drain every currently-completed ID (in finished-list order)."""
         out: List[int] = []
+        if self.fault_enabled:
+            sts: List[int] = []
+            while True:
+                rid = self.getfin()
+                if rid == 0:
+                    self.fin_statuses = sts
+                    return out
+                out.append(rid)
+                sts.append(self.fin_status)
         while True:
             rid = self.getfin()
             if rid == 0:
@@ -295,6 +313,12 @@ class AsyncMemoryEngine(AsyncEngineBase):
         while self._pending and self._pending[0][0] <= self.now:
             _, rid = heapq.heappop(self._pending)
             req = self.amart[rid]
+            if req.status != 0:
+                # failed request: no data moved (a LOAD leaves the SPM slot
+                # stale, a STORE leaves far memory unwritten) — recovery is
+                # the scheduler's RetryPolicy, not silent completion
+                self._finished.append(rid)
+                continue
             if req.kind == LOAD:
                 src = self.mem[req.mem_addr:req.mem_addr + req.size]
                 self.spm[req.spm_addr:req.spm_addr + req.size] = src
@@ -367,6 +391,8 @@ class AsyncMemoryEngine(AsyncEngineBase):
         if kind == STORE:
             req.data = self.spm[spm_addr:spm_addr + size].tobytes()
         req.done_time = self.far.issue(self.now, size, mem_addr)
+        if self.fault_enabled:
+            req.status = self.far.last_status
         self.amart[rid] = req
         heapq.heappush(self._pending, (req.done_time, rid))
         self.stats["aload" if kind == LOAD else "astore"] += 1
@@ -391,6 +417,8 @@ class AsyncMemoryEngine(AsyncEngineBase):
             self._fin_cache.extend(self._finished.popleft() for _ in range(n))
             self.stats["fin_refills"] += 1
         rid = self._fin_cache.popleft()
+        if self.fault_enabled:
+            self.fin_status = self.amart[rid].status
         del self.amart[rid]
         self._free.append(rid)  # ID returns to the ASMC free list
         if self.trace is not None:
@@ -507,6 +535,9 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         self._issue_t = np.zeros(cap + 1, np.float64)
         self._done_t = np.zeros(cap + 1, np.float64)
         self._active = np.zeros(cap + 1, bool)
+        # per-request AMART status (farmem.STATUS_*); stays all-OK and
+        # untouched on the zero-fault path
+        self._status = np.zeros(cap + 1, np.int8)
         self._store_data: List[Optional[np.ndarray]] = [None] * (cap + 1)
         # unsorted in-flight rid vector (replaces the per-event heapq)
         self._pend = np.zeros(cap, np.int64)
@@ -532,7 +563,12 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         fin = rids[due]
         if fin.size > 1:
             fin = fin[np.lexsort((fin, done[due]))]
-        self._move_data(fin)
+        if self.fault_enabled and fin.size:
+            # failed requests retire without moving data (the scheduler's
+            # RetryPolicy owns recovery); retirement order is unchanged
+            self._move_data(fin[self._status[fin] == 0])
+        else:
+            self._move_data(fin)
         self._finished.push_many(fin)
         keep = rids[~due]
         self._pend[:keep.size] = keep
@@ -766,6 +802,8 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         if kind == STORE:
             self._store_data[rid] = self.spm[spm_addr:spm_addr + size].copy()
         done = self.far.issue(self.now, size, mem_addr)
+        if self.fault_enabled:
+            self._status[rid] = self.far.last_status
         self._set_request(rid, kind, spm_addr, mem_addr, size, done)
         self.stats["aload" if kind == LOAD else "astore"] += 1
         if self.trace is not None:
@@ -789,6 +827,8 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
             self._fin_cache.extend(self._finished.pop_many(n).tolist())
             self.stats["fin_refills"] += 1
         rid = self._fin_cache.popleft()
+        if self.fault_enabled:
+            self.fin_status = int(self._status[rid])
         self._active[rid] = False
         self._store_data[rid] = None
         self._free.push(rid)
@@ -876,6 +916,8 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         if kind == STORE:
             self._capture_stores(ok, k, spm_addrs, sizes, g0)
         done = self.far.issue_batch(self.now, sizes[:k], mem_addrs[:k])
+        if self.fault_enabled:
+            self._status[ok] = self.far.last_statuses
         self._kind[ok] = kind
         self._spm_a[ok] = spm_addrs[:k]
         self._mem_a[ok] = mem_addrs[:k]
@@ -914,6 +956,8 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         self.stats["getfin"] += total + 1
         self.stats["getfin_empty"] += 1
         if total == 0:
+            if self.fault_enabled:
+                self.fin_statuses = []
             if self.trace is not None:
                 self.trace.append(("fin", 0))
             return []
@@ -924,6 +968,8 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         if f:
             rids.extend(self._finished.pop_many(f).tolist())
         arr = np.asarray(rids, np.int64)
+        if self.fault_enabled:
+            self.fin_statuses = self._status[arr].tolist()
         self._active[arr] = False
         for rid in rids:
             self._store_data[rid] = None
@@ -1003,6 +1049,8 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
             self.host_entries += 1
             self.host_rows += k
             done = self.far.issue_batch(now0, sizes, mem)
+            if self.fault_enabled:
+                self._status[ok] = self.far.last_statuses
             self._kind[ok] = kind0
             self._spm_a[ok] = spm
             self._mem_a[ok] = mem
@@ -1032,6 +1080,8 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         self.host_entries += 1
         self.host_rows += k
         done = self.far.issue_epoch(seg_nows, seg_bounds, sizes, mem)
+        if self.fault_enabled:
+            self._status[ok] = self.far.last_statuses
         kinds = np.repeat(np.array([s[0] for s in segs], np.int8), ks)
         self._kind[ok] = kinds
         self._spm_a[ok] = spm
@@ -1075,6 +1125,7 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         self._issue_t = np.zeros(cap + 1, np.float64)
         self._done_t = np.zeros(cap + 1, np.float64)
         self._active = np.zeros(cap + 1, bool)
+        self._status = np.zeros(cap + 1, np.int8)
         self._store_data = [None] * (cap + 1)
         self._pend = np.zeros(cap, np.int64)
         self._pend_n = 0

@@ -141,6 +141,89 @@ class BimodalTail(LatencyDistribution):
 
 
 # =========================================================================
+# Fault plane
+# =========================================================================
+#: Per-request completion status codes carried out-of-band with every done
+#: time (``FarMemoryModel.last_status`` / ``last_statuses``) and through the
+#: engines' AMART into the scheduler. OK requests move data; ERROR is a
+#: device NACK arriving at the normal completion time; TIMED_OUT is a
+#: dropped request whose failure notice surfaces after ``timeout_mult``×
+#: the base latency (or at the RetryPolicy's ``timeout_cycles`` bound).
+STATUS_OK = 0
+STATUS_ERROR = 1
+STATUS_TIMED_OUT = 2
+
+
+@dataclass(frozen=True)
+class LinkFlap:
+    """A transient outage window on a region's channel, in absolute core
+    cycles. Requests *injected* inside ``[start_cycle, start_cycle +
+    duration)`` are affected: ``mode="stall"`` holds their delivery in the
+    channel's retry buffer until the window clears (completion shifts by
+    the remaining outage; injection pipelining of later requests is
+    unaffected, keeping the fault plane orthogonal to the pinned
+    link-serialization chains), ``mode="error"`` NACKs them at their normal
+    completion time."""
+
+    start_cycle: float
+    duration: float
+    mode: str = "stall"
+
+    @property
+    def end(self) -> float:
+        return self.start_cycle + self.duration
+
+
+@dataclass(frozen=True)
+class FaultModel:
+    """Seeded per-region fault injection. Each request draws exactly one
+    uniform from the region's dedicated fault stream (spawned from the
+    region's RNG lineage, so the latency bitstream is untouched and batch
+    fills equal sequential scalar draws): ``u < error_prob`` → ERROR,
+    next ``drop_prob`` mass → TIMED_OUT (dropped; failure notice at
+    ``timeout_mult``× base latency). ``flaps`` adds deterministic outage
+    windows on top (no RNG). A region with no FaultModel draws nothing —
+    zero-fault configs execute today's code paths bit-for-bit."""
+
+    error_prob: float = 0.0
+    drop_prob: float = 0.0
+    timeout_mult: float = 8.0
+    flaps: Tuple[LinkFlap, ...] = ()
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "flaps", tuple(self.flaps))
+
+
+def _validate_fault_model(fm: FaultModel, where: str) -> None:
+    if fm.error_prob < 0.0 or fm.drop_prob < 0.0:
+        raise ValueError(f"{where}: fault probabilities must be >= 0, got "
+                         f"error_prob={fm.error_prob}, "
+                         f"drop_prob={fm.drop_prob}")
+    if fm.error_prob + fm.drop_prob > 1.0:
+        raise ValueError(f"{where}: error_prob + drop_prob must be <= 1, "
+                         f"got {fm.error_prob + fm.drop_prob}")
+    if fm.timeout_mult <= 0.0:
+        raise ValueError(f"{where}: timeout_mult must be > 0, got "
+                         f"{fm.timeout_mult}")
+    prev_end = None
+    prev_name = None
+    for fl in sorted(fm.flaps, key=lambda f: f.start_cycle):
+        if fl.start_cycle < 0.0 or fl.duration <= 0.0:
+            raise ValueError(f"{where}: LinkFlap needs start_cycle >= 0 and "
+                             f"duration > 0, got start={fl.start_cycle}, "
+                             f"duration={fl.duration}")
+        if fl.mode not in ("stall", "error"):
+            raise ValueError(f"{where}: LinkFlap mode must be 'stall' or "
+                             f"'error', got {fl.mode!r}")
+        if prev_end is not None and fl.start_cycle < prev_end:
+            raise ValueError(f"{where}: overlapping outage windows "
+                             f"[{fl.start_cycle}, {fl.end}) and "
+                             f"{prev_name}; merge them")
+        prev_end = fl.end
+        prev_name = f"[{fl.start_cycle}, {fl.end})"
+
+
+# =========================================================================
 # Regions
 # =========================================================================
 @dataclass(frozen=True)
@@ -164,6 +247,10 @@ class FarMemoryRegion:
     jitter_frac: float = 0.0              # legacy uniform ± fraction
     distribution: Optional[LatencyDistribution] = None
     link: Optional[str] = None
+    faults: Optional[FaultModel] = None   # None -> this region never fails
+    #: name of the region retry-exhausted requests re-route to (same far
+    #: address, alternate path/replica): the scheduler's degradation mode.
+    failover: Optional[str] = None
 
     @property
     def end(self) -> int:
@@ -201,6 +288,25 @@ def _validate_regions(regions: Tuple[FarMemoryRegion, ...]) -> None:
                              f" {r.name!r} starts at {r.start} before the "
                              f"previous region ends at {prev_end}")
         prev_end = r.end
+        if r.faults is not None:
+            _validate_fault_model(r.faults, f"region {r.name!r}")
+    by_name = {r.name: r for r in regions}
+    for r in regions:
+        if r.failover is None:
+            continue
+        if r.failover == r.name:
+            raise ValueError(f"region {r.name!r} fails over to itself")
+        if r.failover not in by_name:
+            raise ValueError(f"region {r.name!r} fails over to unknown "
+                             f"region {r.failover!r} (have {names})")
+        seen = [r.name]
+        cur = r
+        while cur.failover is not None:
+            if cur.failover in seen:
+                raise ValueError(
+                    f"failover cycle: {' -> '.join(seen)} -> {cur.failover}")
+            seen.append(cur.failover)
+            cur = by_name[cur.failover]
 
 
 @dataclass
@@ -217,11 +323,20 @@ class FarMemoryConfig:
     #: ``default_rng(seed + i)``, so a single region covering the address
     #: space reproduces the flat model bit-for-bit.
     regions: Tuple[FarMemoryRegion, ...] = ()
+    #: flat-model fault injection (heterogeneous mode attaches a FaultModel
+    #: per region instead).
+    faults: Optional[FaultModel] = None
 
     def __post_init__(self) -> None:
         self.regions = tuple(self.regions)
         if self.regions:
             _validate_regions(self.regions)
+            if self.faults is not None:
+                raise ValueError("heterogeneous far memory takes faults per "
+                                 "region (FarMemoryRegion.faults), not on "
+                                 "the config")
+        elif self.faults is not None:
+            _validate_fault_model(self.faults, "far memory")
         if self.jitter_frac and self.distribution is not None:
             raise ValueError("jitter_frac and distribution are two spellings "
                              "of the same knob; set one")
@@ -310,7 +425,8 @@ class _RegionState:
     """Mutable per-region runtime state (the flat model's fields, per tier)."""
 
     __slots__ = ("region", "link", "rng", "token", "inflight", "ledger",
-                 "requests", "bytes_moved")
+                 "requests", "bytes_moved", "fault_rng", "errors", "timeouts",
+                 "stalls")
 
     def __init__(self, region: FarMemoryRegion, link: _Link,
                  rng: np.random.Generator, seq_sum=None) -> None:
@@ -322,6 +438,13 @@ class _RegionState:
         self.ledger = _Ledger(seq_sum)
         self.requests = 0
         self.bytes_moved = 0
+        # dedicated fault stream, spawned from the region's RNG lineage:
+        # deterministic per seed, and drawing from it never advances the
+        # latency bitstream (zero-fault configs stay bit-identical)
+        self.fault_rng = rng.spawn(1)[0] if region.faults is not None else None
+        self.errors = 0
+        self.timeouts = 0
+        self.stalls = 0
 
 
 class FarMemoryModel:
@@ -332,7 +455,8 @@ class FarMemoryModel:
     fallback otherwise) — results are bit-identical either way.
     """
 
-    def __init__(self, config: FarMemoryConfig, host_jit: bool = False):
+    def __init__(self, config: FarMemoryConfig, host_jit: bool = False,
+                 timeout_cycles: float = 0.0):
         self.config = config
         self.host_jit = bool(host_jit)
         self._jit_chain = hostjit.get_chain(self.host_jit)
@@ -346,6 +470,24 @@ class FarMemoryModel:
         # stats
         self.requests = 0
         self.bytes_moved = 0
+        # fault plane: requester-side timeout bound (RetryPolicy), flat-model
+        # fault stream, counters, and the out-of-band status channel the
+        # engines read right after each issue call. When fault_enabled is
+        # False every fault branch below is skipped — zero-fault configs run
+        # exactly the pre-fault code (bit-identical traces and bitstreams).
+        self.timeout_cycles = float(timeout_cycles)
+        self.fault_enabled = bool(
+            self.timeout_cycles > 0.0
+            or config.faults is not None
+            or any(r.faults is not None for r in config.regions))
+        self._fault_rng = (self._rng.spawn(1)[0]
+                           if config.faults is not None else None)
+        self._forced_region: Optional[int] = None   # failover route override
+        self.errors = 0
+        self.timeouts = 0
+        self.stalls = 0
+        self.last_status = STATUS_OK        # after issue(), in fault mode
+        self.last_statuses: Optional[np.ndarray] = None  # after batch/epoch
         # heterogeneous mode: per-region state + address-routing arrays
         self._regions: Optional[List[_RegionState]] = None
         if config.regions:
@@ -406,7 +548,97 @@ class FarMemoryModel:
                 "mlp": st.ledger.area(total_time) / max(total_time, 1e-9),
                 "latency_cycles": st.region.base_latency_cycles,
                 "link": st.region.link or st.region.name,
+                **({"errors": st.errors, "timeouts": st.timeouts}
+                   if self.fault_enabled else {}),
             } for st in self._regions}
+
+    # -- fault plane --------------------------------------------------------
+    @property
+    def faults_injected(self) -> int:
+        return self.errors + self.timeouts
+
+    def failover_index(self, addr: int) -> Optional[int]:
+        """Region index the scheduler re-routes `addr` to after retry
+        exhaustion (None when addr's home region has no failover)."""
+        if self._regions is None:
+            return None
+        home = self._route(int(addr), 0)
+        if home.region.failover is None:
+            return None
+        for i, st in enumerate(self._regions):
+            if st.region.name == home.region.failover:
+                return i
+        return None
+
+    def _fault_active(self, faults: Optional[FaultModel]) -> bool:
+        return faults is not None or self.timeout_cycles > 0.0
+
+    def _apply_faults(self, st: Optional[_RegionState], starts, injects,
+                      serial, done):
+        """Classify one chunk of requests and apply fault timing overrides.
+
+        ``st`` is the owning region state (None for the flat model). Consumes
+        exactly one uniform per request from the fault stream when the chunk
+        carries fault probabilities — a stream separate from the latency
+        stream, filled per chunk exactly like sequential scalar draws, so
+        every existing bitstream identity survives. ERROR keeps normal
+        timing (a NACK rides the response path); dropped requests surface
+        TIMED_OUT at ``timeout_mult``× base latency; stall-flap windows
+        defer delivery to the outage end; the requester-side
+        ``timeout_cycles`` bound reclassifies anything slower than ``start +
+        timeout_cycles``. Returns ``(done, status)`` — done possibly
+        rewritten, status int8 per request. Link-free evolution is computed
+        by the callers *before* this runs, so faults never perturb the
+        pinned injection chains."""
+        faults = st.region.faults if st is not None else self.config.faults
+        n = done.size
+        status = np.zeros(n, np.int8)
+        if faults is not None:
+            frng = st.fault_rng if st is not None else self._fault_rng
+            psum = faults.error_prob + faults.drop_prob
+            if psum > 0.0:
+                u = frng.random(size=n)
+                err = u < faults.error_prob
+                drop = ~err & (u < psum)
+                if err.any():
+                    status[err] = STATUS_ERROR
+                if drop.any():
+                    status[drop] = STATUS_TIMED_OUT
+                    done = np.where(
+                        drop,
+                        injects + serial + (st.region.base_latency_cycles
+                                            if st is not None else
+                                            self.config.base_latency_cycles)
+                        * faults.timeout_mult,
+                        done)
+            for fl in faults.flaps:
+                inwin = (injects >= fl.start_cycle) & (injects < fl.end)
+                if not inwin.any():
+                    continue
+                hit = inwin & (status == STATUS_OK)
+                if fl.mode == "error":
+                    status[hit] = STATUS_ERROR
+                else:       # stall: held in the retry buffer until it clears
+                    done = np.where(hit, fl.end + (done - injects), done)
+                    ns = int(hit.sum())
+                    self.stalls += ns
+                    if st is not None:
+                        st.stalls += ns
+        if self.timeout_cycles > 0.0:
+            late = (status == STATUS_OK) \
+                & (done - starts > self.timeout_cycles)
+            if late.any():
+                status[late] = STATUS_TIMED_OUT
+                done = np.where(late, starts + self.timeout_cycles, done)
+        ne = int((status == STATUS_ERROR).sum())
+        nt = int((status == STATUS_TIMED_OUT).sum())
+        if ne or nt:
+            self.errors += ne
+            self.timeouts += nt
+            if st is not None:
+                st.errors += ne
+                st.timeouts += nt
+        return done, status
 
     # -- request path -------------------------------------------------------
     def issue(self, now: float, size_bytes: int,
@@ -435,6 +667,11 @@ class FarMemoryModel:
         elif cfg.jitter_frac:
             lat *= 1.0 + cfg.jitter_frac * float(self._rng.uniform(-1.0, 1.0))
         done = inject_at + serial + lat
+        if self.fault_enabled:
+            d1, s1 = self._apply_faults(None, start, np.array([inject_at]),
+                                        np.array([serial]), np.array([done]))
+            done = float(d1[0])
+            self.last_status = int(s1[0])
         if cfg.max_inflight:
             self._token += 1
             heapq.heappush(self._inflight, (done, self._token))
@@ -459,11 +696,14 @@ class FarMemoryModel:
         n = sizes.size
         if n == 0:
             return np.empty(0, np.float64)
+        status = np.zeros(n, np.int8) if self.fault_enabled else None
+        if status is not None:
+            self.last_statuses = status
         if self._regions is not None:
-            return self._region_issue_batch_routed(now, sizes, addrs)
+            return self._region_issue_batch_routed(now, sizes, addrs, status)
         cfg = self.config
         if cfg.max_inflight:
-            return self._issue_batch_backpressured(now, sizes)
+            return self._issue_batch_backpressured(now, sizes, status)
         serial = sizes / cfg.bandwidth_bytes_per_cycle
         inject0 = max(now, self._link_free)
         # cumsum over [inject0, s0, s1, ...] reproduces the scalar loop's
@@ -483,13 +723,16 @@ class FarMemoryModel:
             # scalar broadcast == np.full(n, lat) elementwise, bit-for-bit
             done = injects + serial + cfg.base_latency_cycles
         self._link_free = float(injects[-1]) + float(serial[-1])
+        if status is not None:
+            done, status[:] = self._apply_faults(None, now, injects, serial,
+                                                 done)
         self._ledger.record_batch(now, done)
         self.requests += n
         self.bytes_moved += int(sizes.sum())
         return done
 
-    def _issue_batch_backpressured(self, now: float,
-                                   sizes: "np.ndarray") -> "np.ndarray":
+    def _issue_batch_backpressured(self, now: float, sizes: "np.ndarray",
+                                   status_out=None) -> "np.ndarray":
         """`issue_batch` under ``max_inflight``: chunked admission against the
         completion heap, time-identical to n sequential :meth:`issue` calls.
 
@@ -530,6 +773,9 @@ class FarMemoryModel:
                         -1.0, 1.0, size=k)
                 dk = injects + chunk + lat
                 self._link_free = float(injects[-1]) + float(chunk[-1])
+                if status_out is not None:
+                    dk, status_out[i:i + k] = self._apply_faults(
+                        None, now, injects, chunk, dk)
                 for d in dk:
                     self._token += 1
                     heapq.heappush(hp, (float(d), self._token))
@@ -551,6 +797,12 @@ class FarMemoryModel:
                         self._rng.uniform(-1.0, 1.0))
                 d = inject_at + float(serial[i]) + lat
                 self._link_free = inject_at + float(serial[i])
+                if status_out is not None:
+                    d1, s1 = self._apply_faults(
+                        None, inject_at, np.array([inject_at]),
+                        np.array([float(serial[i])]), np.array([d]))
+                    d = float(d1[0])
+                    status_out[i] = s1[0]
                 self._token += 1
                 heapq.heappush(hp, (d, self._token))
                 dones[i] = d
@@ -563,6 +815,10 @@ class FarMemoryModel:
 
     # -- heterogeneous (regioned) request path ------------------------------
     def _route(self, addr: Optional[int], size: int) -> _RegionState:
+        if self._forced_region is not None:
+            # failover re-issue: alternate path/replica serving the same far
+            # address — range checks are the home region's concern
+            return self._regions[self._forced_region]
         if addr is None:
             raise ValueError("heterogeneous far memory routes by address; "
                              "issue() needs addr")
@@ -610,6 +866,15 @@ class FarMemoryModel:
         serial = size / r.bandwidth_bytes_per_cycle
         st.link.free = inject_at + serial
         done = inject_at + serial + self._region_lat(st)
+        if self.fault_enabled:
+            if self._fault_active(r.faults):
+                d1, s1 = self._apply_faults(
+                    st, start, np.array([inject_at]), np.array([serial]),
+                    np.array([done]))
+                done = float(d1[0])
+                self.last_status = int(s1[0])
+            else:
+                self.last_status = STATUS_OK
         if r.max_inflight:
             st.token += 1
             heapq.heappush(st.inflight, (done, st.token))
@@ -637,7 +902,7 @@ class FarMemoryModel:
         return idx
 
     def _region_issue_batch_routed(self, now: float, sizes: np.ndarray,
-                                   addrs) -> np.ndarray:
+                                   addrs, status_out=None) -> np.ndarray:
         idx = self._route_batch(sizes, addrs)
         n = sizes.size
         involved = np.unique(idx)
@@ -646,7 +911,8 @@ class FarMemoryModel:
             # unlimited regions vectorize as per-link chains + per-region
             # draws (bit-identical to the scalar loop; see issue_epoch)
             return self._fused_routed(np.array([now], np.float64),
-                                      np.array([0, n], np.int64), sizes, idx)
+                                      np.array([0, n], np.int64), sizes, idx,
+                                      status_out)
         dones = np.empty(n, np.float64)
         i = 0
         while i < n:                    # consecutive same-region runs
@@ -654,11 +920,12 @@ class FarMemoryModel:
             while j < n and idx[j] == idx[i]:
                 j += 1
             st = self._regions[int(idx[i])]
+            sub = status_out[i:j] if status_out is not None else None
             if st.region.max_inflight:
                 dones[i:j] = self._region_batch_backpressured(
-                    st, now, sizes[i:j])
+                    st, now, sizes[i:j], sub)
             else:
-                dones[i:j] = self._region_batch(st, now, sizes[i:j])
+                dones[i:j] = self._region_batch(st, now, sizes[i:j], sub)
             i = j
         return dones
 
@@ -715,7 +982,7 @@ class FarMemoryModel:
         return injects
 
     def _fused_routed_small(self, seg_nows, seg_bounds, sizes,
-                            idx) -> np.ndarray:
+                            idx, status_out=None) -> np.ndarray:
         """`_fused_routed` for a handful of rows (serving epochs under
         open-loop arrivals carry ~4): the same factoring run as Python
         loops, skipping the unique/flatnonzero machinery whose fixed cost
@@ -748,6 +1015,17 @@ class FarMemoryModel:
         for ix, l in enumerate(self._links):
             l.free = free[ix]
         done = injects + serial + lat
+        if status_out is not None:
+            nows_row = np.repeat(seg_nows, np.diff(seg_bounds))
+            for ri in sorted(set(il)):
+                st = self._regions[ri]
+                if not self._fault_active(st.region.faults):
+                    continue
+                rows = np.array([i for i, r in enumerate(il) if r == ri])
+                d2, s2 = self._apply_faults(st, nows_row[rows], injects[rows],
+                                            serial[rows], done[rows])
+                done[rows] = d2
+                status_out[rows] = s2
         for s in range(len(nows)):
             lo, hi = bounds[s], bounds[s + 1]
             if lo == hi:
@@ -765,7 +1043,7 @@ class FarMemoryModel:
         return done
 
     def _fused_routed(self, seg_nows, seg_bounds, sizes,
-                      idx) -> np.ndarray:
+                      idx, status_out=None) -> np.ndarray:
         """Reordered mixed-tier issue over unlimited regions.
 
         The scalar loop's per-row work factors exactly: latency draws only
@@ -778,7 +1056,8 @@ class FarMemoryModel:
         """
         n = sizes.size
         if n <= 16 and self._jit_chain is None:
-            return self._fused_routed_small(seg_nows, seg_bounds, sizes, idx)
+            return self._fused_routed_small(seg_nows, seg_bounds, sizes, idx,
+                                            status_out)
         serial = sizes / self._bw_table[idx]
         lat = np.empty(n, np.float64)
         for ri in np.unique(idx):
@@ -790,6 +1069,17 @@ class FarMemoryModel:
         for ix, link in enumerate(self._links):
             link.free = float(free[ix])
         done = injects + serial + lat
+        if status_out is not None:
+            nows_row = np.repeat(seg_nows, np.diff(seg_bounds))
+            for ri in np.unique(idx):
+                st = self._regions[int(ri)]
+                if not self._fault_active(st.region.faults):
+                    continue
+                rows = np.flatnonzero(idx == ri)
+                d2, s2 = self._apply_faults(st, nows_row[rows], injects[rows],
+                                            serial[rows], done[rows])
+                done[rows] = d2
+                status_out[rows] = s2
         for s in range(seg_nows.size):
             lo, hi = int(seg_bounds[s]), int(seg_bounds[s + 1])
             if lo == hi:
@@ -807,7 +1097,8 @@ class FarMemoryModel:
                 self.bytes_moved += nb
         return done
 
-    def _fused_flat(self, seg_nows, seg_bounds, sizes) -> np.ndarray:
+    def _fused_flat(self, seg_nows, seg_bounds, sizes,
+                    status_out=None) -> np.ndarray:
         """Epoch-fused issue against the flat (regionless) unlimited model."""
         cfg = self.config
         n = sizes.size
@@ -825,6 +1116,10 @@ class FarMemoryModel:
             done = injects + serial + lat
         else:
             done = injects + serial + cfg.base_latency_cycles
+        if status_out is not None:
+            nows_row = np.repeat(seg_nows, np.diff(seg_bounds))
+            done, status_out[:] = self._apply_faults(None, nows_row, injects,
+                                                     serial, done)
         for s in range(seg_nows.size):
             lo, hi = int(seg_bounds[s]), int(seg_bounds[s + 1])
             if lo != hi:
@@ -851,17 +1146,22 @@ class FarMemoryModel:
         n = sizes.size
         if n == 0:
             return np.empty(0, np.float64)
+        status = np.zeros(n, np.int8) if self.fault_enabled else None
+        if status is not None:
+            self.last_statuses = status
         if self._regions is not None:
             addrs = np.asarray(addrs, np.int64) if addrs is not None else None
             idx = self._route_batch(sizes, addrs)
             if not self._mi_table[np.unique(idx)].any():
-                return self._fused_routed(seg_nows, seg_bounds, sizes, idx)
+                return self._fused_routed(seg_nows, seg_bounds, sizes, idx,
+                                          status)
             out = np.empty(n, np.float64)
             for s in range(seg_nows.size):
                 lo, hi = int(seg_bounds[s]), int(seg_bounds[s + 1])
                 if lo != hi:
                     out[lo:hi] = self._region_issue_batch_routed(
-                        float(seg_nows[s]), sizes[lo:hi], addrs[lo:hi])
+                        float(seg_nows[s]), sizes[lo:hi], addrs[lo:hi],
+                        status[lo:hi] if status is not None else None)
             return out
         if self.config.max_inflight:
             out = np.empty(n, np.float64)
@@ -869,12 +1169,13 @@ class FarMemoryModel:
                 lo, hi = int(seg_bounds[s]), int(seg_bounds[s + 1])
                 if lo != hi:
                     out[lo:hi] = self._issue_batch_backpressured(
-                        float(seg_nows[s]), sizes[lo:hi])
+                        float(seg_nows[s]), sizes[lo:hi],
+                        status[lo:hi] if status is not None else None)
             return out
-        return self._fused_flat(seg_nows, seg_bounds, sizes)
+        return self._fused_flat(seg_nows, seg_bounds, sizes, status)
 
     def _region_batch(self, st: _RegionState, now: float,
-                      sizes: np.ndarray) -> np.ndarray:
+                      sizes: np.ndarray, status_out=None) -> np.ndarray:
         """Unlimited-mode vector issue against one region (flat-path math)."""
         r = st.region
         n = sizes.size
@@ -885,6 +1186,9 @@ class FarMemoryModel:
         np.cumsum(injects, out=injects)
         done = injects + serial + self._region_lat(st, n)
         st.link.free = float(injects[-1]) + float(serial[-1])
+        if status_out is not None and self._fault_active(r.faults):
+            done, status_out[:] = self._apply_faults(st, now, injects, serial,
+                                                     done)
         st.ledger.record_batch(now, done)
         st.requests += n
         st.bytes_moved += int(sizes.sum())
@@ -893,12 +1197,15 @@ class FarMemoryModel:
         return done
 
     def _region_batch_backpressured(self, st: _RegionState, now: float,
-                                    sizes: np.ndarray) -> np.ndarray:
+                                    sizes: np.ndarray,
+                                    status_out=None) -> np.ndarray:
         """Backpressured vector issue against one region: the flat chunked
         admission replayed against the region's heap/link/RNG."""
         r = st.region
         hp = st.inflight
         n = sizes.size
+        if status_out is not None and not self._fault_active(r.faults):
+            status_out = None           # nothing to classify for this region
         serial = sizes / r.bandwidth_bytes_per_cycle
         dones = np.empty(n, np.float64)
         starts = np.empty(n, np.float64)
@@ -914,6 +1221,9 @@ class FarMemoryModel:
                 injects = np.cumsum(np.concatenate([[inject0], chunk[:-1]]))
                 dk = injects + chunk + self._region_lat(st, k)
                 st.link.free = float(injects[-1]) + float(chunk[-1])
+                if status_out is not None:
+                    dk, status_out[i:i + k] = self._apply_faults(
+                        st, now, injects, chunk, dk)
                 for d in dk:
                     st.token += 1
                     heapq.heappush(hp, (float(d), st.token))
@@ -926,6 +1236,12 @@ class FarMemoryModel:
                     heapq.heappop(hp)
                 d = inject_at + float(serial[i]) + self._region_lat(st)
                 st.link.free = inject_at + float(serial[i])
+                if status_out is not None:
+                    d1, s1 = self._apply_faults(
+                        st, inject_at, np.array([inject_at]),
+                        np.array([float(serial[i])]), np.array([d]))
+                    d = float(d1[0])
+                    status_out[i] = s1[0]
                 st.token += 1
                 heapq.heappush(hp, (d, st.token))
                 dones[i] = d
@@ -945,13 +1261,21 @@ class FarMemoryModel:
         instead of inheriting the warmup's link occupancy (requests in
         flight at the reset stop contributing to MLP — the ledger is
         cleared). The RNG streams deliberately continue (resetting them
-        would replay the warmup's latency draws)."""
+        would replay the warmup's latency draws) — the fault streams too,
+        for the same reason — but all fault counters and the out-of-band
+        status channel clear, so prepare-phase faults can't leak into a
+        measured execute() split."""
         self.requests = 0
         self.bytes_moved = 0
         self._ledger.clear()
         self._link_free = 0.0
         self._inflight.clear()
         self._token = 0
+        self.errors = 0
+        self.timeouts = 0
+        self.stalls = 0
+        self.last_status = STATUS_OK
+        self.last_statuses = None
         if self._regions is not None:
             for st in self._regions:
                 st.requests = 0
@@ -960,6 +1284,9 @@ class FarMemoryModel:
                 st.inflight.clear()
                 st.token = 0
                 st.link.free = 0.0
+                st.errors = 0
+                st.timeouts = 0
+                st.stalls = 0
 
 
 class InstantMemory(FarMemoryModel):

@@ -40,7 +40,8 @@ import numpy as np
 from repro.amu.commands import ctx
 from repro.amu.config import FREQ_GHZ, far_region
 from repro.amu.registry import workload as _workload
-from repro.core.farmem import BimodalTail, FarMemoryRegion, LatencyDistribution
+from repro.core.farmem import (BimodalTail, FarMemoryRegion, FaultModel,
+                               LatencyDistribution)
 from repro.core.workloads import (IterationProfile, WorkloadInstance, _cfg,
                                   _fit_spm)
 
@@ -130,12 +131,17 @@ def serve_regions(requests: int = REQUESTS, hot_pages: int = HOT_PAGES,
                   page_bytes: int = PAGE_BYTES, local_us: float = 0.08,
                   cxl_us: float = 1.0, xswitch_us: float = 5.0,
                   tail: Optional[LatencyDistribution] = None,
-                  link: Optional[str] = "switch") -> List[FarMemoryRegion]:
+                  link: Optional[str] = "switch",
+                  faults: Optional[FaultModel] = None,
+                  failover: Optional[str] = None) -> List[FarMemoryRegion]:
     """The tier list matching the builder's address split: hot pool + the
     per-request output pages in local DRAM, the warm pool on CXL, the cold
     pool across the switch (bimodal congestion tail by default), the two
     far tiers contending on one shared channel. Pass the same size knobs
-    here and to the builder; ``AmuConfig(far=serve_regions(...))``."""
+    here and to the builder; ``AmuConfig(far=serve_regions(...))``.
+    ``faults`` attaches a :class:`~repro.core.farmem.FaultModel` to the
+    cross-switch tier (the fabric that actually flaps in production) and
+    ``failover`` names its post-retry fallback tier (e.g. ``"cxl"``)."""
     if tail is None:
         tail = BimodalTail(0.05, 8.0)
     local_b = (hot_pages + requests) * page_bytes
@@ -145,7 +151,8 @@ def serve_regions(requests: int = REQUESTS, hot_pages: int = HOT_PAGES,
         far_region("local", 0, local_b, local_us),
         far_region("cxl", local_b, warm_b, cxl_us, link=link),
         far_region("xswitch", local_b + warm_b, cold_b, xswitch_us,
-                   distribution=tail, link=link),
+                   distribution=tail, link=link, faults=faults,
+                   failover=failover),
     ]
 
 
@@ -173,6 +180,7 @@ def build_paged_kv_serve(seed: int = 0, requests: int = REQUESTS,
                          fault_insts: int = 180,
                          fault_cycles: float = 900.0,
                          compute_insts_per_page: int = 64,
+                         sync_retries: int = 8,
                          vector: bool = False) -> WorkloadInstance:
     if data_plane not in ("ami", "sync"):
         raise KeyError(f"unknown data_plane {data_plane!r}; "
@@ -228,13 +236,31 @@ def build_paged_kv_serve(seed: int = 0, requests: int = REQUESTS,
         return np.bitwise_xor.reduce(pages_u64.reshape(-1, page_words),
                                      axis=0)
 
+    def sync_fallback(spm: int, addr: int, status):
+        """Degradation mode: the AMI plane reported a final failure (after
+        the scheduler's retries/failover), so fall back to the synchronous
+        page-fault plane — pay the trap cost and re-fetch, up to
+        `sync_retries` blocking attempts. Returns the final status (0 once
+        a fetch lands); a still-failing page is dropped from the fold so
+        the request completes degraded instead of wedging the worker."""
+        tries = 0
+        while status and tries < sync_retries:
+            yield ctx.cost(insts=fault_insts, cycles=fault_cycles)
+            status = yield ctx.aload(spm, addr, page_bytes)
+            tries += 1
+        return status
+
     def ami_task(c: int):
         spm = c * page_bytes
         for r in range(c, requests, coroutines):
             yield ctx.wait_until(arrive[r])
             acc = np.zeros(page_words, np.uint64)
             for addr in page_addr[r]:
-                yield ctx.aload(spm, int(addr), page_bytes)
+                st = yield ctx.aload(spm, int(addr), page_bytes)
+                if st:                           # None/0 on the happy path
+                    st = yield from sync_fallback(spm, int(addr), st)
+                    if st:
+                        continue                 # page lost: degraded fold
                 data = yield ctx.spm_read(spm, page_bytes)
                 acc = acc ^ data.view(np.uint64)
                 yield ctx.cost(insts=compute_insts_per_page)
@@ -248,9 +274,22 @@ def build_paged_kv_serve(seed: int = 0, requests: int = REQUESTS,
         slots = base + np.arange(pages_per_request) * page_bytes
         for r in range(c, requests, coroutines):
             yield ctx.wait_until(arrive[r])
-            yield ctx.aload_vec(slots, page_addr[r], page_bytes, wait=True)
+            st = yield ctx.aload_vec(slots, page_addr[r], page_bytes,
+                                     wait=True)
             data = yield ctx.spm_read(base, pages_per_request * page_bytes)
-            acc = fold(data.view(np.uint64))
+            if st is None or not np.any(st):     # zero-fault / all lanes OK
+                acc = fold(data.view(np.uint64))
+            else:                                # per-lane degradation
+                ok = np.ones(pages_per_request, bool)
+                for j in np.flatnonzero(st):
+                    s2 = yield from sync_fallback(
+                        int(slots[j]), int(page_addr[r, j]), int(st[j]))
+                    ok[j] = not s2
+                data = yield ctx.spm_read(base,
+                                          pages_per_request * page_bytes)
+                pages = data.view(np.uint64).reshape(-1, page_words)
+                acc = (np.bitwise_xor.reduce(pages[ok], axis=0) if ok.any()
+                       else np.zeros(page_words, np.uint64))
             yield ctx.cost(insts=compute_insts_per_page * pages_per_request)
             yield ctx.spm_write(base, acc)
             yield ctx.astore(base, int(out_addr[r]), page_bytes)
@@ -266,7 +305,11 @@ def build_paged_kv_serve(seed: int = 0, requests: int = REQUESTS,
             acc = np.zeros(page_words, np.uint64)
             for addr in page_addr[r]:
                 yield ctx.cost(insts=fault_insts, cycles=fault_cycles)
-                yield ctx.aload(spm, int(addr), page_bytes)
+                st = yield ctx.aload(spm, int(addr), page_bytes)
+                if st:
+                    st = yield from sync_fallback(spm, int(addr), st)
+                    if st:
+                        continue
                 data = yield ctx.spm_read(spm, page_bytes)
                 acc = acc ^ data.view(np.uint64)
                 yield ctx.cost(insts=compute_insts_per_page)

@@ -15,6 +15,7 @@ the runtime twin of the simulator's `paged_kv_serve` differential check.
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 import jax
@@ -39,6 +40,10 @@ def main() -> None:
                          "between decode steps and check token identity")
     ap.add_argument("--offload-window", type=int, default=2,
                     help="resident window (device pages) for --offload-kv")
+    ap.add_argument("--drain-timeout-s", type=float, default=30.0,
+                    help="wall-clock budget for the --offload-kv prefetch "
+                         "drain; a hung worker fails the run with a "
+                         "diagnostic instead of hanging CI")
     args = ap.parse_args()
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
@@ -111,7 +116,18 @@ def main() -> None:
         t0 = time.time()
         gen_off = run_decode(cache, kv=kv)
         t_off = time.time() - t0
-        kv.close()
+        # drain under a wall-clock watchdog: close() blocks on in-flight
+        # uploads and the writeback queue, so one wedged worker would
+        # otherwise hang the CI step with no diagnostic
+        drain = threading.Thread(target=kv.close, daemon=True)
+        drain.start()
+        drain.join(timeout=args.drain_timeout_s)
+        if drain.is_alive():
+            raise SystemExit(
+                f"offload-kv drain hung: close() still blocked after "
+                f"{args.drain_timeout_s:.1f}s (pending uploads: "
+                f"{sorted(kv._pending)}, writebacks queued: "
+                f"{kv._writeback_q.unfinished_tasks})")
         same = bool(jnp.array_equal(gen, gen_off))
         print(f"offload-kv: {n_pages} pages, window {args.offload_window}, "
               f"{t_off:.2f}s | stats {kv.stats} | tokens identical: {same}")

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -29,10 +30,23 @@ import numpy as np
 
 
 class OffloadedKVCache:
-    def __init__(self, num_layers: int, window: int = 2):
+    def __init__(self, num_layers: int, window: int = 2,
+                 max_retries: int = 0, retry_backoff_s: float = 0.01):
+        """``max_retries`` bounds how often a failed prefetch upload is
+        re-spawned (exponential ``retry_backoff_s * 2**attempt`` sleep
+        between attempts) before the error propagates; the default 0 keeps
+        the propagate-immediately behavior. Retries re-read the host page,
+        so a transient worker fault (or a late ``host_put``) recovers."""
         assert window >= 1
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        if retry_backoff_s < 0:
+            raise ValueError(
+                f"retry_backoff_s must be >= 0, got {retry_backoff_s}")
         self.num_layers = num_layers
         self.window = window
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
         self._host: List[Optional[Any]] = [None] * num_layers  # far memory
         self._resident: Dict[int, Any] = {}                    # device slots
         self._dirty: set = set()                               # update()d layers
@@ -42,7 +56,8 @@ class OffloadedKVCache:
                                            daemon=True)
         self._wb_thread.start()
         self.stats = {"prefetch_issued": 0, "prefetch_hits": 0,
-                      "demand_fetches": 0, "writebacks": 0}
+                      "demand_fetches": 0, "writebacks": 0,
+                      "prefetch_retries": 0}
 
     # ------------------------------------------------------------- far side
     def host_put(self, layer: int, page: Any) -> None:
@@ -59,6 +74,27 @@ class OffloadedKVCache:
             self._writeback_q.task_done()
 
     # ------------------------------------------------------------ AMI-style
+    def _upload(self, layer: int, host_page: Any) -> Any:
+        """The device copy itself — one seam for tests to make flaky."""
+        if host_page is None:
+            raise RuntimeError(f"layer {layer} fetched before host_put()")
+        return jax.device_put(host_page)
+
+    def _spawn_upload(self, layer: int, q: "queue.Queue") -> None:
+        # the worker must never die without posting: a bare put of the
+        # device_put result hangs every later fetch() of this layer when the
+        # upload raises (e.g. the layer was never host_put). Post the
+        # exception instead and re-raise it on the consuming side.
+        host_page = self._host[layer]
+
+        def work():
+            try:
+                q.put(("ok", self._upload(layer, host_page)))
+            except BaseException as exc:  # noqa: BLE001 - posted, not dropped
+                q.put(("err", exc))
+
+        threading.Thread(target=work, daemon=True).start()
+
     def prefetch(self, layer: int) -> None:
         """aload: issue the upload of `layer`'s page; returns immediately."""
         if layer >= self.num_layers or layer in self._resident \
@@ -66,30 +102,26 @@ class OffloadedKVCache:
             return
         q: "queue.Queue" = queue.Queue(maxsize=1)
         self._pending[layer] = q
-        host_page = self._host[layer]
         self.stats["prefetch_issued"] += 1
-
-        # the worker must never die without posting: a bare put of the
-        # device_put result hangs every later fetch() of this layer when the
-        # upload raises (e.g. the layer was never host_put). Post the
-        # exception instead and re-raise it on the consuming side.
-        def work():
-            try:
-                if host_page is None:
-                    raise RuntimeError(
-                        f"layer {layer} fetched before host_put()")
-                q.put(("ok", jax.device_put(host_page)))
-            except BaseException as exc:  # noqa: BLE001 - posted, not dropped
-                q.put(("err", exc))
-
-        threading.Thread(target=work, daemon=True).start()
+        self._spawn_upload(layer, q)
 
     def _take_pending(self, layer: int) -> Any:
-        """Consume `layer`'s in-flight transfer, re-raising a worker error."""
+        """Consume `layer`'s in-flight transfer, re-raising a worker error
+        after `max_retries` bounded-backoff re-spawns (each retry re-reads
+        the current host page, so transient faults recover)."""
         status, payload = self._pending.pop(layer).get()
+        attempt = 0
+        while status == "err" and attempt < self.max_retries:
+            time.sleep(self.retry_backoff_s * (2.0 ** attempt))
+            attempt += 1
+            self.stats["prefetch_retries"] += 1
+            q: "queue.Queue" = queue.Queue(maxsize=1)
+            self._spawn_upload(layer, q)
+            status, payload = q.get()
         if status == "err":
             raise RuntimeError(
-                f"prefetch of layer {layer} failed") from payload
+                f"prefetch of layer {layer} failed "
+                f"(after {attempt} retries)") from payload
         return payload
 
     def fetch(self, layer: int) -> Any:

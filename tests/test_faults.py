@@ -1,0 +1,416 @@
+"""Fault-injected far memory: error status, retry/backoff, failover.
+
+The contract under test (TESTING.md "Fault injection"):
+
+* fault draws come from a dedicated per-region stream spawned off the
+  region's RNG lineage, so fault schedules are deterministic and
+  batch/scalar bitstream-identical — faulty runs are trace-identical
+  between the scalar and batched ENGINES under a fixed scheduler, and
+  bit-identical between the per-command and epoch-fused schedulers on the
+  same engine, for every registered port (incl. `paged_kv_serve`);
+* zero-fault configs are bit-identical whether or not a RetryPolicy is
+  attached — statuses travel out of band, traces and summaries carry no
+  fault keys;
+* failed requests move no data; after the scheduler's retries and one
+  failover attempt are exhausted, the awaiting coroutine receives the
+  final status (int for a single-token await, per-lane int8 array for a
+  vector await);
+* `RunStats` reports faults_injected / retries / timeouts / failovers /
+  availability; `reset_stats()` clears prepare-phase fault state so it
+  cannot leak into a measured execute() split;
+* fault-config validation names the offending region (negative
+  probabilities, overlapping outage windows, failover cycles).
+"""
+import numpy as np
+import pytest
+
+from repro.amu import (REGISTRY, STATUS_ERROR, STATUS_OK, STATUS_TIMED_OUT,
+                       AmuConfig, AmuSession, FaultModel, LinkFlap,
+                       RetryPolicy, far_region)
+from repro.configs.base import EngineConfig
+from repro.core.coroutines import (SCHEDULER_KINDS, Aload, AloadVec, SpmRead)
+from repro.core.engine import make_engine
+from repro.core.farmem import FarMemoryConfig, FarMemoryModel
+from repro.core.serving import serve_regions
+
+RETRY = RetryPolicy(max_retries=3, backoff=200.0)
+
+
+def _fault_regions(mem_bytes, error_prob=0.04, drop_prob=0.02,
+                   failover=True, flaps=()):
+    """A faulted 'fabric' tier covering the whole port address space, plus
+    a clean slower 'backup' tier for failover."""
+    size = max((int(mem_bytes) + 63) // 64 * 64, 64)
+    fm = FaultModel(error_prob=error_prob, drop_prob=drop_prob,
+                    flaps=tuple(flaps))
+    return [far_region("fabric", 0, size, 1.0, faults=fm,
+                       failover="backup" if failover else None),
+            far_region("backup", size, size, 3.0)]
+
+
+def _mem_size(wl, vector=False):
+    return REGISTRY.build(wl, 0, vector=vector).mem.size
+
+
+def _capture(wl, engine, sched, far, retry=RETRY, vector=False, **build_kw):
+    cfg = AmuConfig(engine=engine, scheduler=sched, far=far, retry=retry,
+                    vector=vector)
+    with AmuSession(cfg) as s:
+        st = s.run(wl, record_trace=True, **build_kw)
+        return st, list(s.engine.trace), s.engine.mem.copy()
+
+
+def _stats_no_host_counters(st):
+    d = st.to_dict()
+    for k in ("engine_entries", "rows_per_entry"):
+        d.pop(k)
+    return d
+
+
+# =========================================================================
+# Differential pinning: faulty runs across engines and scheduler fusion
+# =========================================================================
+@pytest.mark.parametrize("wl", REGISTRY.names())
+def test_faulty_runs_trace_identical_across_engines_and_fusion(wl):
+    far = _fault_regions(_mem_size(wl))
+    a = _capture(wl, "scalar", "batched", far)
+    b = _capture(wl, "batched", "batched", far)
+    c = _capture(wl, "batched", "fused", far)
+    # retry + failover recover every request, so the run stays correct
+    assert a[0].verified is True
+    assert a[1] == b[1] == c[1]                  # issue/fin trace
+    assert np.array_equal(a[2], b[2]) and np.array_equal(b[2], c[2])
+    # engines: everything identical; mlp alone compared with tolerance
+    # (the ledger's accumulation order differs between flat and batched
+    # record paths by ~1e-14 — a pre-existing zero-fault property)
+    da, db = _stats_no_host_counters(a[0]), _stats_no_host_counters(b[0])
+    ma, mb = da.pop("mlp"), db.pop("mlp")
+    assert da == db
+    assert np.isclose(ma, mb, rtol=1e-9, atol=0.0)
+    # fused vs per-command on the same engine: bit-identical, mlp included
+    assert _stats_no_host_counters(b[0]) == _stats_no_host_counters(c[0])
+
+
+@pytest.mark.parametrize("wl", ["GUPS", "STREAM", "LL", "paged_kv_serve"])
+def test_faulty_vector_ports_differential(wl):
+    far = _fault_regions(_mem_size(wl, vector=True))
+    a = _capture(wl, "scalar", "batched", far, vector=True)
+    b = _capture(wl, "batched", "batched", far, vector=True)
+    c = _capture(wl, "batched", "fused", far, vector=True)
+    assert a[0].verified is True
+    assert a[1] == b[1] == c[1]
+    assert np.array_equal(a[2], b[2]) and np.array_equal(b[2], c[2])
+    assert _stats_no_host_counters(b[0]) == _stats_no_host_counters(c[0])
+
+
+def test_faulty_scalar_scheduler_survives_on_both_engines():
+    """The scalar scheduler (the semantic oracle loop) also runs the retry
+    plane; both engines under it recover to full availability."""
+    far = _fault_regions(_mem_size("GUPS"))
+    for engine in ("scalar", "batched"):
+        st, _, _ = _capture("GUPS", engine, "scalar", far)
+        assert st.verified is True
+        assert st.availability == 1.0
+        assert st.faults_injected > 0 and st.retries > 0
+
+
+# =========================================================================
+# Zero-fault bit-identity: the fault plane is invisible until armed
+# =========================================================================
+@pytest.mark.parametrize("engine,sched", [("scalar", "scalar"),
+                                          ("scalar", "batched"),
+                                          ("batched", "batched"),
+                                          ("batched", "fused")])
+def test_zero_fault_retry_policy_is_invisible(engine, sched):
+    out = {}
+    for tag, retry in (("plain", None), ("retry", RETRY)):
+        cfg = AmuConfig(engine=engine, scheduler=sched, retry=retry,
+                        far=[far_region("all", 0, 1 << 22, 1.0)])
+        with AmuSession(cfg) as s:
+            st = s.run("GUPS", record_trace=True)
+            assert st.verified is True
+            out[tag] = (st.to_dict(), list(s.engine.trace),
+                        dict(s.scheduler.summary()))
+    assert out["plain"] == out["retry"]
+    # no fault keys leak into a zero-fault summary
+    for key in ("faults_injected", "retries", "timeouts", "failovers",
+                "availability", "failed"):
+        assert key not in out["plain"][2]
+    # RunStats carries the idle defaults
+    assert out["plain"][0]["faults_injected"] == 0
+    assert out["plain"][0]["availability"] == 1.0
+
+
+def test_zero_fault_flat_model_with_retry_policy():
+    a = AmuConfig(engine="batched", latency_us=1.0)
+    b = a.derive(retry=RETRY)
+    runs = []
+    for cfg in (a, b):
+        with AmuSession(cfg) as s:
+            st = s.run("GUPS", record_trace=True)
+            runs.append((st.to_dict(), list(s.engine.trace)))
+    assert runs[0] == runs[1]
+
+
+# =========================================================================
+# Status delivery + data movement (scheduler-level, deterministic)
+# =========================================================================
+def _drive_tasks(tasks, far_cfg, retry=None, sched="batched",
+                 timeout_cycles=0.0, mem_fill=0):
+    ecfg = EngineConfig(queue_length=64, granularity=8, spm_bytes=4096,
+                        batch_ids=16)
+    far = FarMemoryModel(far_cfg, timeout_cycles=timeout_cycles)
+    mem = np.full(1 << 16, mem_fill, np.uint8)
+    eng = make_engine("batched", ecfg, far, mem)
+    s = SCHEDULER_KINDS[sched](eng, retry=retry)
+    summary = s.run(tasks)
+    eng.drain()
+    eng.check_invariants()
+    return summary, eng
+
+
+def _always_error_cfg():
+    return FarMemoryConfig(regions=(
+        far_region("bad", 0, 1 << 16, 1.0,
+                   faults=FaultModel(error_prob=1.0)),))
+
+
+@pytest.mark.parametrize("sched", sorted(SCHEDULER_KINDS))
+def test_final_failure_status_reaches_the_coroutine(sched):
+    got = {}
+
+    def task():
+        got["scalar"] = yield Aload(0, 64, 8)
+        got["vector"] = yield AloadVec(np.array([8, 16]),
+                                       np.array([128, 256]), 8, wait=True)
+
+    summary, _ = _drive_tasks([task()], _always_error_cfg(),
+                              retry=RetryPolicy(max_retries=1, backoff=50.0),
+                              sched=sched)
+    assert got["scalar"] == STATUS_ERROR
+    np.testing.assert_array_equal(
+        np.asarray(got["vector"]), np.full(2, STATUS_ERROR, np.int8))
+    assert summary["retries"] == 3               # one per original request
+    assert summary["failed"] == 3
+    assert summary["availability"] == 0.0
+
+
+def test_status_delivered_immediately_without_retry_policy():
+    got = {}
+
+    def task():
+        got["st"] = yield Aload(0, 64, 8)
+
+    summary, _ = _drive_tasks([task()], _always_error_cfg())
+    assert got["st"] == STATUS_ERROR
+    assert summary["retries"] == 0 and summary["failed"] == 1
+
+
+def test_dropped_requests_surface_timed_out():
+    cfg = FarMemoryConfig(regions=(
+        far_region("droppy", 0, 1 << 16, 1.0,
+                   faults=FaultModel(drop_prob=1.0)),))
+    got = {}
+
+    def task():
+        got["st"] = yield Aload(0, 64, 8)
+
+    summary, _ = _drive_tasks([task()], cfg)
+    assert got["st"] == STATUS_TIMED_OUT
+    assert summary["timeouts"] == 1
+
+
+def test_client_side_timeout_classifies_slow_requests():
+    """RetryPolicy.timeout_cycles arms a client-side timer: a region with
+    no FaultModel at all still times requests out when their modeled
+    completion exceeds the budget."""
+    cfg = FarMemoryConfig.from_latency_us(5.0)   # 15000-cycle base latency
+    got = {}
+
+    def task():
+        got["st"] = yield Aload(0, 64, 8)
+
+    summary, _ = _drive_tasks([task()], cfg, timeout_cycles=1000.0)
+    assert got["st"] == STATUS_TIMED_OUT
+    assert summary["timeouts"] == 1
+
+
+def test_failed_requests_move_no_data():
+    seen = {}
+
+    def task():
+        st = yield Aload(0, 64, 8)
+        assert st == STATUS_ERROR
+        data = yield SpmRead(0, 8)
+        seen["bytes"] = bytes(data)
+
+    _drive_tasks([task()], _always_error_cfg(), mem_fill=0xAB)
+    # far memory holds 0xAB everywhere, but the failed load must not have
+    # copied it into the (zero-initialized) SPM
+    assert seen["bytes"] == b"\x00" * 8
+
+
+def test_successful_await_still_resumes_with_ok_status():
+    got = {}
+
+    def task():
+        got["st"] = yield Aload(0, 64, 8)
+
+    cfg = FarMemoryConfig(regions=(
+        far_region("fine", 0, 1 << 16, 1.0,
+                   faults=FaultModel(error_prob=0.0)),))
+    _drive_tasks([task()], cfg)
+    assert got["st"] == STATUS_OK                # fault mode: explicit OK
+
+
+# =========================================================================
+# Recovery: retries, failover, outage survival
+# =========================================================================
+def test_failover_absorbs_retry_exhaustion():
+    """Fabric errors every request: each exhausts max_retries, then one
+    failover to the clean backup tier succeeds — full availability, and
+    the request accounting closes exactly."""
+    far = _fault_regions(_mem_size("GUPS"), error_prob=1.0, drop_prob=0.0)
+    st, _, _ = _capture("GUPS", "batched", "fused", far)
+    assert st.verified is True
+    assert st.availability == 1.0
+    assert st.failovers > 0
+    # every original request burned max_retries retries then failed over
+    assert st.retries == st.failovers * RETRY.max_retries
+    assert st.requests == st.failovers + st.retries + st.failovers
+
+
+@pytest.mark.parametrize("vector", [False, True], ids=["scalar", "vector"])
+def test_serving_survives_mid_run_outage(vector):
+    """paged_kv_serve through a 60k-cycle link outage on the cross-switch
+    tier with retry + failover to CXL: the run completes, stays correct,
+    and reports full availability."""
+    fm = FaultModel(error_prob=0.01,
+                    flaps=(LinkFlap(20_000.0, 60_000.0, mode="error"),))
+    regs = serve_regions(faults=fm, failover="cxl")
+    cfg = AmuConfig(engine="batched", far=regs, retry=RETRY, vector=vector)
+    with AmuSession(cfg) as s:
+        st = s.run("paged_kv_serve")
+    assert st.verified is True
+    assert st.faults_injected > 0 and st.retries > 0
+    assert st.availability == 1.0
+    assert st.req_p999_us > 0
+
+
+def test_serving_outage_differentially_pinned():
+    """The outage run itself is pinned: scalar vs batched engine under the
+    per-command scheduler, and per-command vs fused on the batched engine."""
+    fm = FaultModel(error_prob=0.01,
+                    flaps=(LinkFlap(20_000.0, 60_000.0, mode="error"),))
+    regs = serve_regions(faults=fm, failover="cxl")
+    caps = {}
+    for engine, sched in (("scalar", "batched"), ("batched", "batched"),
+                          ("batched", "fused")):
+        cfg = AmuConfig(engine=engine, scheduler=sched, far=regs,
+                        retry=RETRY)
+        with AmuSession(cfg) as s:
+            st = s.run("paged_kv_serve", record_trace=True)
+            caps[(engine, sched)] = (st, list(s.engine.trace))
+    t1, t2, t3 = (caps[k][1] for k in caps)
+    assert t1 == t2 == t3
+    s2, s3 = caps[("batched", "batched")][0], caps[("batched", "fused")][0]
+    assert _stats_no_host_counters(s2) == _stats_no_host_counters(s3)
+
+
+def test_serving_degrades_without_retry_policy():
+    """No RetryPolicy: statuses reach the port, whose sync_fallback keeps
+    the fold correct (verified) while availability honestly reports the
+    AMI-plane failures."""
+    regs = serve_regions(faults=FaultModel(error_prob=0.05), failover=None)
+    with AmuSession(AmuConfig(engine="batched", far=regs)) as s:
+        st = s.run("paged_kv_serve")
+    assert st.verified is True
+    assert st.faults_injected > 0
+    assert st.retries == 0 and st.failovers == 0
+    assert st.availability < 1.0
+
+
+# =========================================================================
+# reset_stats: prepare-phase faults cannot leak into execute()
+# =========================================================================
+def test_reset_stats_clears_prepare_phase_fault_state():
+    far = _fault_regions(_mem_size("GUPS"), error_prob=1.0, drop_prob=0.0)
+    cfg = AmuConfig(engine="batched", far=far, retry=RETRY)
+    with AmuSession(cfg) as s:
+        s.prepare("GUPS")
+        # warmup traffic through the always-erroring fabric tier
+        for i in range(16):
+            s.far.issue(float(i), 64, i * 64)
+        assert s.far.faults_injected == 16
+        assert s.far.last_status != STATUS_OK
+        s.far.reset_stats()
+        assert s.far.faults_injected == 0
+        assert s.far.errors == 0 and s.far.timeouts == 0
+        assert s.far.last_status == STATUS_OK
+        assert s.far.last_statuses is None
+        measured = s.execute()
+    # with error_prob=1.0 every measured-phase fault produced exactly one
+    # retry or failover re-issue; a leaked warmup fault would break this
+    assert measured.faults_injected == measured.retries + measured.failovers
+    assert measured.availability == 1.0
+    assert measured.verified is True
+
+
+def test_scheduler_reset_stats_clears_retry_plane():
+    got = {}
+
+    def task():
+        got["st"] = yield Aload(0, 64, 8)
+
+    ecfg = EngineConfig(queue_length=64, granularity=8, spm_bytes=4096,
+                        batch_ids=16)
+    far = FarMemoryModel(_always_error_cfg())
+    eng = make_engine("batched", ecfg, far, np.zeros(1 << 16, np.uint8))
+    sched = SCHEDULER_KINDS["batched"](
+        eng, retry=RetryPolicy(max_retries=2, backoff=50.0))
+    sched.run([task()])
+    assert sched.n_retries == 2 and sched.n_failed == 1
+    far.reset_stats()
+    sched.reset_stats()
+    assert sched.n_retries == sched.n_failovers == sched.n_failed == 0
+    assert not sched._retry_heap and not sched._tok_req
+    assert not sched._tok_fstat and not sched._group_toks
+    assert sched.summary()["faults_injected"] == 0
+
+
+# =========================================================================
+# Validation: errors name the offending region
+# =========================================================================
+def test_negative_probabilities_rejected():
+    with pytest.raises(ValueError, match="fabric.*probabilities"):
+        AmuConfig(far=[far_region("fabric", 0, 4096, 1.0,
+                                  faults=FaultModel(error_prob=-0.1))])
+
+
+def test_overlapping_outage_windows_rejected():
+    flaps = (LinkFlap(0.0, 100.0), LinkFlap(50.0, 100.0))
+    with pytest.raises(ValueError, match="fabric.*overlapping"):
+        AmuConfig(far=[far_region("fabric", 0, 4096, 1.0,
+                                  faults=FaultModel(flaps=flaps))])
+
+
+def test_failover_cycles_rejected():
+    a = far_region("a", 0, 4096, 1.0, failover="b")
+    b = far_region("b", 4096, 4096, 1.0, failover="a")
+    with pytest.raises(ValueError, match="failover cycle"):
+        AmuConfig(far=[a, b])
+    with pytest.raises(ValueError, match="itself"):
+        AmuConfig(far=[far_region("a", 0, 4096, 1.0, failover="a")])
+    with pytest.raises(ValueError, match="unknown"):
+        AmuConfig(far=[far_region("a", 0, 4096, 1.0, failover="ghost")])
+
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError, match="max_retries"):
+        RetryPolicy(max_retries=-1)
+    with pytest.raises(ValueError, match="timeout_cycles"):
+        RetryPolicy(timeout_cycles=-1.0)
+    with pytest.raises(ValueError, match="backoff"):
+        RetryPolicy(backoff=-1.0)
+    with pytest.raises(TypeError, match="RetryPolicy"):
+        AmuConfig(retry=3)

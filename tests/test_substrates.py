@@ -246,3 +246,61 @@ def test_offloaded_kv_cache_missing_layer_raises_not_hangs():
     with pytest.raises(RuntimeError, match="host_put"):
         cache.fetch(2)
     cache.close()
+
+def test_offloaded_kv_cache_retries_flaky_uploads():
+    import pytest
+
+    from repro.runtime.offload import OffloadedKVCache
+
+    class Flaky(OffloadedKVCache):
+        """Upload worker whose first `fail_first` _upload calls die with a
+        transient error — the seam the retry loop is specified against."""
+
+        def __init__(self, *a, fail_first=0, **kw):
+            super().__init__(*a, **kw)
+            self._fail_left = fail_first
+
+        def _upload(self, layer, host_page):
+            if self._fail_left > 0:
+                self._fail_left -= 1
+                raise OSError("transient NIC hiccup")
+            return super()._upload(layer, host_page)
+
+    page = np.arange(4, dtype=np.float32).reshape(2, 2)
+
+    # default max_retries=0: the first failure propagates at fetch()
+    cache = Flaky(num_layers=1, window=1, fail_first=1)
+    cache.host_put(0, page)
+    cache.prefetch(0)
+    with pytest.raises(RuntimeError, match="layer 0"):
+        cache.fetch(0)
+    cache.close()
+
+    # bounded retry with backoff recovers from transient failures
+    cache = Flaky(num_layers=1, window=1, fail_first=2,
+                  max_retries=3, retry_backoff_s=0.0)
+    cache.host_put(0, page)
+    cache.prefetch(0)
+    np.testing.assert_array_equal(np.asarray(cache.fetch(0)), page)
+    assert cache.stats["prefetch_retries"] == 2
+    cache.close()
+
+    # exhaustion: persistent failure still surfaces, naming the budget
+    cache = Flaky(num_layers=1, window=1, fail_first=99,
+                  max_retries=2, retry_backoff_s=0.0)
+    cache.host_put(0, page)
+    cache.prefetch(0)
+    with pytest.raises(RuntimeError, match="after 2 retries"):
+        cache.fetch(0)
+    cache.close()
+
+
+def test_offloaded_kv_cache_rejects_negative_retry_knobs():
+    import pytest
+
+    from repro.runtime.offload import OffloadedKVCache
+
+    with pytest.raises(ValueError, match="max_retries"):
+        OffloadedKVCache(num_layers=1, max_retries=-1)
+    with pytest.raises(ValueError, match="retry_backoff_s"):
+        OffloadedKVCache(num_layers=1, retry_backoff_s=-0.5)
