@@ -375,6 +375,70 @@ def fault_tolerance(smoke: bool = False) -> List[Row]:
     return rows
 
 
+def rack_scaling(smoke: bool = False) -> List[Row]:
+    """Rack-scale sweep: aggregate throughput and per-core fairness vs
+    core count over ONE shared far-memory device at fixed link bandwidth
+    (the default 64 GB/s flat operating point).
+
+    Homogeneous rows run GUPS on every core (per-core spawned seeds);
+    ``agg_gups`` divides total updates by the rack makespan, so it scales
+    with cores until the shared link saturates, ``fairness`` is Jain's
+    index over per-core GUPS and ``link_occ`` the shared channel's busy
+    fraction. Mixed rows colocate GUPS with the paged-KV serving port on
+    the same device — the serving cores' p99 under a throughput-hungry
+    neighbor is the noisy-neighbor number. Smoke mode shrinks to cores
+    {1,4} + one mixed pair; the CI gate floors 4-core scaling (>= 2x) and
+    homogeneous fairness (>= 0.9)."""
+    from repro.amu import RackSession
+    from repro.amu.session import _core_seeds
+
+    rows: List[Row] = []
+    counts = [1, 4] if smoke else [1, 2, 4, 8, 16]
+    gups_kw = dict(table_words=2048, updates=512, coroutines=64,
+                   distinct=True) if smoke else {}
+    agg1 = None
+    for n in counts:
+        with RackSession(AMU.derive(cores=n)) as r:
+            rs = r.run("GUPS", **gups_kw)
+        assert rs.verified
+        if agg1 is None:
+            agg1 = rs.aggregate_gups
+        rows.append((
+            f"rack/GUPS/cores{n}", rs.us,
+            f"agg_gups={rs.aggregate_gups:.4f},"
+            f"fairness={rs.fairness:.4f},"
+            f"min_gups={min(rs.core_gups):.4f},"
+            f"max_gups={max(rs.core_gups):.4f},"
+            f"scaling_vs_1core={rs.aggregate_gups / agg1:.2f}x,"
+            f"link_occ={rs.link_occupancy['far']['occupancy']:.4f}"))
+
+    # --- colocation: half the cores run GUPS, half the paged-KV serving
+    # port, over the same shared device (prebuilt ports with the same
+    # spawned per-core seeds a homogeneous rack would use)
+    serve_kw = dict(requests=64, coroutines=16) if smoke else {}
+    for n in ([2] if smoke else [2, 4, 8]):
+        seeds = _core_seeds(AMU.seed, n)
+        ports = [
+            REGISTRY.build("GUPS", seeds[i], **gups_kw) if i < n - n // 2
+            else REGISTRY.build("paged_kv_serve", seeds[i], **serve_kw)
+            for i in range(n)]
+        with RackSession(AMU.derive(cores=n)) as r:
+            rs = r.run(ports)
+        assert rs.verified
+        gups_g = [g for g, s in zip(rs.core_gups, rs.cores)
+                  if s.workload == "GUPS"]
+        serve_p99 = max(s.req_p99_us for s in rs.cores
+                        if s.workload == "paged_kv_serve")
+        rows.append((
+            f"rack/mixed/cores{n}", rs.us,
+            f"agg_gups={rs.aggregate_gups:.4f},"
+            f"fairness={rs.fairness:.4f},"
+            f"gups_min={min(gups_g):.4f},"
+            f"serve_p99={serve_p99:.1f},"
+            f"link_occ={rs.link_occupancy['far']['occupancy']:.4f}"))
+    return rows
+
+
 def table5_disambiguation() -> List[Row]:
     """Table 5: fraction of execution time in software disambiguation."""
     rows = []

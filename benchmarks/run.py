@@ -2,10 +2,12 @@
 engine-driver throughput + roofline. Prints ``name,us_per_call,derived`` CSV.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--engine scalar|batched]
-                                               [--vector] [--smoke]
+                                               [--vector] [--smoke] [--list]
                                                [--json PATH]
                                                [--profile PATH] [figure ...]
-(no args -> everything; roofline rows require results/dryrun.jsonl).
+(no args -> everything; roofline rows require results/dryrun.jsonl;
+`--list` prints the sweep names and the registered workloads with their
+declared capabilities, then exits).
 `--engine` picks the timed-engine implementation behind the AMU configs:
 "batched" (default; vectorized, fast sweeps) or "scalar" (per-event oracle).
 `--vector` runs the AloadVec/AstoreVec (and software-pipelined chase)
@@ -65,6 +67,12 @@ SMOKE_MAX_ENTRIES = {
 # regressed), and serving availability must hold >= 0.99
 SMOKE_MAX_FAULT_SLOWDOWN = 1.5
 SMOKE_MIN_AVAILABILITY = 0.99
+# rack gates (homogeneous 4-core GUPS row, uncontended link bandwidth):
+# aggregate throughput must scale >= 2x over one core (measured ~3.2x —
+# below that the arbiter is serializing cores it shouldn't), and Jain
+# fairness across identical cores must hold >= 0.9 (measured ~0.997)
+SMOKE_MIN_RACK_SCALING = 2.0
+SMOKE_MIN_RACK_FAIRNESS = 0.9
 
 
 def _parse_speedup(derived: str, key: str) -> float:
@@ -72,6 +80,22 @@ def _parse_speedup(derived: str, key: str) -> float:
         if part.startswith(key + "="):
             return float(part.split("=")[1].rstrip("x"))
     return 0.0
+
+
+def _print_catalog(suites, file=None) -> None:
+    """``--list``: every sweep, then every registered workload with its
+    declared capabilities (straight from repro.amu.REGISTRY)."""
+    from repro.amu import REGISTRY
+    print("sweeps:", file=file)
+    for name in sorted(suites):
+        print(f"  {name}", file=file)
+    print("workloads (repro.amu.REGISTRY):", file=file)
+    caps = ("vector", "pipelined", "locked", "distinct", "frontier",
+            "request_level")
+    for name, wd in REGISTRY.items():
+        have = ",".join(c for c in caps if getattr(wd, c)) or "-"
+        desc = f"  {wd.description}" if wd.description else ""
+        print(f"  {name}: {have}{desc}", file=file)
 
 
 def main() -> None:
@@ -122,13 +146,18 @@ def main() -> None:
     suites["engine"] = lambda: engine_driver(smoke=smoke)
     suites["serve"] = lambda: pf.serve_latency(smoke=smoke)
     suites["faults"] = lambda: pf.fault_tolerance(smoke=smoke)
+    suites["rack"] = lambda: pf.rack_scaling(smoke=smoke)
     suites["roofline"] = roofline_rows
 
-    # smoke mode: the (shrunken) engine-driver throughput, serving and
-    # fault-injection suites always run, so the regression gates below can
-    # never be vacuously green
+    if "--list" in args:
+        _print_catalog(suites)
+        return
+
+    # smoke mode: the (shrunken) engine-driver throughput, serving,
+    # fault-injection and rack suites always run, so the regression gates
+    # below can never be vacuously green
     if smoke:
-        always = ("engine", "serve", "faults")
+        always = ("engine", "serve", "faults", "rack")
         wanted = list(always) + [a for a in args if a not in always]
     else:
         wanted = args or list(suites)
@@ -136,8 +165,9 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name in wanted:
         if name not in suites:
-            print(f"# unknown suite {name!r}; known: {sorted(suites)}",
+            print(f"# unknown suite {name!r}; known sweeps and workloads:",
                   file=sys.stderr)
+            _print_catalog(suites, file=sys.stderr)
             continue
         for row_name, us, derived in suites[name]():
             collected.append({"name": row_name, "us_per_call": us,
@@ -185,6 +215,18 @@ def main() -> None:
                         f"{row['name']}: {ents:.0f} engine entries > "
                         f"{SMOKE_MAX_ENTRIES[row['name']]} — epoch fusion "
                         f"degraded toward per-command granularity")
+            if row["name"] == "rack/GUPS/cores4":
+                sc = _parse_speedup(row["derived"], "scaling_vs_1core")
+                if sc < SMOKE_MIN_RACK_SCALING:
+                    failures.append(
+                        f"{row['name']}: 4-core aggregate scaling "
+                        f"{sc:.2f}x < {SMOKE_MIN_RACK_SCALING}x over one "
+                        f"core at uncontended bandwidth")
+                fa = _parse_speedup(row["derived"], "fairness")
+                if fa < SMOKE_MIN_RACK_FAIRNESS:
+                    failures.append(
+                        f"{row['name']}: homogeneous Jain fairness "
+                        f"{fa:.4f} < {SMOKE_MIN_RACK_FAIRNESS}")
             if row["name"].startswith("faults/") \
                     and row["name"].endswith("/retry_on"):
                 sp = _parse_speedup(row["derived"], "vs_clean")

@@ -1,18 +1,24 @@
 """Quickstart: the paper's AMI programming model in 60 lines.
 
-Runs GUPS (the paper's flagship random-access benchmark) three ways:
+Runs GUPS (the paper's flagship random-access benchmark) four ways:
   1. synchronous baseline (modeled OoO core),
-  2. AMU with the coroutine framework (actually executed against the timed
-     engine — the far-memory table is real data, verified at the end),
-  3. the Pallas TPU kernel twin (interpret mode on CPU).
+  2. AMU through the session API — `AmuConfig` + `AmuSession.run` against
+     the timed engine (the far-memory table is real data, verified),
+  3. a 4-core rack sharing ONE far-memory device (`RackSession`),
+  4. the Pallas TPU kernel twin (interpret mode on CPU).
 
 Usage: PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 import numpy as np
 
+from repro.amu import AmuConfig, AmuSession, RackSession
 from repro.core import simulator as sim
 from repro.kernels import ops, ref
+
+# shrunken rack shape (keeps this example a fast CI smoke; drop the
+# kwargs for the paper-sized run)
+GUPS_KW = dict(table_words=8192, updates=2048, coroutines=128)
 
 
 def main() -> None:
@@ -21,10 +27,22 @@ def main() -> None:
           f"{'AMU MLP':>8s}")
     for lat in (0.2, 1.0, 5.0):
         base = sim.run("GUPS", "baseline", lat)
-        amu = sim.run("GUPS", "amu", lat)
-        assert amu["verified"], "far-memory contents wrong!"
-        print(f"{lat:7.1f}u {base['us']:9.1f}u {amu['us']:9.1f}u "
-              f"{base['us'] / amu['us']:7.2f}x {amu['mlp']:8.1f}")
+        with AmuSession(AmuConfig(latency_us=lat)) as s:
+            amu = s.run("GUPS")          # same paper-sized port as baseline
+        assert amu.verified, "far-memory contents wrong!"
+        print(f"{lat:7.1f}u {base['us']:9.1f}u {amu.us:9.1f}u "
+              f"{base['us'] / amu.us:7.2f}x {amu.mlp:8.1f}")
+
+    print("\n=== 4 cores, one shared far-memory device (RackSession) ===")
+    with RackSession(AmuConfig(cores=4)) as r:
+        rack = r.run("GUPS", **GUPS_KW)
+    with AmuSession(AmuConfig()) as s:
+        solo = s.run("GUPS", **GUPS_KW)
+    assert rack.verified
+    occ = rack.link_occupancy["far"]["occupancy"]
+    print(f"aggregate {rack.aggregate_gups / (solo.units / solo.us / 1e3):.2f}x"
+          f" one core | Jain fairness {rack.fairness:.3f}"
+          f" | shared-link occupancy {occ:.1%}")
 
     print("\n=== the same mechanism as a TPU kernel (interpret mode) ===")
     rng = np.random.default_rng(0)
@@ -37,8 +55,8 @@ def main() -> None:
           "OK" if bool(jnp.all(out == expect)) else "MISMATCH")
 
     print("\nThe paper's law: sustained MLP needs latency x bandwidth of "
-          "slots;\nthe engine, the coroutine runtime, and the kernel all "
-          "implement it.")
+          "slots;\nthe engine, the coroutine runtime, the rack arbiter and "
+          "the kernel\nall implement it.")
 
 
 if __name__ == "__main__":

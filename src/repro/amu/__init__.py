@@ -8,6 +8,9 @@ Three pieces (see TESTING.md for the migration table from the old knobs):
   point) with validation and ``derive``-style variation.
 * :class:`AmuSession` — a context manager owning engine + scheduler +
   far-memory lifecycle; ``session.run(port) -> RunStats``.
+  :class:`RackSession` is its rack-scale sibling: ``AmuConfig(cores=N)``
+  runs N per-core stacks over one shared far memory
+  (``run(ports) -> RackStats``).
 * :func:`workload` / :data:`REGISTRY` — the pluggable workload registry
   (one decorated builder per scenario, with declared capabilities), plus
   the :class:`Port` protocol any custom workload can satisfy.
@@ -20,7 +23,7 @@ from repro.amu.config import (FREQ_GHZ, LINE, AmuConfig, RetryPolicy,
                               far_config, far_region)
 from repro.amu.registry import (REGISTRY, Port, WorkloadDef,
                                 WorkloadRegistry, workload)
-from repro.amu.session import AmuSession, RunStats
+from repro.amu.session import AmuSession, RackSession, RackStats, RunStats
 from repro.core.farmem import (STATUS_ERROR, STATUS_OK, STATUS_TIMED_OUT,
                                BimodalTail, FarMemoryConfig, FarMemoryRegion,
                                FaultModel, LatencyDistribution, LinkFlap,
@@ -34,7 +37,8 @@ import repro.core.workloads  # noqa: E402,F401  (registration side-effect)
 import repro.core.serving    # noqa: E402,F401  (registers paged_kv_serve)
 
 __all__ = [
-    "AmuConfig", "AmuSession", "RunStats", "ctx", "CommandFacade",
+    "AmuConfig", "AmuSession", "RunStats", "RackSession", "RackStats",
+    "ctx", "CommandFacade",
     "workload", "Port", "WorkloadDef", "WorkloadRegistry", "REGISTRY",
     "far_config", "far_region", "FREQ_GHZ", "LINE",
     "FarMemoryConfig", "FarMemoryRegion", "LatencyDistribution",

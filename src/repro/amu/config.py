@@ -129,8 +129,14 @@ class AmuConfig:
       (deterministic backoff re-issue, then failover); also arms the far
       model's client-side ``timeout_cycles`` timer. ``None`` (default)
       delivers failure statuses immediately with no retry traffic.
+    * ``cores`` — rack width: N complete engine+SPM+scheduler stacks over
+      ONE shared far-memory model, interleaved by the deterministic
+      global-clock arbiter (``repro.core.rack``). ``cores=1`` (default)
+      is bit-identical to the plain single-core session; N > 1 runs go
+      through :class:`repro.amu.RackSession`.
     * ``seed`` / ``verify`` — build seed; run the port's numpy oracle at
-      the end.
+      the end. In a rack, core 0 builds with ``seed`` verbatim and core
+      i > 0 with a child seed spawned from ``SeedSequence(seed)``.
     """
     engine: str = "batched"
     scheduler: str = "auto"
@@ -146,6 +152,7 @@ class AmuConfig:
     engine_config: Optional[EngineConfig] = None
     spm_bytes: Optional[int] = None
     retry: Optional[RetryPolicy] = None
+    cores: int = 1
     seed: int = 0
     verify: bool = True
 
@@ -189,6 +196,9 @@ class AmuConfig:
             raise ValueError(f"spm_bytes must be > 0, got {self.spm_bytes}")
         if self.retry is not None and not isinstance(self.retry, RetryPolicy):
             raise TypeError(f"retry= takes a RetryPolicy, got {self.retry!r}")
+        if not isinstance(self.cores, int) or isinstance(self.cores, bool) \
+                or self.cores < 1:
+            raise ValueError(f"cores must be an int >= 1, got {self.cores!r}")
         if self.seed < 0:
             raise ValueError(f"seed must be >= 0, got {self.seed}")
 

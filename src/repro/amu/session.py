@@ -23,7 +23,7 @@ keep construction out of their timed region.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterator, Optional, Union
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import time
 
@@ -37,6 +37,7 @@ from repro.core.coroutines import SCHEDULER_KINDS
 from repro.core.disambiguation import CuckooAddressSet
 from repro.core.engine import make_engine
 from repro.core.farmem import FarMemoryModel
+from repro.core.rack import RackArbiter
 
 
 @dataclass(frozen=True)
@@ -140,6 +141,36 @@ def _request_latency_fields(lat_cycles) -> Dict[str, object]:
                 req_p999_us=float(p999))
 
 
+def _stats_from_summary(stats: Dict[str, object], cfg: AmuConfig, inst: Port,
+                        eng, use_vector: bool, regions,
+                        entries: int, rows: int,
+                        wall_us: float) -> RunStats:
+    """Build a :class:`RunStats` from a scheduler ``summary()`` dict (the
+    shared tail of :meth:`AmuSession.execute`, reused per rack core —
+    callers that attribute shared-device counters per core patch the dict
+    before handing it over)."""
+    req = _request_latency_fields(
+        getattr(inst, "request_latency_cycles", None))
+    return RunStats(
+        cycles=stats["cycles"], insts=stats["insts"], ipc=stats["ipc"],
+        mlp=stats["mlp"], requests=stats["requests"],
+        bytes=stats["bytes"], disamb_cycles=stats["disamb_cycles"],
+        disamb_frac=stats["disamb_frac"],
+        us=stats["cycles"] / (FREQ_GHZ * 1e3),
+        units=inst.units, vector=use_vector,
+        verified=bool(inst.verify(eng.mem)) if cfg.verify else None,
+        workload=inst.name,
+        regions=regions,
+        faults_injected=stats.get("faults_injected", 0),
+        retries=stats.get("retries", 0),
+        timeouts=stats.get("timeouts", 0),
+        failovers=stats.get("failovers", 0),
+        availability=stats.get("availability", 1.0),
+        engine_entries=entries,
+        rows_per_entry=rows / entries if entries else 0.0,
+        us_per_entry=wall_us / entries if entries else 0.0, **req)
+
+
 class AmuSession:
     """Context manager owning one AMU execution stack.
 
@@ -228,26 +259,9 @@ class AmuSession:
         eng.drain()
         eng.check_invariants()
         stats = sched.summary()
-        req = _request_latency_fields(
-            getattr(inst, "request_latency_cycles", None))
-        return RunStats(
-            cycles=stats["cycles"], insts=stats["insts"], ipc=stats["ipc"],
-            mlp=stats["mlp"], requests=stats["requests"],
-            bytes=stats["bytes"], disamb_cycles=stats["disamb_cycles"],
-            disamb_frac=stats["disamb_frac"],
-            us=stats["cycles"] / (FREQ_GHZ * 1e3),
-            units=inst.units, vector=self._use_vector,
-            verified=bool(inst.verify(eng.mem)) if cfg.verify else None,
-            workload=inst.name,
-            regions=self.far.region_stats(stats["cycles"]),
-            faults_injected=stats.get("faults_injected", 0),
-            retries=stats.get("retries", 0),
-            timeouts=stats.get("timeouts", 0),
-            failovers=stats.get("failovers", 0),
-            availability=stats.get("availability", 1.0),
-            engine_entries=entries,
-            rows_per_entry=rows / entries if entries else 0.0,
-            us_per_entry=wall_us / entries if entries else 0.0, **req)
+        return _stats_from_summary(
+            stats, cfg, inst, eng, self._use_vector,
+            self.far.region_stats(stats["cycles"]), entries, rows, wall_us)
 
     def run(self, port: Union[str, Port], *,
             record_trace: bool = False, **build_kw) -> RunStats:
@@ -258,4 +272,232 @@ class AmuSession:
         issue/fin trace for differential comparisons.
         """
         self.prepare(port, record_trace=record_trace, **build_kw)
+        return self.execute()
+
+
+# ========================================================================
+# Rack-scale sessions: N cores, one shared far memory
+# ========================================================================
+def _core_seeds(seed: int, cores: int) -> List[int]:
+    """Per-core build seeds: core 0 keeps the config seed verbatim (the
+    ``cores=1`` bit-identity guarantee) and core i > 0 gets an
+    independently spawned child of ``SeedSequence(seed)`` — statistically
+    independent streams, deterministic per (seed, cores)."""
+    if cores == 1:
+        return [seed]
+    children = np.random.SeedSequence(seed).spawn(cores - 1)
+    return [seed] + [int(c.generate_state(1, np.uint64)[0])
+                     for c in children]
+
+
+def _jain_fairness(xs: Sequence[float]) -> float:
+    """Jain's fairness index (Σx)² / (N·Σx²) ∈ (0, 1]; 1.0 = all equal."""
+    sq = sum(x * x for x in xs)
+    if sq <= 0.0:
+        return 1.0
+    s = sum(xs)
+    return (s * s) / (len(xs) * sq)
+
+
+@dataclass(frozen=True)
+class RackStats:
+    """Result of one :meth:`RackSession.run`: the per-core dimension plus
+    rack-level aggregates.
+
+    ``cores`` holds one :class:`RunStats` per core. With ``cores=1`` the
+    single entry is bit-identical to the plain :class:`AmuSession` result;
+    with N > 1 each core's ``requests``/``bytes``/fault counters are the
+    arbiter-attributed share of the shared device's global counters, its
+    ``mlp`` is 0.0 (in-flight overlap on a shared device has no exact
+    per-core split — ``RackStats.mlp`` carries the true device MLP), and
+    ``regions`` is ``None`` (the shared per-tier split lives on
+    ``RackStats.regions``).
+
+    ``core_gups`` is per-core throughput in giga-units/sec (logical work
+    units per nanosecond — true GUPS when the port is GUPS);
+    ``aggregate_gups`` divides total units by the rack **makespan** (the
+    slowest core), so it only scales with cores while the shared links
+    have headroom. ``fairness`` is Jain's index over ``core_gups`` and
+    ``link_occupancy`` maps each far-memory link to its serialized-cycle
+    total, busy fraction of the makespan, and per-core split.
+    """
+    cores: Tuple[RunStats, ...]
+    cycles: float                       # makespan, cycles
+    us: float
+    requests: int
+    bytes: int
+    mlp: float                          # shared-device MLP over the makespan
+    core_gups: Tuple[float, ...]
+    aggregate_gups: float
+    fairness: float
+    link_occupancy: Dict[str, Dict[str, object]]
+    regions: Optional[Dict[str, Dict[str, float]]]
+    verified: Optional[bool]
+
+    @property
+    def n_cores(self) -> int:
+        return len(self.cores)
+
+
+class RackSession:
+    """Context manager owning a rack of AMU execution stacks.
+
+    ``run(ports)`` builds N per-core engine+SPM+scheduler stacks over ONE
+    shared far-memory model and drives them through the deterministic
+    global-clock arbiter (:class:`repro.core.rack.RackArbiter` — ties
+    break by core index). ``ports`` is a single registered name / prebuilt
+    port (homogeneous rack: every core runs it, core i built with its own
+    spawned seed) or a sequence of ``config.cores`` of them (colocation
+    scenarios, e.g. GUPS next to ``paged_kv_serve``). Frontier-parallel
+    ports (BFS) need a per-level outer driver and are not rack-schedulable.
+
+    After the run each engine is drained and invariant-checked; the
+    per-core stacks stay inspectable on ``engines`` / ``schedulers`` /
+    ``instances`` (and the shared model on ``far``).
+    """
+
+    def __init__(self, config: AmuConfig = AmuConfig(),
+                 registry: WorkloadRegistry = REGISTRY):
+        self.config = config
+        self.registry = registry
+        self.far: Optional[FarMemoryModel] = None
+        self.engines: List = []
+        self.schedulers: List = []
+        self.instances: List[Port] = []
+        self._use_vector: List[bool] = []
+
+    # ------------------------------------------------------------ lifecycle
+    def __enter__(self) -> "RackSession":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    def close(self) -> None:
+        self.far = None
+        self.engines, self.schedulers, self.instances = [], [], []
+        self._use_vector = []
+
+    # ----------------------------------------------------------------- run
+    def prepare(self, ports: Union[str, Port, Sequence], *,
+                record_trace: bool = False, **build_kw) -> List[Port]:
+        """Build all per-core stacks without running them: one shared far
+        model, then per core a workload instance (spawned seed), engine,
+        disambiguator and scheduler."""
+        cfg = self.config
+        n = cfg.cores
+        if isinstance(ports, str) or not isinstance(ports, Sequence):
+            if n > 1 and not isinstance(ports, str):
+                # one prebuilt instance can't back N cores: its tasks and
+                # memory image are single-use state
+                raise ValueError(
+                    "a homogeneous rack takes a registered workload NAME "
+                    "(each core rebuilds with its own spawned seed); for "
+                    "prebuilt ports pass one per core")
+            port_list = [ports] * n
+        else:
+            port_list = list(ports)
+            if len(port_list) != n:
+                raise ValueError(
+                    f"got {len(port_list)} ports for cores={n}; pass one "
+                    f"port (homogeneous rack) or exactly one per core")
+        seeds = _core_seeds(cfg.seed, n)
+        far = FarMemoryModel(
+            cfg.resolve_far_config(), host_jit=cfg.host_jit,
+            timeout_cycles=cfg.retry.timeout_cycles if cfg.retry else 0.0)
+        self.far = far
+        self.engines, self.schedulers, self.instances = [], [], []
+        self._use_vector = []
+        for i, port in enumerate(port_list):
+            if isinstance(port, str):
+                inst = self.registry.build(
+                    port, seeds[i], vector=cfg.vector,
+                    llvm_mode=cfg.llvm_mode, pipeline_k=cfg.pipeline_k,
+                    **build_kw)
+            else:
+                inst = port
+            if hasattr(inst, "make_round_tasks"):
+                raise NotImplementedError(
+                    f"frontier-parallel port {inst.name!r} needs a "
+                    f"per-level outer driver; not rack-schedulable")
+            self._use_vector.append(bool(getattr(inst, "vector",
+                                                 cfg.vector)))
+            ecfg = cfg.resolve_engine_config(inst.engine_config)
+            eng = make_engine(cfg.engine, ecfg, far, inst.mem,
+                              record_trace=record_trace, label=f"core{i}")
+            disamb = CuckooAddressSet() if inst.disambiguation else None
+            sched = SCHEDULER_KINDS[cfg.scheduler_kind](
+                eng, cost=cfg.cost_model(), disambiguator=disamb,
+                dma_mode=cfg.dma_mode, retry=cfg.retry)
+            self.engines.append(eng)
+            self.schedulers.append(sched)
+            self.instances.append(inst)
+        return self.instances
+
+    def execute(self) -> RackStats:
+        """Arbitrate the :meth:`prepare`-d cores to completion, drain and
+        invariant-check every engine, and return the rack stats."""
+        cfg = self.config
+        if not self.instances:
+            raise RuntimeError("no ports prepared; call prepare() first")
+        n = len(self.instances)
+        arb = RackArbiter(self.far, self.schedulers)
+        for sched, inst in zip(self.schedulers, self.instances):
+            for task in inst.tasks:
+                sched.spawn(task)
+        arb.run()
+        per_core: List[RunStats] = []
+        for i in range(n):
+            eng, sched, inst = self.engines[i], self.schedulers[i], \
+                self.instances[i]
+            eng.drain()
+            eng.check_invariants()
+            stats = dict(sched.summary())
+            if n == 1:
+                regions = self.far.region_stats(stats["cycles"])
+            else:
+                # shared-device counters: replace the global reads with
+                # the arbiter's per-core attribution (regions/MLP stay
+                # rack-level — see RackStats)
+                regions = None
+                stats["requests"] = arb.requests[i]
+                stats["bytes"] = arb.bytes_moved[i]
+                stats["mlp"] = 0.0
+                if "faults_injected" in stats:
+                    stats["faults_injected"] = arb.errors[i] \
+                        + arb.timeouts[i]
+                    stats["timeouts"] = arb.timeouts[i]
+                    logical = (arb.requests[i] - stats["retries"]
+                               - stats["failovers"])
+                    stats["availability"] = \
+                        1.0 - stats["failed"] / max(logical, 1)
+            per_core.append(_stats_from_summary(
+                stats, cfg, inst, eng, self._use_vector[i], regions,
+                eng.host_entries, eng.host_rows, arb.wall_us[i]))
+        makespan = arb.makespan
+        us = makespan / (FREQ_GHZ * 1e3)
+        core_gups = tuple(
+            (s.units / s.us) * 1e-3 if s.us > 0 else 0.0 for s in per_core)
+        total_units = sum(s.units for s in per_core)
+        verified: Optional[bool] = None
+        if cfg.verify:
+            verified = all(bool(s.verified) for s in per_core)
+        return RackStats(
+            cores=tuple(per_core),
+            cycles=makespan,
+            us=us,
+            requests=self.far.requests,
+            bytes=self.far.bytes_moved,
+            mlp=self.far.avg_mlp(makespan),
+            core_gups=core_gups,
+            aggregate_gups=(total_units / us) * 1e-3 if us > 0 else 0.0,
+            fairness=_jain_fairness(core_gups),
+            link_occupancy=self.far.link_occupancy(makespan),
+            regions=self.far.region_stats(makespan),
+            verified=verified)
+
+    def run(self, ports: Union[str, Port, Sequence], *,
+            record_trace: bool = False, **build_kw) -> RackStats:
+        """Run `ports` across the rack to completion (prepare + execute)."""
+        self.prepare(ports, record_trace=record_trace, **build_kw)
         return self.execute()

@@ -786,33 +786,47 @@ class Scheduler:
         self._live += 1
         self._ready.append(task)
 
+    @property
+    def live(self) -> int:
+        """Spawned tasks that have not finished (the rack arbiter polls
+        this to know when a core's port is done)."""
+        return self._live
+
+    def step(self) -> None:
+        """One runtime-loop turn: wake sleepers, service retries, poll one
+        completion, run one ready task (or idle to the next completion).
+        :meth:`run` is exactly `while live: step()` — an external arbiter
+        (``repro.core.rack``) interleaving `step()` calls across schedulers
+        reproduces each scheduler's solo execution bit-for-bit."""
+        c = self.cost
+        if self._sleeping:             # arrivals whose time has come
+            self._wake_sleepers()
+        if self._retry_heap:           # backoff slots whose time has come
+            self._service_retries()
+        # event loop: poll completions first (Fig 4 step 3)
+        if (self._waiting_count() or self._alloc_parked
+                or self.engine.outstanding or self.engine.finished_pending):
+            self.engine.advance(self.t)
+            self._tick_insts(c.getfin_insts)
+            rid = self.engine.getfin()
+            if rid:
+                self._dispatch_fin(rid)
+                # freed an ID: a parked task can retry its issue
+                if self._alloc_parked:
+                    ptask, pcmd = self._alloc_parked.popleft()
+                    self._issue(ptask, pcmd)
+        if self._ready:
+            task = self._ready.popleft()
+            self._run_task(task, self._results.pop(id(task), None))
+        elif self._live > 0:
+            self._idle_until_completion()
+
     def run(self, tasks: Optional[Iterable[Task]] = None) -> dict:
         """Drive all tasks to completion; returns timing/throughput stats."""
-        c = self.cost
         for task in tasks or ():
             self.spawn(task)
         while self._live > 0:
-            if self._sleeping:             # arrivals whose time has come
-                self._wake_sleepers()
-            if self._retry_heap:           # backoff slots whose time has come
-                self._service_retries()
-            # event loop: poll completions first (Fig 4 step 3)
-            if (self._waiting_count() or self._alloc_parked
-                    or self.engine.outstanding or self.engine.finished_pending):
-                self.engine.advance(self.t)
-                self._tick_insts(c.getfin_insts)
-                rid = self.engine.getfin()
-                if rid:
-                    self._dispatch_fin(rid)
-                    # freed an ID: a parked task can retry its issue
-                    if self._alloc_parked:
-                        ptask, pcmd = self._alloc_parked.popleft()
-                        self._issue(ptask, pcmd)
-            if self._ready:
-                task = self._ready.popleft()
-                self._run_task(task, self._results.pop(id(task), None))
-            elif self._live > 0:
-                self._idle_until_completion()
+            self.step()
         return self.summary()
 
     def summary(self) -> dict:
@@ -1176,48 +1190,45 @@ class BatchScheduler(Scheduler):
         # is drained (and possibly re-retried) the turn it lands
         heapq.heappush(self._wake_heap, float(done))
 
-    def run(self, tasks: Optional[Iterable[Task]] = None) -> dict:
+    def step(self) -> None:
+        """One batch-stepped epoch (the `run` loop body, arbiter-steppable)."""
         c = self.cost
-        for task in tasks or ():
-            self.spawn(task)
-        while self._live > 0:
-            if self._sleeping:             # arrivals whose time has come
-                self._wake_sleepers()
-            if self._retry_heap:           # backoff slots whose time has come
-                self._service_retries()
-            if self._tok >= self._RECYCLE_AT:
-                self._maybe_recycle_tokens()
-            if (self._n_wait_groups or self._alloc_parked
-                    or self.engine.outstanding or self.engine.finished_pending):
-                self.engine.advance(self.t)
-                # poll only when the finished list can be non-empty — the
-                # batch runtime KNOWS (it just advanced the clock), so
-                # epochs between completions skip the drain entirely
-                if self.engine.finished_pending:
-                    rids = self.engine.getfin_all()
-                    # one poll per retrieved ID + the terminating empty poll
-                    self._tick_insts(c.getfin_insts * (len(rids) + 1))
-                    self._dispatch_fins(rids)
-                    # freed IDs: parked tasks can retry their issues. The
-                    # retry budget is the engine's free-ID count, read once
-                    # per epoch: retries stop the moment a retry parks again
-                    # (pool drained mid-vector), so heavy ID exhaustion
-                    # costs O(retries), not O(parked^2) re-park churn.
-                    while self._alloc_parked and self.engine.free_ids:
-                        ptask, pcmd = self._alloc_parked.popleft()
-                        parked_before = len(self._alloc_parked)
-                        self._issue(ptask, pcmd)
-                        if len(self._alloc_parked) > parked_before:
-                            break
-            if self._ready:
-                # step every currently-ready task once (snapshot: tasks that
-                # re-queue themselves run again next epoch, after the poll)
-                for _ in range(len(self._ready)):
-                    task = self._ready.popleft()
-                    self._run_task(task, self._results.pop(id(task), None))
-            elif self._live > 0:
-                self._idle_until_completion()
-        return self.summary()
+        if self._sleeping:             # arrivals whose time has come
+            self._wake_sleepers()
+        if self._retry_heap:           # backoff slots whose time has come
+            self._service_retries()
+        if self._tok >= self._RECYCLE_AT:
+            self._maybe_recycle_tokens()
+        if (self._n_wait_groups or self._alloc_parked
+                or self.engine.outstanding or self.engine.finished_pending):
+            self.engine.advance(self.t)
+            # poll only when the finished list can be non-empty — the
+            # batch runtime KNOWS (it just advanced the clock), so
+            # epochs between completions skip the drain entirely
+            if self.engine.finished_pending:
+                rids = self.engine.getfin_all()
+                # one poll per retrieved ID + the terminating empty poll
+                self._tick_insts(c.getfin_insts * (len(rids) + 1))
+                self._dispatch_fins(rids)
+                # freed IDs: parked tasks can retry their issues. The
+                # retry budget is the engine's free-ID count, read once
+                # per epoch: retries stop the moment a retry parks again
+                # (pool drained mid-vector), so heavy ID exhaustion
+                # costs O(retries), not O(parked^2) re-park churn.
+                while self._alloc_parked and self.engine.free_ids:
+                    ptask, pcmd = self._alloc_parked.popleft()
+                    parked_before = len(self._alloc_parked)
+                    self._issue(ptask, pcmd)
+                    if len(self._alloc_parked) > parked_before:
+                        break
+        if self._ready:
+            # step every currently-ready task once (snapshot: tasks that
+            # re-queue themselves run again next epoch, after the poll)
+            for _ in range(len(self._ready)):
+                task = self._ready.popleft()
+                self._run_task(task, self._results.pop(id(task), None))
+        elif self._live > 0:
+            self._idle_until_completion()
 
 
 class EpochScheduler(BatchScheduler):
@@ -1372,46 +1383,42 @@ class EpochScheduler(BatchScheduler):
                 self._await_tokens(task, toks)
 
     # -------------------------------------------------------- runtime loop
-    def run(self, tasks: Optional[Iterable[Task]] = None) -> dict:
+    def step(self) -> None:
         if not self._fuse:
-            return super().run(tasks)
+            return super().step()
         c = self.cost
-        for task in tasks or ():
-            self.spawn(task)
-        while self._live > 0:
-            if self._sleeping:             # arrivals whose time has come
-                self._wake_sleepers()
-            if self._retry_heap:           # backoff slots whose time has come
-                self._service_retries()
-            if self._tok >= self._RECYCLE_AT:
-                self._maybe_recycle_tokens()
-            if (self._n_wait_groups or self._alloc_parked
-                    or self.engine.outstanding or self.engine.finished_pending):
-                # one advance + (iff anything finished) one drain per epoch
-                rids = self.engine.getfin_epoch(self.t)
-                if rids is not None:
-                    self._tick_insts(c.getfin_insts * (len(rids) + 1))
-                    self._dispatch_fins(rids)
-                    # freed IDs: parked tasks can retry (staged, not issued)
-                    while self._alloc_parked and self.engine.free_ids:
-                        ptask, pcmd = self._alloc_parked.popleft()
-                        parked_before = len(self._alloc_parked)
-                        self._issue(ptask, pcmd)
-                        if len(self._alloc_parked) > parked_before:
-                            break
-            if self._ready:
-                # step every currently-ready task once (snapshot: tasks that
-                # re-queue themselves run again next epoch, after the poll)
-                for _ in range(len(self._ready)):
-                    task = self._ready.popleft()
-                    self._run_task(task, self._results.pop(id(task), None))
-                self._flush_epoch()
-            elif self._live > 0:
-                # a parked retry may have staged a partial vector with no
-                # task left ready: flush it before idling on completions
-                self._flush_epoch()
-                self._idle_until_completion()
-        return self.summary()
+        if self._sleeping:             # arrivals whose time has come
+            self._wake_sleepers()
+        if self._retry_heap:           # backoff slots whose time has come
+            self._service_retries()
+        if self._tok >= self._RECYCLE_AT:
+            self._maybe_recycle_tokens()
+        if (self._n_wait_groups or self._alloc_parked
+                or self.engine.outstanding or self.engine.finished_pending):
+            # one advance + (iff anything finished) one drain per epoch
+            rids = self.engine.getfin_epoch(self.t)
+            if rids is not None:
+                self._tick_insts(c.getfin_insts * (len(rids) + 1))
+                self._dispatch_fins(rids)
+                # freed IDs: parked tasks can retry (staged, not issued)
+                while self._alloc_parked and self.engine.free_ids:
+                    ptask, pcmd = self._alloc_parked.popleft()
+                    parked_before = len(self._alloc_parked)
+                    self._issue(ptask, pcmd)
+                    if len(self._alloc_parked) > parked_before:
+                        break
+        if self._ready:
+            # step every currently-ready task once (snapshot: tasks that
+            # re-queue themselves run again next epoch, after the poll)
+            for _ in range(len(self._ready)):
+                task = self._ready.popleft()
+                self._run_task(task, self._results.pop(id(task), None))
+            self._flush_epoch()
+        elif self._live > 0:
+            # a parked retry may have staged a partial vector with no
+            # task left ready: flush it before idling on completions
+            self._flush_epoch()
+            self._idle_until_completion()
 
 
 SCHEDULER_KINDS = {"scalar": Scheduler, "batched": BatchScheduler,

@@ -83,8 +83,11 @@ class AsyncEngineBase:
     def __init__(self, config: EngineConfig,
                  far_memory: Optional[FarMemoryModel] = None,
                  backing: Optional[np.ndarray] = None,
-                 record_trace: bool = False):
+                 record_trace: bool = False, label: str = ""):
         self.config = config
+        # diagnostic tag ("core3" in a rack) prefixing invariant failures,
+        # so a multi-engine run names the stack that leaked an ID
+        self.label = label
         self.far = far_memory or InstantMemory()
         # far-memory backing store (uint8); tests pass real arrays here
         self.mem = backing if backing is not None else np.zeros(1 << 20, np.uint8)
@@ -254,6 +257,10 @@ class AsyncEngineBase:
         """IDs currently allocatable (ASMC free list + ALSU cache)."""
         return len(self._free) + len(self._free_cache)
 
+    @property
+    def _where(self) -> str:
+        return f"{self.label}: " if self.label else ""
+
     # subclass responsibilities --------------------------------------------
     def advance(self, now: float) -> None:
         raise NotImplementedError
@@ -295,8 +302,8 @@ class AsyncMemoryEngine(AsyncEngineBase):
     def __init__(self, config: EngineConfig,
                  far_memory: Optional[FarMemoryModel] = None,
                  backing: Optional[np.ndarray] = None,
-                 record_trace: bool = False):
-        super().__init__(config, far_memory, backing, record_trace)
+                 record_trace: bool = False, label: str = ""):
+        super().__init__(config, far_memory, backing, record_trace, label)
         # ASMC-side lists (IDs are 1-based; 0 is the failure code)
         self._free: Deque[int] = deque(range(1, config.queue_length + 1))
         self._finished: Deque[int] = deque()
@@ -439,9 +446,10 @@ class AsyncMemoryEngine(AsyncEngineBase):
         in_flight_fin = set(self._finished) | set(self._fin_cache)
         pend = {r for _, r in self._pending}
         assert len(ids) == self.config.queue_length, (
-            f"ID leak: {len(ids)} != {self.config.queue_length}")
-        assert len(set(ids)) == len(ids), "duplicate ID"
-        assert set(self.amart) == (pend | in_flight_fin), "AMART out of sync"
+            f"{self._where}ID leak: {len(ids)} != {self.config.queue_length}")
+        assert len(set(ids)) == len(ids), f"{self._where}duplicate ID"
+        assert set(self.amart) == (pend | in_flight_fin), \
+            f"{self._where}AMART out of sync"
 
 
 class _IdRing:
@@ -517,8 +525,8 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
     def __init__(self, config: EngineConfig,
                  far_memory: Optional[FarMemoryModel] = None,
                  backing: Optional[np.ndarray] = None,
-                 record_trace: bool = False):
-        super().__init__(config, far_memory, backing, record_trace)
+                 record_trace: bool = False, label: str = ""):
+        super().__init__(config, far_memory, backing, record_trace, label)
         cap = config.queue_length
         self._free = _IdRing(cap, fill=np.arange(1, cap + 1))
         self._finished = _IdRing(cap)
@@ -1138,12 +1146,12 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         ids = (self._free.tolist() + self._fc[self._fc_head:].tolist()
                + list(self._fin_cache) + self._finished.tolist() + pend)
         assert len(ids) == self.config.queue_length, (
-            f"ID leak: {len(ids)} != {self.config.queue_length}")
-        assert len(set(ids)) == len(ids), "duplicate ID"
+            f"{self._where}ID leak: {len(ids)} != {self.config.queue_length}")
+        assert len(set(ids)) == len(ids), f"{self._where}duplicate ID"
         in_flight = (set(pend) | set(self._finished.tolist())
                      | set(self._fin_cache))
         assert set(np.nonzero(self._active)[0].tolist()) == in_flight, \
-            "AMART out of sync"
+            f"{self._where}AMART out of sync"
 
 
 ENGINE_KINDS = {"scalar": AsyncMemoryEngine, "batched": BatchedAsyncMemoryEngine}
@@ -1152,11 +1160,12 @@ ENGINE_KINDS = {"scalar": AsyncMemoryEngine, "batched": BatchedAsyncMemoryEngine
 def make_engine(kind: str, config: EngineConfig,
                 far_memory: Optional[FarMemoryModel] = None,
                 backing: Optional[np.ndarray] = None,
-                record_trace: bool = False) -> AsyncEngineBase:
+                record_trace: bool = False, label: str = "") -> AsyncEngineBase:
     """Factory for the `engine=` knob: "scalar" (oracle) or "batched"."""
     try:
         cls = ENGINE_KINDS[kind]
     except KeyError:
         raise KeyError(f"unknown engine kind {kind!r}; "
                        f"known: {sorted(ENGINE_KINDS)}") from None
-    return cls(config, far_memory, backing, record_trace=record_trace)
+    return cls(config, far_memory, backing, record_trace=record_trace,
+               label=label)

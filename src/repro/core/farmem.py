@@ -470,6 +470,15 @@ class FarMemoryModel:
         # stats
         self.requests = 0
         self.bytes_moved = 0
+        # shared-device occupancy attribution: `client` tags the requester
+        # currently issuing (the rack arbiter sets it to the core index
+        # before stepping each core; single-core sessions leave it at 0)
+        # and `link_busy` accumulates serialized channel cycles per
+        # (link, client). Pure accounting — never feeds timing or RNG, so
+        # traces/bitstreams are untouched by who (or whether anyone) reads
+        # it. The flat (regionless) model charges one implicit "far" link.
+        self.client = 0
+        self.link_busy: Dict[str, Dict[int, float]] = {}
         # fault plane: requester-side timeout bound (RetryPolicy), flat-model
         # fault stream, counters, and the out-of-band status channel the
         # engines read right after each issue call. When fault_enabled is
@@ -536,6 +545,22 @@ class FarMemoryModel:
         else:
             area = self._ledger.area(total_time)
         return area / max(total_time, 1e-9)
+
+    def _charge_link(self, link: str, serial_cycles: float) -> None:
+        by = self.link_busy.setdefault(link, {})
+        by[self.client] = by.get(self.client, 0.0) + serial_cycles
+
+    def link_occupancy(self, total_time: float) -> Dict[str, Dict]:
+        """Per-link serialized-cycle totals and busy fraction over
+        ``[0, total_time]``, with the per-client split (`by_client` keys are
+        the requester tags — rack core indices). ``occupancy`` near 1.0
+        means the channel itself is the bottleneck."""
+        return {
+            link: {
+                "busy_cycles": sum(by.values()),
+                "occupancy": sum(by.values()) / max(total_time, 1e-9),
+                "by_client": dict(sorted(by.items())),
+            } for link, by in sorted(self.link_busy.items())}
 
     def region_stats(self, total_time: float) -> Optional[Dict[str, Dict]]:
         """Per-region request/byte/MLP stats (None for the flat model)."""
@@ -661,6 +686,7 @@ class FarMemoryModel:
             start = inject_at
         serial = size_bytes / cfg.bandwidth_bytes_per_cycle
         self._link_free = inject_at + serial
+        self._charge_link("far", serial)
         lat = cfg.base_latency_cycles
         if cfg.distribution is not None:
             lat *= cfg.distribution.draw(self._rng)
@@ -723,6 +749,7 @@ class FarMemoryModel:
             # scalar broadcast == np.full(n, lat) elementwise, bit-for-bit
             done = injects + serial + cfg.base_latency_cycles
         self._link_free = float(injects[-1]) + float(serial[-1])
+        self._charge_link("far", float(serial.sum()))
         if status is not None:
             done, status[:] = self._apply_faults(None, now, injects, serial,
                                                  done)
@@ -808,6 +835,7 @@ class FarMemoryModel:
                 dones[i] = d
                 starts[i] = inject_at
                 i += 1
+        self._charge_link("far", float(serial.sum()))
         self._ledger.record_batch(starts, dones)
         self.requests += n
         self.bytes_moved += int(sizes.sum())
@@ -865,6 +893,7 @@ class FarMemoryModel:
             start = inject_at
         serial = size / r.bandwidth_bytes_per_cycle
         st.link.free = inject_at + serial
+        self._charge_link(r.link or r.name, serial)
         done = inject_at + serial + self._region_lat(st)
         if self.fault_enabled:
             if self._fault_active(r.faults):
@@ -998,6 +1027,8 @@ class FarMemoryModel:
         for ri in sorted(set(il)):
             rows = [i for i, r in enumerate(il) if r == ri]
             lat[rows] = self._region_lat(self._regions[ri], len(rows))
+            r = self._regions[ri].region
+            self._charge_link(r.link or r.name, float(serial[rows].sum()))
         links = self._link_table[idx].tolist()
         free = {ix: float(l.free) for ix, l in enumerate(self._links)}
         injects = np.empty(n, np.float64)
@@ -1063,6 +1094,8 @@ class FarMemoryModel:
         for ri in np.unique(idx):
             rows = np.flatnonzero(idx == ri)
             lat[rows] = self._region_lat(self._regions[int(ri)], rows.size)
+            r = self._regions[int(ri)].region
+            self._charge_link(r.link or r.name, float(serial[rows].sum()))
         free = np.array([l.free for l in self._links], np.float64)
         injects = self._chain_inject(seg_nows, seg_bounds, serial,
                                      self._link_table[idx], free)
@@ -1107,6 +1140,7 @@ class FarMemoryModel:
         injects = self._chain_inject(seg_nows, seg_bounds, serial,
                                      np.zeros(n, np.int64), free)
         self._link_free = float(free[0])
+        self._charge_link("far", float(serial.sum()))
         if cfg.distribution is not None:
             lat = cfg.base_latency_cycles * cfg.distribution.draw(self._rng, n)
             done = injects + serial + lat
@@ -1186,6 +1220,7 @@ class FarMemoryModel:
         np.cumsum(injects, out=injects)
         done = injects + serial + self._region_lat(st, n)
         st.link.free = float(injects[-1]) + float(serial[-1])
+        self._charge_link(r.link or r.name, float(serial.sum()))
         if status_out is not None and self._fault_active(r.faults):
             done, status_out[:] = self._apply_faults(st, now, injects, serial,
                                                      done)
@@ -1247,6 +1282,7 @@ class FarMemoryModel:
                 dones[i] = d
                 starts[i] = inject_at
                 i += 1
+        self._charge_link(r.link or r.name, float(serial.sum()))
         st.ledger.record_batch(starts, dones)
         st.requests += n
         st.bytes_moved += int(sizes.sum())
@@ -1267,6 +1303,7 @@ class FarMemoryModel:
         measured execute() split."""
         self.requests = 0
         self.bytes_moved = 0
+        self.link_busy.clear()
         self._ledger.clear()
         self._link_free = 0.0
         self._inflight.clear()

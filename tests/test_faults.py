@@ -379,6 +379,88 @@ def test_scheduler_reset_stats_clears_retry_plane():
 
 
 # =========================================================================
+# Cross-matrix: fault plane × epoch fusion × per-region stats
+# =========================================================================
+def _multi_fault_regions(mem_bytes):
+    """Both tiers faulted (distinct rates) so each accumulates its own
+    error/timeout counters, plus a clean failover target."""
+    size = max((int(mem_bytes) + 63) // 64 * 64, 64)
+    half = size // 2 // 64 * 64
+    return [far_region("fabric", 0, half, 1.0,
+                       faults=FaultModel(error_prob=0.06, drop_prob=0.03),
+                       failover="backup"),
+            far_region("xswitch", half, size - half, 3.0,
+                       faults=FaultModel(error_prob=0.10),
+                       failover="backup"),
+            far_region("backup", size, size, 5.0)]
+
+
+@pytest.mark.parametrize("sched", ["auto", "batched"])
+def test_region_fault_counters_populated_under_both_schedulers(sched):
+    far = _multi_fault_regions(_mem_size("GUPS"))
+    st, _, _ = _capture("GUPS", "batched", sched, far)
+    assert st.verified is True
+    assert set(st.regions) == {"fabric", "xswitch", "backup"}
+    for name in ("fabric", "xswitch"):
+        r = st.regions[name]
+        assert "errors" in r and "timeouts" in r
+    # distinct fault models actually fired on both faulted tiers
+    assert st.regions["fabric"]["errors"] + st.regions["fabric"]["timeouts"] > 0
+    assert st.regions["xswitch"]["errors"] > 0
+    assert st.regions["backup"]["errors"] == 0
+    # per-region counters are the device-side split of the run total
+    assert sum(r.get("errors", 0) + r.get("timeouts", 0)
+               for r in st.regions.values()) == st.faults_injected
+
+
+def test_region_fault_counters_identical_fused_vs_percommand():
+    """The epoch-fused scheduler must produce the exact per-region
+    error/timeout split of the per-command loop on a multi-region faulty
+    run — RunStats.regions is part of the fusion identity contract."""
+    far = _multi_fault_regions(_mem_size("GUPS"))
+    a = _capture("GUPS", "batched", "batched", far)
+    b = _capture("GUPS", "batched", "auto", far)    # auto -> fused
+    assert a[1] == b[1]
+    assert a[0].regions == b[0].regions
+    assert _stats_no_host_counters(a[0]) == _stats_no_host_counters(b[0])
+
+
+def test_reset_stats_zeroes_region_counters_under_both_schedulers():
+    """reset_stats() must clear the per-region error/timeout counters (and
+    the link-occupancy ledger) identically under the fused and per-command
+    loops, and the post-reset measured split must stay bit-identical
+    between the two scheduler kinds (warmup traffic legitimately advances
+    link free-times and RNG streams, so the comparison is fused-vs-
+    per-command, not warmed-vs-fresh)."""
+    out = {}
+    far = _multi_fault_regions(_mem_size("GUPS"))
+    for sched in ("auto", "batched"):       # auto -> fused on this engine
+        cfg = AmuConfig(engine="batched", scheduler=sched, far=far,
+                        retry=RETRY)
+        with AmuSession(cfg) as s:
+            s.prepare("GUPS")
+            # warmup traffic across both faulted tiers
+            for i in range(32):
+                s.far.issue(float(i), 64, i * 64)
+            assert s.far.faults_injected > 0
+            assert s.far.link_busy                # occupancy accumulated
+            s.far.reset_stats()
+            s.scheduler.reset_stats()
+            assert s.far.link_busy == {}
+            for r in s.far.region_stats(1.0).values():
+                assert r["requests"] == 0 and r["bytes"] == 0
+                assert r.get("errors", 0) == 0 and r.get("timeouts", 0) == 0
+            st = s.execute()
+            assert st.verified is True
+            out[sched] = (st, list(s.far.link_busy))
+    st_a, links_a = out["auto"]
+    st_b, links_b = out["batched"]
+    assert st_a.regions == st_b.regions
+    assert links_a == links_b
+    assert _stats_no_host_counters(st_a) == _stats_no_host_counters(st_b)
+
+
+# =========================================================================
 # Validation: errors name the offending region
 # =========================================================================
 def test_negative_probabilities_rejected():

@@ -1,0 +1,279 @@
+"""Rack-scale arbitration: determinism, identity and contention accounting.
+
+The contract under test (TESTING.md "Rack determinism contract"):
+
+* ``cores=1`` rack runs are **bit-identical** to the plain ``AmuSession``
+  — same trace, engine stats, memory/SPM images, far-model RNG bitstream
+  positions and ``RunStats`` — across both engines and both scheduler
+  kinds (the arbiter degenerates to literally the ``Scheduler.run`` loop).
+* N-core runs are a pure function of (config, seed): the global-clock
+  arbiter (smallest ``sched.t`` first, ties to the lowest core index)
+  makes the merged command stream over the ONE shared far model
+  reproducible bit-for-bit.
+* Per-core attribution is conservative: the arbiter's per-core
+  request/byte/fault splits sum to the shared device's global counters,
+  and per-link ``link_busy`` attribution sums to the independently
+  computable serialized-cycle totals (Σ region bytes / link bandwidth).
+"""
+import numpy as np
+import pytest
+
+from repro.amu import (AmuConfig, AmuSession, RackSession, far_region,
+                       FaultModel, RetryPolicy)
+from repro.amu.session import _core_seeds, _jain_fairness
+from repro.core.farmem import BimodalTail
+
+GUPS_KW = dict(table_words=2048, updates=512, coroutines=64, distinct=True)
+
+
+def _tier_regions(table_bytes, faults=False):
+    third = (table_bytes // 3) // 8 * 8
+    fm = FaultModel(error_prob=0.02) if faults else None
+    return [far_region("local", 0, third, 0.08),
+            far_region("cxl", third, third, 1.0, link="switch",
+                       distribution=BimodalTail(0.1, 8.0), faults=fm),
+            far_region("xswitch", 2 * third, table_bytes - 2 * third, 5.0,
+                       link="switch")]
+
+
+def _far_rng_states(far):
+    """Every RNG bitstream position in the far model (flat + per-region +
+    fault streams) — the strictest identity witness short of the trace."""
+    states = [far._rng.bit_generator.state["state"]]
+    if far._fault_rng is not None:
+        states.append(far._fault_rng.bit_generator.state["state"])
+    for st in far._regions or ():
+        states.append(st.rng.bit_generator.state["state"])
+        if st.fault_rng is not None:
+            states.append(st.fault_rng.bit_generator.state["state"])
+    return states
+
+
+def _capture_single(cfg, wl, **build_kw):
+    with AmuSession(cfg) as s:
+        stats = s.run(wl, record_trace=True, **build_kw)
+        return (stats.to_dict(), list(s.engine.trace), dict(s.engine.stats),
+                s.engine.mem.copy(), s.engine.spm.copy(),
+                _far_rng_states(s.far), s.scheduler.summary())
+
+
+def _capture_rack_core0(cfg, wl, **build_kw):
+    with RackSession(cfg) as r:
+        rs = r.run(wl, record_trace=True, **build_kw)
+        eng = r.engines[0]
+        return (rs.cores[0].to_dict(), list(eng.trace), dict(eng.stats),
+                eng.mem.copy(), eng.spm.copy(), _far_rng_states(r.far),
+                r.schedulers[0].summary())
+
+
+# =========================================================================
+# cores=1 identity: a one-core rack IS the plain session, bit for bit
+# =========================================================================
+@pytest.mark.parametrize("engine,scheduler", [
+    ("scalar", "auto"),        # oracle engine, per-command scalar loop
+    ("batched", "batched"),    # per-command batched loop
+    ("batched", "auto"),       # epoch-fused loop
+], ids=["scalar+percmd", "batched+percmd", "batched+fused"])
+def test_cores1_bit_identical_to_amusession(engine, scheduler):
+    cfg = AmuConfig(engine=engine, scheduler=scheduler)
+    a = _capture_single(cfg, "GUPS", **GUPS_KW)
+    b = _capture_rack_core0(cfg.derive(cores=1), "GUPS", **GUPS_KW)
+    for got, want in zip(b, a):
+        if isinstance(want, np.ndarray):
+            assert np.array_equal(got, want)
+        else:
+            assert got == want
+
+
+def test_cores1_identity_tiered_faulty_retry():
+    """Identity must survive the full fault plane: tiered far memory with
+    a shared link, fault draws, retry/backoff and timeouts."""
+    cfg = AmuConfig(far=_tier_regions(2048 * 8, faults=True),
+                    retry=RetryPolicy(max_retries=2, backoff=128.0))
+    a = _capture_single(cfg, "GUPS", **GUPS_KW)
+    b = _capture_rack_core0(cfg.derive(cores=1), "GUPS", **GUPS_KW)
+    for got, want in zip(b, a):
+        if isinstance(want, np.ndarray):
+            assert np.array_equal(got, want)
+        else:
+            assert got == want
+
+
+def test_cores1_rackstats_wraps_runstats():
+    with RackSession(AmuConfig()) as r:
+        rs = r.run("GUPS", **GUPS_KW)
+    assert rs.n_cores == 1
+    assert rs.fairness == 1.0
+    assert rs.requests == rs.cores[0].requests
+    assert rs.bytes == rs.cores[0].bytes
+    assert rs.core_gups[0] == pytest.approx(rs.aggregate_gups)
+    assert rs.cores[0].regions is None          # flat model
+    assert set(rs.link_occupancy) == {"far"}
+
+
+# =========================================================================
+# N-core determinism: same (config, seed) => identical everything
+# =========================================================================
+def _capture_rack(cfg, ports, **build_kw):
+    with RackSession(cfg) as r:
+        rs = r.run(ports, record_trace=True, **build_kw)
+        return rs, [list(e.trace) for e in r.engines], \
+            [e.mem.copy() for e in r.engines]
+
+
+@pytest.mark.parametrize("scheduler", ["batched", "auto"],
+                         ids=["percmd", "fused"])
+def test_ncore_run_is_deterministic(scheduler):
+    cfg = AmuConfig(cores=4, scheduler=scheduler,
+                    far=_tier_regions(2048 * 8))
+    rs_a, traces_a, mems_a = _capture_rack(cfg, "GUPS", **GUPS_KW)
+    rs_b, traces_b, mems_b = _capture_rack(cfg, "GUPS", **GUPS_KW)
+    assert traces_a == traces_b                 # per-core issue/fin traces
+    assert rs_a == rs_b                         # full RackStats identity
+    for ma, mb in zip(mems_a, mems_b):
+        assert np.array_equal(ma, mb)
+
+
+def test_cores_get_independent_streams():
+    """Spawned per-core seeds: core 0 keeps the config seed verbatim,
+    later cores get distinct seeds, and the cores issue distinct address
+    streams (different traces) while every core still verifies."""
+    assert _core_seeds(0, 1) == [0]
+    s4 = _core_seeds(0, 4)
+    assert s4[0] == 0 and len(set(s4)) == 4
+    assert _core_seeds(0, 4) == s4              # deterministic
+    rs, traces, _ = _capture_rack(AmuConfig(cores=3), "GUPS", **GUPS_KW)
+    assert rs.verified is True
+    assert traces[0] != traces[1] and traces[1] != traces[2]
+
+
+def test_attribution_is_conservative():
+    """Per-core request/byte attribution sums exactly to the shared far
+    model's global counters."""
+    cfg = AmuConfig(cores=4, far=_tier_regions(2048 * 8))
+    with RackSession(cfg) as r:
+        rs = r.run("GUPS", **GUPS_KW)
+    assert sum(c.requests for c in rs.cores) == rs.requests
+    assert sum(c.bytes for c in rs.cores) == rs.bytes
+    assert all(c.regions is None for c in rs.cores)
+    assert set(rs.regions) == {"local", "cxl", "xswitch"}
+    assert rs.cycles == pytest.approx(max(c.cycles for c in rs.cores))
+
+
+# =========================================================================
+# Contention accounting: link_busy sums == independently derived totals
+# =========================================================================
+def _expected_link_busy(far):
+    """Σ over regions-on-link of bytes / bandwidth — an independent
+    derivation of what the per-issue ``_charge_link`` calls accumulated."""
+    if far._regions is None:
+        return {"far": far.bytes_moved
+                / far.config.bandwidth_bytes_per_cycle}
+    out = {}
+    for st in far._regions:
+        link = st.region.link or st.region.name
+        out[link] = out.get(link, 0.0) \
+            + st.bytes_moved / st.region.bandwidth_bytes_per_cycle
+    return out
+
+
+@pytest.mark.parametrize("cores", [1, 4])
+@pytest.mark.parametrize("far_kind", ["flat", "tiered"])
+def test_link_busy_matches_region_byte_totals(cores, far_kind):
+    far = _tier_regions(2048 * 8) if far_kind == "tiered" else None
+    cfg = AmuConfig(cores=cores, far=far)
+    with RackSession(cfg) as r:
+        rs = r.run("GUPS", **GUPS_KW)
+        expected = _expected_link_busy(r.far)
+    assert set(rs.link_occupancy) == set(expected)
+    for link, want in expected.items():
+        got = rs.link_occupancy[link]
+        assert sum(got["by_client"].values()) \
+            == pytest.approx(got["busy_cycles"])
+        assert got["busy_cycles"] == pytest.approx(want, rel=1e-9)
+        assert set(got["by_client"]) <= set(range(cores))
+
+
+def test_shared_link_contention_slows_cores_down():
+    """Four cores over one shared switch link: the rack makespan must
+    exceed one core's solo run (the contention is real), yet every core
+    still verifies against its oracle."""
+    solo = AmuConfig(far=_tier_regions(2048 * 8))
+    with RackSession(solo) as r:
+        rs1 = r.run("GUPS", **GUPS_KW)
+    with RackSession(solo.derive(cores=4)) as r:
+        rs4 = r.run("GUPS", **GUPS_KW)
+    assert rs4.verified is True
+    assert rs4.cycles > rs1.cycles
+    occ1 = rs1.link_occupancy["switch"]["occupancy"]
+    occ4 = rs4.link_occupancy["switch"]["occupancy"]
+    assert occ4 > occ1                  # the shared channel got busier
+
+
+# =========================================================================
+# Fairness + aggregates
+# =========================================================================
+def test_jain_fairness_index():
+    assert _jain_fairness([1.0, 1.0, 1.0]) == pytest.approx(1.0)
+    assert _jain_fairness([1.0, 0.0, 0.0]) == pytest.approx(1.0 / 3.0)
+    assert _jain_fairness([]) == 1.0            # degenerate: no cores
+    assert 0.0 < _jain_fairness([3.0, 1.0]) < 1.0
+
+
+def test_homogeneous_rack_is_fair():
+    with RackSession(AmuConfig(cores=4)) as r:
+        rs = r.run("GUPS", **GUPS_KW)
+    assert rs.fairness > 0.9
+    assert rs.aggregate_gups == pytest.approx(
+        sum(c.units for c in rs.cores) / (rs.us * 1e3))
+
+
+def test_mixed_colocation_runs_and_attributes():
+    """Heterogeneous rack: GUPS colocated with the paged-KV serving port
+    over one shared flat far memory — both verify, attribution still sums,
+    and the serving core keeps its request-latency percentiles."""
+    from repro.amu import REGISTRY
+    ports = [REGISTRY.build("GUPS", 0, **GUPS_KW),
+             REGISTRY.build("paged_kv_serve", 1, requests=64, coroutines=16)]
+    with RackSession(AmuConfig(cores=2)) as r:
+        rs = r.run(ports)
+    assert rs.verified is True
+    assert rs.cores[0].workload == "GUPS"
+    assert rs.cores[1].workload == "paged_kv_serve"
+    assert rs.cores[1].req_p99_us is not None
+    assert sum(c.requests for c in rs.cores) == rs.requests
+
+
+# =========================================================================
+# Surface validation
+# =========================================================================
+def test_config_rejects_bad_cores():
+    for bad in (0, -1, 1.5, True, "4"):
+        with pytest.raises((ValueError, TypeError)):
+            AmuConfig(cores=bad)
+
+
+def test_rack_rejects_port_list_length_mismatch():
+    with RackSession(AmuConfig(cores=3)) as r:
+        with pytest.raises(ValueError, match="3 ports|2 ports"):
+            r.run(["GUPS", "GUPS"])
+
+
+def test_rack_rejects_single_prebuilt_port_fanout():
+    from repro.amu import REGISTRY
+    inst = REGISTRY.build("GUPS", 0, **GUPS_KW)
+    with RackSession(AmuConfig(cores=2)) as r:
+        with pytest.raises(ValueError, match="prebuilt"):
+            r.run(inst)
+
+
+def test_rack_rejects_frontier_ports():
+    with RackSession(AmuConfig(cores=2)) as r:
+        with pytest.raises(NotImplementedError, match="frontier"):
+            r.run("BFS")
+
+
+def test_rack_execute_requires_prepare():
+    with RackSession(AmuConfig()) as r:
+        with pytest.raises(RuntimeError, match="prepare"):
+            r.execute()
