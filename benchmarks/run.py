@@ -2,7 +2,8 @@
 engine-driver throughput + roofline. Prints ``name,us_per_call,derived`` CSV.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--engine scalar|batched]
-                                               [--vector] [--smoke] [--list]
+                                               [--vector] [--sanitize]
+                                               [--smoke] [--list]
                                                [--json PATH]
                                                [--profile PATH] [figure ...]
 (no args -> everything; roofline rows require results/dryrun.jsonl;
@@ -10,6 +11,10 @@ Usage: PYTHONPATH=src python -m benchmarks.run [--engine scalar|batched]
 declared capabilities, then exits).
 `--engine` picks the timed-engine implementation behind the AMU configs:
 "batched" (default; vectorized, fast sweeps) or "scalar" (per-event oracle).
+`--sanitize` arms the runtime AMI protocol sanitizer (shadow-state race/
+leak checking; see TESTING.md) on every session the sweeps build — both
+via AMU_SANITIZE=1 for suites that construct their own configs and by
+deriving the shared config. Observation only: results are bit-identical.
 `--vector` runs the AloadVec/AstoreVec (and software-pipelined chase)
 workload ports — every workload has one — and adds the vector axis to the
 `engine` suite. `--smoke` is the CI regression gate: a shrunken `engine`
@@ -23,6 +28,7 @@ Amdahl ceilings are diagnosable straight from a nightly artifact.
 from __future__ import annotations
 
 import json
+import os
 import sys
 
 # CI floors for --smoke (deliberately below the locally-measured numbers so
@@ -116,6 +122,12 @@ def main() -> None:
     if "--vector" in args:
         pf.AMU = pf.AMU.derive(vector=True)
         args.remove("--vector")
+    if "--sanitize" in args:
+        # env var first: suites that build their own AmuConfig (kernel
+        # micro-benchmarks) pick the default up from AMU_SANITIZE
+        os.environ["AMU_SANITIZE"] = "1"
+        pf.AMU = pf.AMU.derive(sanitize=True)
+        args.remove("--sanitize")
     smoke = "--smoke" in args
     if smoke:
         args.remove("--smoke")

@@ -19,6 +19,7 @@ Port bodies use the typed command facade :data:`ctx`
 (``yield ctx.aload(...)`` etc.) instead of hand-rolling command objects.
 """
 from repro.amu.commands import CommandFacade, ctx
+from repro.analysis.sanitizer import AmiProtocolError
 from repro.amu.config import (FREQ_GHZ, LINE, AmuConfig, RetryPolicy,
                               far_config, far_region)
 from repro.amu.registry import (REGISTRY, Port, WorkloadDef,
@@ -45,4 +46,5 @@ __all__ = [
     "UniformJitter", "LognormalLatency", "BimodalTail",
     "FaultModel", "LinkFlap", "RetryPolicy",
     "STATUS_OK", "STATUS_ERROR", "STATUS_TIMED_OUT",
+    "AmiProtocolError",
 ]

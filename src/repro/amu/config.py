@@ -11,6 +11,7 @@ Migration table (old knob -> config field) lives in TESTING.md.
 from __future__ import annotations
 
 import dataclasses
+import os
 from dataclasses import dataclass, replace
 from typing import Optional, Sequence, Union
 
@@ -24,6 +25,13 @@ from repro.core.farmem import (FarMemoryConfig, FarMemoryRegion, FaultModel,
 FREQ_GHZ = 3.0
 #: Baseline cache-line granularity.
 LINE = 64
+
+
+def _env_sanitize() -> bool:
+    """Default for ``AmuConfig.sanitize``: the ``AMU_SANITIZE`` env var,
+    so CI can run an entire suite with the sanitizer attached without
+    threading the flag through every constructor."""
+    return os.environ.get("AMU_SANITIZE", "").lower() not in ("", "0", "false")
 
 
 def far_config(latency_us: float, bandwidth_gbs: float = 64.0,
@@ -137,6 +145,15 @@ class AmuConfig:
     * ``seed`` / ``verify`` — build seed; run the port's numpy oracle at
       the end. In a rack, core 0 builds with ``seed`` verbatim and core
       i > 0 with a child seed spawned from ``SeedSequence(seed)``.
+    * ``sanitize`` — attach the AMI protocol sanitizer
+      (:class:`repro.analysis.AmiSanitizer`) to every engine+scheduler
+      stack of the run (each rack core gets its own): SPM shadow map for
+      DMA/SPM races, rid lifecycle leak report at port exit, lock-order
+      cycle detection. Pure observation — traces/stats/RNG bitstreams are
+      bit-identical with it on or off; violations raise
+      :class:`repro.analysis.AmiProtocolError`. Defaults to the
+      ``AMU_SANITIZE`` environment variable (unset/0/false -> off), so a
+      whole suite can be run sanitized without touching call sites.
     """
     engine: str = "batched"
     scheduler: str = "auto"
@@ -155,6 +172,7 @@ class AmuConfig:
     cores: int = 1
     seed: int = 0
     verify: bool = True
+    sanitize: bool = dataclasses.field(default_factory=lambda: _env_sanitize())
 
     def __post_init__(self) -> None:
         if self.engine not in ENGINE_KINDS:

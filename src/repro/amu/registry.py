@@ -109,6 +109,22 @@ class WorkloadRegistry:
     def vector_names(self) -> List[str]:
         return [n for n, d in self._defs.items() if d.vector]
 
+    def source_files(self) -> List[str]:
+        """Deduplicated source files of every registered builder, for
+        static analysis (``tools/amilint.py``). Builders whose source is
+        unavailable (C extensions, REPL definitions) are skipped."""
+        import inspect
+
+        seen: Dict[str, None] = {}
+        for wd in self._defs.values():
+            try:
+                path = inspect.getsourcefile(wd.build)
+            except TypeError:
+                path = None
+            if path:
+                seen.setdefault(path)
+        return list(seen)
+
     def build(self, name: str, seed: int = 0, *, vector: bool = False,
               llvm_mode: bool = False, pipeline_k: Optional[int] = None,
               **knobs: Any) -> Port:

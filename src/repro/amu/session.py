@@ -189,6 +189,7 @@ class AmuSession:
         self.far: Optional[FarMemoryModel] = None
         self.scheduler = None
         self.instance: Optional[Port] = None
+        self.sanitizer = None
         self._use_vector = False
 
     # ------------------------------------------------------------ lifecycle
@@ -202,6 +203,7 @@ class AmuSession:
         """Drop the execution stack (runs already drain + check the engine;
         closing only releases the references)."""
         self.engine = self.far = self.scheduler = self.instance = None
+        self.sanitizer = None
 
     # ----------------------------------------------------------------- run
     def _build(self, port: Union[str, Port], **build_kw) -> Port:
@@ -233,6 +235,12 @@ class AmuSession:
         sched = SCHEDULER_KINDS[cfg.scheduler_kind](
             eng, cost=cfg.cost_model(), disambiguator=disamb,
             dma_mode=cfg.dma_mode, retry=cfg.retry)
+        eng.port_name = getattr(inst, "name", "")
+        self.sanitizer = None
+        if cfg.sanitize:
+            from repro.analysis.sanitizer import AmiSanitizer
+            self.sanitizer = AmiSanitizer(port=eng.port_name)
+            self.sanitizer.attach(eng, sched)
         self.engine, self.far, self.scheduler, self.instance = \
             eng, far, sched, inst
         return inst
@@ -258,6 +266,8 @@ class AmuSession:
         rows = eng.host_rows - rows0
         eng.drain()
         eng.check_invariants()
+        if self.sanitizer is not None:
+            self.sanitizer.finish()      # leaked-token / held-lock report
         stats = sched.summary()
         return _stats_from_summary(
             stats, cfg, inst, eng, self._use_vector,
@@ -364,6 +374,7 @@ class RackSession:
         self.engines: List = []
         self.schedulers: List = []
         self.instances: List[Port] = []
+        self.sanitizers: List = []
         self._use_vector: List[bool] = []
 
     # ------------------------------------------------------------ lifecycle
@@ -407,6 +418,7 @@ class RackSession:
             timeout_cycles=cfg.retry.timeout_cycles if cfg.retry else 0.0)
         self.far = far
         self.engines, self.schedulers, self.instances = [], [], []
+        self.sanitizers = []
         self._use_vector = []
         for i, port in enumerate(port_list):
             if isinstance(port, str):
@@ -429,6 +441,12 @@ class RackSession:
             sched = SCHEDULER_KINDS[cfg.scheduler_kind](
                 eng, cost=cfg.cost_model(), disambiguator=disamb,
                 dma_mode=cfg.dma_mode, retry=cfg.retry)
+            eng.port_name = getattr(inst, "name", "")
+            if cfg.sanitize:
+                from repro.analysis.sanitizer import AmiSanitizer
+                san = AmiSanitizer(port=eng.port_name, label=f"core{i}")
+                san.attach(eng, sched)
+                self.sanitizers.append(san)
             self.engines.append(eng)
             self.schedulers.append(sched)
             self.instances.append(inst)
@@ -452,6 +470,8 @@ class RackSession:
                 self.instances[i]
             eng.drain()
             eng.check_invariants()
+            if self.sanitizers:
+                self.sanitizers[i].finish()
             stats = dict(sched.summary())
             if n == 1:
                 regions = self.far.region_stats(stats["cycles"])

@@ -1,0 +1,20 @@
+"""Protocol-correctness tooling for the AMI contract.
+
+Two complementary checkers over the same protocol rules (leaked request
+IDs, SPM/DMA races, lock discipline):
+
+* :mod:`repro.analysis.amilint` — static AST + abstract-interpretation
+  lint over port generators (``tools/amilint.py`` is the CLI).
+* :mod:`repro.analysis.sanitizer` — the ``AmuConfig(sanitize=True)``
+  runtime shadow-state checker that wraps any engine/scheduler pair
+  (scalar, batched, epoch-fused, every core of a rack) with pure
+  observation: bit-identical traces/stats/RNG whether on or off.
+"""
+from repro.analysis.amilint import (Finding, lint_file, lint_registry,
+                                    lint_source)
+from repro.analysis.sanitizer import AmiProtocolError, AmiSanitizer
+
+__all__ = [
+    "AmiProtocolError", "AmiSanitizer",
+    "Finding", "lint_source", "lint_file", "lint_registry",
+]

@@ -108,7 +108,6 @@ class CheckpointStore:
 
     def prune(self, keep: int = 3) -> None:
         self.wait()
-        steps = sorted(s for s in (self.latest_step(),) if s is not None)
         all_steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.dir)
                            if d.startswith("step_")
                            and not d.endswith(".tmp"))

@@ -7,7 +7,7 @@ structurally in tests.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------

@@ -38,7 +38,7 @@ from __future__ import annotations
 import heapq
 from collections import deque
 from dataclasses import dataclass
-from typing import Callable, Deque, Dict, Generator, Iterable, Optional
+from typing import Deque, Dict, Generator, Iterable, Optional
 
 import numpy as np
 
@@ -306,6 +306,9 @@ class Scheduler:
         self._sleeping: list = []
         self._sleep_seq = 0
         self._live = 0
+        # AmuConfig(sanitize=True) shadow-state checker (sessions attach
+        # it); None = every hook is skipped, bit-identical to pre-sanitizer
+        self._san = None
 
     # --------------------------------------------------------------- helpers
     def _tick_insts(self, insts: float) -> None:
@@ -359,6 +362,8 @@ class Scheduler:
     def _await_tokens(self, task: Task, toks) -> None:
         """Suspend `task` until every token in `toks` completes (tokens that
         already completed unclaimed are consumed immediately)."""
+        if self._san is not None:
+            self._san.on_await(toks)
         if self._fault:
             self._group_toks[id(task)] = tuple(int(t) for t in toks)
         remaining = 0
@@ -501,6 +506,8 @@ class Scheduler:
             self._ready.append(task)
         elif isinstance(cmd, Acquire):
             assert self.disamb is not None, "no disambiguator configured"
+            if self._san is not None:
+                self._san.on_acquire(id(task), (cmd.addr,))
             t0 = self.t
             self._tick_insts(c.acquire_insts)  # hash + probe (Listing 1 l.7)
             self.t += c.acquire_stall_cycles
@@ -511,6 +518,8 @@ class Scheduler:
             # else: suspended; Release will requeue it
         elif isinstance(cmd, Release):
             assert self.disamb is not None
+            if self._san is not None:
+                self._san.on_release(id(task), (cmd.addr,))
             t0 = self.t
             self._tick_insts(c.release_insts)
             self.t += c.release_stall_cycles
@@ -522,6 +531,8 @@ class Scheduler:
         elif isinstance(cmd, AcquireVec):
             assert self.disamb is not None, "no disambiguator configured"
             addrs = [int(a) for a in cmd.addrs]
+            if self._san is not None:
+                self._san.on_acquire(id(task), addrs, vec=True)
             # one hop for the whole lock set; the per-block cuckoo
             # probe/insert work is charged inside _acquire_from as each
             # block is actually attempted — the prefix up to a conflict
@@ -532,6 +543,8 @@ class Scheduler:
         elif isinstance(cmd, ReleaseVec):
             assert self.disamb is not None
             addrs = [int(a) for a in cmd.addrs]
+            if self._san is not None:
+                self._san.on_release(id(task), addrs)
             t0 = self.t
             self._tick_insts(c.release_insts * len(addrs))
             self.t += c.release_stall_cycles * len(addrs)
@@ -985,6 +998,8 @@ class BatchScheduler(Scheduler):
             self._tok_req.clear()
             self._tok_fstat.clear()
             self._group_toks.clear()
+        if self._san is not None:
+            self._san.on_token_recycle()
 
     def _idle_until_completion(self) -> None:
         """Idle step with wake planning: nothing is runnable, so no new
@@ -1037,6 +1052,8 @@ class BatchScheduler(Scheduler):
         return gid
 
     def _await_tokens(self, task: Task, toks) -> None:
+        if self._san is not None:
+            self._san.on_await(toks)
         if self._fault:
             self._group_toks[id(task)] = tuple(int(t) for t in toks)
         if len(toks) == 1:                       # AwaitRid / awaited scalar

@@ -55,6 +55,16 @@ AMART_ENTRY_BYTES = 16   # §3.2: SPM addr, mem addr, status, impl. bits
 LOAD, STORE = 0, 1
 
 
+def format_race(where: str, what: str, lo: int, hi: int, rid: int,
+                w_lo: int, w_hi: int, port: str = "") -> str:
+    """Shared diagnostic for SPM-vs-in-flight-DMA races: used by the scalar
+    oracle's assertion and by the runtime sanitizer, so the message shape
+    is identical no matter which engine caught the race."""
+    who = f"rid={rid}" + (f" (port {port!r})" if port else "")
+    return (f"{where}{what} [{lo}, {hi}) races in-flight aload "
+            f"{who} -> [{w_lo}, {w_hi}); await it first")
+
+
 @dataclass
 class Request:
     rid: int
@@ -118,6 +128,12 @@ class AsyncEngineBase:
         self.fault_enabled = bool(getattr(self.far, "fault_enabled", False))
         self.fin_status = 0
         self.fin_statuses = None
+        # AmuConfig(sanitize=True) shadow-state checker (see
+        # repro.analysis.sanitizer); None = every hook below is skipped.
+        # `port_name` is a pure diagnostic tag (sessions stamp the running
+        # port's name) used only in race/leak messages.
+        self.sanitizer = None
+        self.port_name = ""
 
     # ----------------------------------------------------------------- AMI
     def aload(self, spm_addr: int, mem_addr: int, size: Optional[int] = None) -> int:
@@ -233,10 +249,14 @@ class AsyncEngineBase:
         else:
             arr = np.frombuffer(data, np.uint8)
         self._check_bounds(spm_addr, arr.size, "spm_write")
+        if self.sanitizer is not None:
+            self.sanitizer.on_spm_access(spm_addr, arr.size, "spm_write")
         self.spm[spm_addr:spm_addr + arr.size] = arr
 
     def spm_read(self, spm_addr: int, size: int) -> np.ndarray:
         self._check_bounds(spm_addr, size, "spm_read")
+        if self.sanitizer is not None:
+            self.sanitizer.on_spm_access(spm_addr, size, "spm_read")
         view = self.spm[spm_addr:spm_addr + size]
         view.flags.writeable = False
         return view
@@ -319,6 +339,8 @@ class AsyncMemoryEngine(AsyncEngineBase):
         self.now = max(self.now, now)
         while self._pending and self._pending[0][0] <= self.now:
             _, rid = heapq.heappop(self._pending)
+            if self.sanitizer is not None:
+                self.sanitizer.on_retire((rid,))
             req = self.amart[rid]
             if req.status != 0:
                 # failed request: no data moved (a LOAD leaves the SPM slot
@@ -350,10 +372,9 @@ class AsyncMemoryEngine(AsyncEngineBase):
             req = self.amart[rid]
             if (req.kind == LOAD and spm_addr < req.spm_addr + req.size
                     and req.spm_addr < end):
-                raise AssertionError(
-                    f"{what} [{spm_addr}, {end}) races in-flight aload "
-                    f"rid={rid} -> [{req.spm_addr}, "
-                    f"{req.spm_addr + req.size}); await it first")
+                raise AssertionError(format_race(
+                    self._where, what, spm_addr, end, rid,
+                    req.spm_addr, req.spm_addr + req.size, self.port_name))
 
     def spm_write(self, spm_addr: int, data) -> None:
         size = data.nbytes if isinstance(data, np.ndarray) else len(data)
@@ -402,6 +423,8 @@ class AsyncMemoryEngine(AsyncEngineBase):
             req.status = self.far.last_status
         self.amart[rid] = req
         heapq.heappush(self._pending, (req.done_time, rid))
+        if self.sanitizer is not None:
+            self.sanitizer.on_issue(kind, rid, spm_addr, size)
         self.stats["aload" if kind == LOAD else "astore"] += 1
         if self.trace is not None:
             self.trace.append(("issue", kind, rid, spm_addr, mem_addr, size,
@@ -577,6 +600,8 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
             self._move_data(fin[self._status[fin] == 0])
         else:
             self._move_data(fin)
+        if self.sanitizer is not None:
+            self.sanitizer.on_retire(fin)
         self._finished.push_many(fin)
         keep = rids[~due]
         self._pend[:keep.size] = keep
@@ -813,6 +838,8 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         if self.fault_enabled:
             self._status[rid] = self.far.last_status
         self._set_request(rid, kind, spm_addr, mem_addr, size, done)
+        if self.sanitizer is not None:
+            self.sanitizer.on_issue(kind, rid, spm_addr, size)
         self.stats["aload" if kind == LOAD else "astore"] += 1
         if self.trace is not None:
             self.trace.append(("issue", kind, rid, spm_addr, mem_addr, size,
@@ -937,6 +964,8 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
         self._pend_n += k
         if k:
             self._pend_min = min(self._pend_min, float(done.min()))
+        if self.sanitizer is not None:
+            self.sanitizer.on_issue_batch(kind, ok, spm_addrs[:k], sizes[:k])
         self.stats["aload" if kind == LOAD else "astore"] += k
         if self.trace is not None:
             for i in range(k):
@@ -1018,6 +1047,10 @@ class BatchedAsyncMemoryEngine(AsyncEngineBase):
             rids[:k] = ok
         if kind == STORE:
             self._capture_stores(ok, k, spm_addrs, sizes, g0)
+        if self.sanitizer is not None:
+            # staged requests are in flight from staging time: allocation
+            # and store capture already happened against live state
+            self.sanitizer.on_issue_batch(kind, ok, spm_addrs[:k], sizes[:k])
         self.stats["aload" if kind == LOAD else "astore"] += k
         self._ep_segs.append((kind, float(now), ok, spm_addrs[:k],
                               mem_addrs[:k], sizes[:k]))

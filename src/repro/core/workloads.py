@@ -24,13 +24,12 @@ chase depth, granularity.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, Iterable, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Callable, Iterable, List, Optional
 
 import numpy as np
 
 from repro.amu.commands import ctx
-from repro.amu.registry import REGISTRY
 from repro.amu.registry import workload as _workload
 from repro.configs.base import EngineConfig
 from repro.core.engine import AMART_ENTRY_BYTES
@@ -1119,7 +1118,6 @@ def build_hpcg(seed: int = 0, rows: int = 2048, nnz_per_row: int = 27,
     vals = rng.standard_normal((rows, nnz_per_row))
     x = rng.standard_normal(rows)
     # far layout: [row data: per row 27*(i32 col + f64 val) packed | x | y]
-    row_bytes = nnz_per_row * 12
     row_pad = 352  # 27*12=324 -> pad to 352 for alignment
     packed = np.zeros(rows * row_pad, np.uint8)
     for r in range(rows):

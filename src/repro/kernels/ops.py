@@ -8,8 +8,6 @@ noted in DESIGN.md), so the kernels are validated standalone against ref.py.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

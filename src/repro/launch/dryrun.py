@@ -8,14 +8,13 @@ import re  # noqa: E402
 import sys  # noqa: E402
 import time  # noqa: E402
 from functools import partial  # noqa: E402
-from typing import Any, Dict, Optional  # noqa: E402
+from typing import Any, Dict  # noqa: E402
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
 
 from repro import configs  # noqa: E402
-from repro.configs.base import KIND_DECODE, KIND_PREFILL, KIND_TRAIN  # noqa: E402
+from repro.configs.base import KIND_PREFILL, KIND_TRAIN  # noqa: E402
 from repro.data.pipeline import input_specs  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch import hlo_analysis  # noqa: E402
@@ -155,7 +154,6 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     cfg = configs.get_config(arch)
     shape = configs.get_shape(shape_name)
     tokens = shape.tokens_per_step
-    n_params = cfg.param_count()
     n_active = cfg.active_param_count()
     mult = 6 if shape.kind == KIND_TRAIN else 2
     model_flops = mult * n_active * tokens

@@ -9,15 +9,13 @@ from __future__ import annotations
 
 import argparse
 import time
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
 from repro.checkpoint.store import CheckpointStore
-from repro.data.pipeline import PrefetchingLoader, synthetic_batch
+from repro.data.pipeline import synthetic_batch
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.models import lm
 from repro.optim import adamw

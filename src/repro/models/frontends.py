@@ -3,9 +3,8 @@ the transformer backbone only; the frontend provides precomputed frame/patch
 embeddings). Only the projection into d_model is a real parameter."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig

@@ -14,8 +14,6 @@ kind-specific cache (attention KV / RG-LRU h+conv / RWKV6 state).
 """
 from __future__ import annotations
 
-import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax

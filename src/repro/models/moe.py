@@ -16,12 +16,12 @@ The router adds the standard auxiliary load-balancing loss.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, MoEConfig
+from repro.configs.base import ModelConfig
 from repro.models.blocks import _dense_init
 
 Params = Dict[str, Any]

@@ -23,7 +23,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np

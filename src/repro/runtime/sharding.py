@@ -25,7 +25,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import (KIND_TRAIN, ModelConfig, ParallelConfig,
+from repro.configs.base import (ModelConfig, ParallelConfig,
                                 ShapeConfig)
 
 Params = Any

@@ -4,14 +4,13 @@ loop, and the multi-pod dry-run (which lowers exactly these functions).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.configs.base import ModelConfig, ParallelConfig, RunConfig, ShapeConfig
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
 from repro.models import lm
 from repro.optim import adamw
 from repro.runtime import sharding as shd
@@ -99,7 +98,6 @@ def jit_train_step(cfg: ModelConfig, par: ParallelConfig, mesh: Mesh,
     p_sh = shd.params_shardings(cfg, par, mesh, params)
     o_sh = shd.opt_state_shardings(cfg, par, mesh, params)
     b_sh = shd.batch_shardings(cfg, par, mesh, shape)
-    metrics_sh = NamedSharding(mesh, P())
     step = make_train_step(cfg, par, opt_cfg, use_kernels, moe_mode)
     return jax.jit(
         step,

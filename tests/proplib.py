@@ -12,7 +12,7 @@ import functools
 import inspect
 
 try:
-    from hypothesis import given, settings
+    from hypothesis import given, settings  # noqa: F401 (re-export)
     from hypothesis import strategies as st
     HAVE_HYPOTHESIS = True
 except ImportError:                                    # pragma: no cover

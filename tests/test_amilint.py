@@ -1,0 +1,322 @@
+"""Static AMI protocol lint (amilint): real ports stay clean, seeded
+violations in fixture sources trip the right rule, suppression works,
+and the CLI round-trips text + JSON."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.amu import REGISTRY
+from repro.analysis import lint_registry, lint_source
+from repro.analysis.amilint import FACADE_METHODS, lint_file, render
+from repro.amu.commands import CommandFacade
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _lint(src):
+    return lint_source(textwrap.dedent(src), "<fixture>")
+
+
+def _rules(src):
+    return [f.rule for f in _lint(src)]
+
+
+# ======================================================================
+# real in-repo ports are clean
+# ======================================================================
+
+def test_registry_source_files_found():
+    files = REGISTRY.source_files()
+    assert any(p.endswith("workloads.py") for p in files)
+    assert any(p.endswith("serving.py") for p in files)
+
+
+def test_registry_ports_clean():
+    findings = lint_registry(REGISTRY)
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_example_port_clean():
+    path = os.path.join(REPO, "examples", "amu_workload.py")
+    findings = lint_file(path)
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_facade_methods_in_sync():
+    """amilint's facade list must track the real CommandFacade surface."""
+    real = {n for n in dir(CommandFacade)
+            if not n.startswith("_")
+            and isinstance(CommandFacade.__dict__.get(n), staticmethod)}
+    assert real == FACADE_METHODS
+
+
+# ======================================================================
+# AMI001 — leaked request IDs
+# ======================================================================
+
+def test_leak_discarded_token():
+    assert _rules("""
+        def task(ctx):
+            yield ctx.aload(0, 64, 8, wait=False)
+            yield ctx.cost(1)
+    """) == ["AMI001"]
+
+
+def test_leak_never_awaited():
+    assert _rules("""
+        def task(ctx):
+            rid = yield ctx.aload(0, 64, 8, wait=False)
+            yield ctx.cost(1)
+    """) == ["AMI001"]
+
+
+def test_leak_conditional_await():
+    assert _rules("""
+        def task(ctx, flag):
+            rid = yield ctx.aload(0, 64, 8, wait=False)
+            if flag:
+                yield ctx.await_rid(rid)
+    """) == ["AMI001"]
+
+
+def test_no_leak_direct_await():
+    assert _rules("""
+        def task(ctx):
+            rid = yield ctx.aload(0, 64, 8, wait=False)
+            yield ctx.await_rid(rid)
+    """) == []
+
+
+def test_no_leak_via_list():
+    """Token flowing through a container into await_rids is tracked."""
+    assert _rules("""
+        def task(ctx):
+            rids = []
+            for i in range(4):
+                r = yield ctx.aload(i * 8, 64 + i * 8, 8, wait=False)
+                rids.append(r)
+            yield ctx.await_rids(rids)
+    """) == []
+
+
+def test_no_leak_raw_vec_default_nowait():
+    """Raw AloadVec defaults wait=False (unlike the facade) — an
+    un-awaited raw vec issue leaks."""
+    assert _rules("""
+        def task(ctx):
+            yield AloadVec(slots, addrs, 8)
+            yield ctx.cost(1)
+    """) == ["AMI001"]
+
+
+# ======================================================================
+# AMI002 — SPM races against in-flight loads
+# ======================================================================
+
+def test_race_read_overlap():
+    assert _rules("""
+        def task(ctx):
+            rid = yield ctx.aload(0, 64, 8, wait=False)
+            v = yield ctx.spm_read(0, 8)
+            yield ctx.await_rid(rid)
+    """) == ["AMI002"]
+
+
+def test_race_cleared_by_await():
+    assert _rules("""
+        def task(ctx):
+            rid = yield ctx.aload(0, 64, 8, wait=False)
+            yield ctx.await_rid(rid)
+            v = yield ctx.spm_read(0, 8)
+    """) == []
+
+
+def test_race_disjoint_windows():
+    assert _rules("""
+        def task(ctx):
+            rid = yield ctx.aload(0, 64, 8, wait=False)
+            v = yield ctx.spm_read(16, 8)
+            yield ctx.await_rid(rid)
+    """) == []
+
+
+def test_race_symbolic_base():
+    """slot+0 load vs slot+4 write: same base, overlapping constants."""
+    assert _rules("""
+        def task(ctx, slot):
+            rid = yield ctx.aload(slot, 64, 8, wait=False)
+            yield ctx.spm_write(slot + 4, b"xx")
+            yield ctx.await_rid(rid)
+    """) == ["AMI002"]
+
+
+def test_race_different_bases_quiet():
+    """Different symbolic bases are incomparable — no finding."""
+    assert _rules("""
+        def task(ctx, a, b):
+            rid = yield ctx.aload(a, 64, 8, wait=False)
+            v = yield ctx.spm_read(b, 8)
+            yield ctx.await_rid(rid)
+    """) == []
+
+
+def test_race_wait_true_never_opens_window():
+    assert _rules("""
+        def task(ctx):
+            yield ctx.aload(0, 64, 8)
+            v = yield ctx.spm_read(0, 8)
+    """) == []
+
+
+# ======================================================================
+# AMI003 / AMI004 — lock matching and ordering
+# ======================================================================
+
+def test_acquire_without_release():
+    assert _rules("""
+        def task(ctx):
+            yield ctx.acquire(64)
+            yield ctx.cost(1)
+    """) == ["AMI003"]
+
+
+def test_release_without_acquire():
+    assert _rules("""
+        def task(ctx):
+            yield ctx.release(64)
+    """) == ["AMI003"]
+
+
+def test_lock_order_reversed():
+    assert _rules("""
+        def task(ctx):
+            yield ctx.acquire(128)
+            yield ctx.acquire(64)
+            yield ctx.release(64)
+            yield ctx.release(128)
+    """) == ["AMI004"]
+
+
+def test_lock_order_duplicate():
+    assert _rules("""
+        def task(ctx):
+            yield ctx.acquire(64)
+            yield ctx.acquire(64)
+            yield ctx.release(64)
+            yield ctx.release(64)
+    """) == ["AMI004"]
+
+
+def test_lock_order_ascending_ok():
+    assert _rules("""
+        def task(ctx):
+            yield ctx.acquire(64)
+            yield ctx.acquire(128)
+            yield ctx.release(64)
+            yield ctx.release(128)
+    """) == []
+
+
+def test_acquire_vec_nonascending():
+    assert _rules("""
+        def task(ctx):
+            yield ctx.acquire_vec([128, 64])
+            yield ctx.release_vec([128, 64])
+    """) == ["AMI004"]
+
+
+def test_acquire_vec_unpaired():
+    assert _rules("""
+        def task(ctx):
+            yield ctx.acquire_vec([64, 128])
+            yield ctx.cost(1)
+    """) == ["AMI003"]
+
+
+# ======================================================================
+# AMI005 / AMI006 — non-command yields, engine bypass
+# ======================================================================
+
+@pytest.mark.parametrize("body,why", [
+    ("yield 42", "constant"),
+    ("yield", "bare"),
+    ("yield ctx.frobnicate(1)", "unknown facade method"),
+])
+def test_non_command_yield(body, why):
+    assert _rules(f"""
+        def task(ctx):
+            {body}
+            yield ctx.cost(1)
+    """) == ["AMI005"], why
+
+
+def test_engine_bypass():
+    assert _rules("""
+        def task(ctx, eng):
+            eng.spm_write(0, b"xx")
+            yield ctx.cost(1)
+    """) == ["AMI006"]
+
+
+def test_non_port_function_ignored():
+    """Functions that never yield commands are out of scope entirely."""
+    assert _rules("""
+        def helper(eng):
+            return eng.spm_read(0, 8)
+    """) == []
+
+
+# ======================================================================
+# suppression + rendering + CLI
+# ======================================================================
+
+def test_suppression_targeted():
+    assert _rules("""
+        def task(ctx):
+            yield ctx.aload(0, 64, 8, wait=False)  # amilint: ignore[AMI001]
+            yield ctx.cost(1)
+    """) == []
+
+
+def test_suppression_wrong_rule_keeps_finding():
+    assert _rules("""
+        def task(ctx):
+            yield ctx.aload(0, 64, 8, wait=False)  # amilint: ignore[AMI002]
+            yield ctx.cost(1)
+    """) == ["AMI001"]
+
+
+def test_render_json():
+    findings = _lint("""
+        def task(ctx):
+            yield ctx.acquire(64)
+            yield ctx.cost(1)
+    """)
+    blob = json.loads(render(findings, as_json=True))
+    assert blob["count"] == 1
+    assert blob["findings"][0]["rule"] == "AMI003"
+    assert blob["findings"][0]["func"] == "task"
+
+
+def test_cli_clean_and_dirty(tmp_path):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src"))
+    tool = os.path.join(REPO, "tools", "amilint.py")
+    ex = os.path.join(REPO, "examples", "amu_workload.py")
+    r = subprocess.run([sys.executable, tool, "--registry", ex],
+                       capture_output=True, text=True, env=env)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "0 findings" in r.stdout
+
+    bad = tmp_path / "bad_port.py"
+    bad.write_text("def task(ctx):\n"
+                   "    yield ctx.aload(0, 64, 8, wait=False)\n"
+                   "    yield ctx.cost(1)\n")
+    r = subprocess.run([sys.executable, tool, "--json", str(bad)],
+                       capture_output=True, text=True, env=env)
+    assert r.returncode == 1
+    assert json.loads(r.stdout)["findings"][0]["rule"] == "AMI001"

@@ -3,7 +3,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro import configs
 from repro.launch import hlo_analysis as ha
@@ -50,7 +49,6 @@ def test_shape_bytes_parsing():
 # ---------------------------------------------------------- sharding rules
 @pytest.fixture(scope="module")
 def mesh8():
-    import os
     if jax.device_count() < 8:
         pytest.skip("needs --xla_force_host_platform_device_count>=8 "
                     "(run via tests/test_system.py subprocess instead)")

@@ -8,8 +8,8 @@ import pytest
 from proplib import given, settings, st
 
 from repro.configs.base import EngineConfig
-from repro.core.coroutines import (Aload, AloadNoWait, Astore, AwaitRid, Cost,
-                                   Scheduler, SpmRead, SpmWrite)
+from repro.core.coroutines import (Aload, AloadNoWait, AwaitRid, Cost,
+                                   Scheduler, SpmRead)
 from repro.core.disambiguation import CuckooAddressSet
 from repro.core.engine import AsyncMemoryEngine, SpmOverflow
 from repro.core.farmem import FarMemoryConfig, FarMemoryModel

@@ -27,7 +27,7 @@ from repro.core.coroutines import (AloadNoWait, AloadVec, Aload, Astore,
                                    AstoreNoWait, AstoreVec, AwaitRids,
                                    BatchScheduler, Cost, EpochScheduler, Now,
                                    SpmRead, SpmWrite, WaitUntil)
-from repro.core.engine import BatchedAsyncMemoryEngine, make_engine
+from repro.core.engine import BatchedAsyncMemoryEngine
 from repro.core.farmem import (BimodalTail, FarMemoryConfig, FarMemoryModel,
                                hostjit)
 

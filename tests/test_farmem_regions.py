@@ -27,7 +27,6 @@ from repro.amu import (REGISTRY, AmuConfig, AmuSession, BimodalTail,
                        FarMemoryConfig, FarMemoryRegion, LognormalLatency,
                        UniformJitter, far_region)
 from repro.core.coroutines import DeadlockError, Scheduler
-from repro.core.disambiguation import CuckooAddressSet
 from repro.core.engine import make_engine
 from repro.core.farmem import FarMemoryModel
 

@@ -1,6 +1,5 @@
 """Per-kernel correctness: shape/dtype sweeps against the ref.py oracles,
 all in interpret mode (CPU validates the TPU kernel bodies)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,0 +1,210 @@
+"""Runtime AMI sanitizer: neutrality (bit-identical off/on) + detection.
+
+Two halves mirror the sanitizer's contract:
+
+* ``sanitize=True`` is pure observation — traces, stats, and the far-memory
+  RNG bitstream must be bit-identical with it off, on every engine x
+  scheduler combination and on the multi-core rack.
+* each runtime violation class (leaked rid, racing spm_read, reversed
+  Acquire order, duplicate acquire, non-ascending AcquireVec) raises an
+  :class:`AmiProtocolError` diagnostic naming the port, on the batched
+  AND epoch-fused planes (the scalar oracle catches the SPM race with its
+  own assertion in the same shared message format).
+"""
+import numpy as np
+import pytest
+
+from repro.amu import AmuConfig, AmuSession, ctx
+from repro.amu.session import RackSession
+from repro.analysis import AmiProtocolError
+from repro.core.workloads import WorkloadInstance, _cfg
+
+from proplib import given, settings, st
+
+COMBOS = [("scalar", "scalar"), ("batched", "batched"), ("batched", "fused")]
+
+
+def _run(engine, sched, name, sanitize, **kw):
+    cfg = AmuConfig(engine=engine, scheduler=sched, sanitize=sanitize, **kw)
+    s = AmuSession(cfg)
+    stats = s.run(name, record_trace=True)
+    trace = list(s.engine.trace)
+    rng = s.far._rng.bit_generator.state
+    s.close()
+    return trace, stats.to_dict(), rng
+
+
+# ======================================================================
+# neutrality: sanitize=True must not perturb anything observable
+# ======================================================================
+
+@pytest.mark.parametrize("engine,sched", COMBOS)
+@pytest.mark.parametrize("name", ["GUPS", "HJ", "SL"])
+def test_sanitize_neutral(engine, sched, name):
+    t0, s0, r0 = _run(engine, sched, name, sanitize=False)
+    t1, s1, r1 = _run(engine, sched, name, sanitize=True)
+    assert t0 == t1, "sanitize=True changed the issue/fin trace"
+    assert s0 == s1, "sanitize=True changed the run stats"
+    assert r0 == r1, "sanitize=True consumed far-memory RNG draws"
+
+
+@pytest.mark.parametrize("name", ["GUPS", "SL"])
+def test_sanitize_neutral_vector(name):
+    t0, s0, r0 = _run("batched", "fused", name, sanitize=False, vector=True)
+    t1, s1, r1 = _run("batched", "fused", name, sanitize=True, vector=True)
+    assert (t0, s0, r0) == (t1, s1, r1)
+
+
+def test_sanitize_neutral_rack():
+    out = {}
+    for san in (False, True):
+        cfg = AmuConfig(engine="batched", scheduler="fused", cores=4,
+                        sanitize=san)
+        rs = RackSession(cfg)
+        stats = rs.run("GUPS")
+        out[san] = ([c.to_dict() for c in stats.cores],
+                    rs.far._rng.bit_generator.state)
+        rs.close()
+    assert out[False] == out[True]
+
+
+# ======================================================================
+# detection fixtures
+# ======================================================================
+
+def _inst(tasks, disamb=False):
+    mem = np.zeros(4096, np.uint8)
+    return WorkloadInstance("FIXTURE", mem, tasks, 1, _cfg(8),
+                            lambda m: True, disambiguation=disamb)
+
+
+def _leaked():
+    yield ctx.aload(0, 64, 8, wait=False)
+    yield ctx.cost(1)
+
+
+def _racing():
+    rid = yield ctx.aload(0, 64, 8, wait=False)
+    _ = yield ctx.spm_read(0, 8)
+    yield ctx.await_rid(rid)
+
+
+def _locker(a, b):
+    yield ctx.acquire(a)
+    yield ctx.acquire(b)
+    yield ctx.release(b)
+    yield ctx.release(a)
+
+
+def _dup_acquire():
+    yield ctx.acquire(64)
+    yield ctx.acquire(64)
+    yield ctx.release(64)
+    yield ctx.release(64)
+
+
+def _vec_bad():
+    yield ctx.acquire_vec([128, 64])
+    yield ctx.release_vec([128, 64])
+
+
+def _catch(engine, sched, inst, match):
+    cfg = AmuConfig(engine=engine, scheduler=sched, sanitize=True)
+    with pytest.raises(AssertionError, match=match):
+        AmuSession(cfg).run(inst)
+
+
+@pytest.mark.parametrize("engine,sched", COMBOS)
+def test_detect_leaked_rid(engine, sched):
+    _catch(engine, sched, _inst([_leaked()]),
+           match="leaked 1 request token")
+
+
+@pytest.mark.parametrize("engine,sched", COMBOS)
+def test_detect_racing_spm_read(engine, sched):
+    # scalar: the oracle's own overlap assert fires first — same shared
+    # format_race message, so one match covers all three planes
+    _catch(engine, sched, _inst([_racing()]),
+           match=r"races in-flight aload rid=1 \(port 'FIXTURE'\)")
+
+
+@pytest.mark.parametrize("engine,sched", COMBOS)
+def test_detect_reversed_lock_order(engine, sched):
+    _catch(engine, sched,
+           _inst([_locker(64, 128), _locker(128, 64)], disamb=True),
+           match="lock-order cycle")
+
+
+@pytest.mark.parametrize("engine,sched", COMBOS)
+def test_detect_duplicate_acquire(engine, sched):
+    _catch(engine, sched, _inst([_dup_acquire()], disamb=True),
+           match="self-deadlock")
+
+
+@pytest.mark.parametrize("engine,sched", COMBOS)
+def test_detect_nonascending_acquire_vec(engine, sched):
+    _catch(engine, sched, _inst([_vec_bad()], disamb=True),
+           match="strictly ascending and distinct")
+
+
+@pytest.mark.parametrize("engine,sched", COMBOS)
+def test_detect_release_without_acquire(engine, sched):
+    def t():
+        yield ctx.release(64)
+    _catch(engine, sched, _inst([t()], disamb=True),
+           match="does not hold")
+
+
+@pytest.mark.parametrize("engine,sched", COMBOS)
+def test_detect_exit_holding_lock(engine, sched):
+    def t():
+        yield ctx.acquire(64)
+        yield ctx.cost(1)
+    _catch(engine, sched, _inst([t()], disamb=True),
+           match="Acquire without Release")
+
+
+def test_violation_error_is_assertion_subclass():
+    assert issubclass(AmiProtocolError, AssertionError)
+
+
+def test_env_var_default(monkeypatch):
+    monkeypatch.setenv("AMU_SANITIZE", "1")
+    assert AmuConfig().sanitize is True
+    monkeypatch.setenv("AMU_SANITIZE", "0")
+    assert AmuConfig().sanitize is False
+    monkeypatch.delenv("AMU_SANITIZE")
+    assert AmuConfig().sanitize is False
+
+
+# ======================================================================
+# property: clean random GUPS-like ports never trip the sanitizer, and
+# leaking any single token always trips it
+# ======================================================================
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(min_value=1, max_value=16),
+       leak_at=st.integers(min_value=-1, max_value=15),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_prop_leak_detection(n, leak_at, seed):
+    """A port issuing n wait=False loads and awaiting all but (maybe) one:
+    sanitize=True passes iff nothing leaked."""
+    leak = 0 <= leak_at < n
+
+    def port():
+        rids = []
+        for i in range(n):
+            r = yield ctx.aload(i * 8, 64 + i * 8, 8, wait=False)
+            if i != leak_at:
+                rids.append(r)
+        yield ctx.await_rids(rids)
+
+    cfg = AmuConfig(engine="batched", scheduler="fused", sanitize=True,
+                    seed=seed)
+    sess = AmuSession(cfg)
+    if leak:
+        with pytest.raises(AmiProtocolError, match="leaked 1 request"):
+            sess.run(_inst([port()]))
+    else:
+        sess.run(_inst([port()]))
+    sess.close()

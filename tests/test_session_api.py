@@ -28,8 +28,7 @@ from repro.core.coroutines import (Acquire, AcquireVec, Aload, AloadVec,
                                    DeadlockError, Release, ReleaseVec,
                                    Scheduler, SpmRead, SpmWrite)
 from repro.core.disambiguation import CuckooAddressSet
-from repro.core.engine import (AsyncMemoryEngine, BatchedAsyncMemoryEngine,
-                               make_engine)
+from repro.core.engine import BatchedAsyncMemoryEngine, make_engine
 from repro.core.farmem import FarMemoryConfig, FarMemoryModel
 from repro.core.workloads import WorkloadInstance, build_gups
 

@@ -2,7 +2,6 @@
 roundtrip + elastic restore, fault-tolerant supervisor, straggler monitor,
 gradient compression."""
 import os
-import time
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +13,7 @@ from repro.checkpoint.store import CheckpointStore
 from repro.data.pipeline import PrefetchingLoader, input_specs, synthetic_batch
 from repro.models import lm
 from repro.optim import adamw
-from repro.runtime.ft import SimulatedFailure, StepMonitor, TrainSupervisor
+from repro.runtime.ft import StepMonitor, TrainSupervisor
 from repro.runtime import steps as steps_mod
 
 

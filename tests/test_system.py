@@ -4,7 +4,6 @@ mesh (subprocess with forced host device count), dry-run smoke, serve loop.
 These run the REAL jit path with in/out shardings on 8 fake CPU devices —
 the same code path the 256/512-chip dry-run exercises.
 """
-import json
 import os
 import subprocess
 import sys

@@ -24,8 +24,7 @@ from repro.configs.base import EngineConfig
 from repro.core.coroutines import (Aload, AloadNoWait, AwaitRid,
                                    BatchScheduler, Scheduler, SpmRead,
                                    SpmWrite)
-from repro.core.engine import (AsyncMemoryEngine, BatchedAsyncMemoryEngine,
-                               SpmOverflow, make_engine)
+from repro.core.engine import SpmOverflow, make_engine
 from repro.core.farmem import FarMemoryConfig, FarMemoryModel, InstantMemory
 
 ENGINES = ["scalar", "batched"]

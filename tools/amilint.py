@@ -1,0 +1,52 @@
+#!/usr/bin/env python3
+"""amilint CLI — static AMI protocol lint for port generators.
+
+Usage::
+
+    python tools/amilint.py --registry            # all @workload ports
+    python tools/amilint.py examples/amu_workload.py src/repro/core/*.py
+    python tools/amilint.py --registry --json examples/amu_workload.py
+
+Exit status is 1 when any finding survives suppression, 0 otherwise.
+Suppress a false positive on its line with ``# amilint: ignore`` or
+``# amilint: ignore[AMI002]``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+from repro.analysis.amilint import lint_file, lint_registry, render  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="amilint", description=__doc__)
+    ap.add_argument("files", nargs="*", help="Python files to lint")
+    ap.add_argument("--registry", action="store_true",
+                    help="also lint the source of every registered "
+                         "@workload builder")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit findings as JSON")
+    args = ap.parse_args(argv)
+    if not args.files and not args.registry:
+        ap.error("nothing to lint: pass files and/or --registry")
+
+    findings = []
+    if args.registry:
+        findings.extend(lint_registry())
+    linted = {f.file for f in findings}
+    for path in args.files:
+        if path not in linted:
+            findings.extend(lint_file(path))
+    print(render(findings, as_json=args.as_json))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

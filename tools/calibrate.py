@@ -1,6 +1,5 @@
 """Calibration harness: our model vs the paper's Table 4 / headline targets."""
 import sys
-import numpy as np
 sys.path.insert(0, "src")
 from repro.core import simulator as sim
 
